@@ -1,0 +1,160 @@
+"""Per-op collective/traffic breakdown of a dry-run cell (the 'profile' of
+the CPU-only perf loop). Usage:
+
+  PYTHONPATH=src python -m benchmarks.collective_breakdown \
+      --arch gemma3_27b --shape train_4k [--opt k=v,...] [--top 15] [--kind coll|mem]
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse  # noqa: E402
+from collections import defaultdict  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro import perf_flags  # noqa: E402
+from repro.configs import SHAPES, get_config  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.steps import (  # noqa: E402
+    build_decode_step,
+    build_prefill_step,
+    build_train_step,
+)
+from repro.models import build_model  # noqa: E402
+from repro.roofline import hlo_cost as H  # noqa: E402
+from repro.sharding.specs import make_topology, use_topology  # noqa: E402
+
+
+def lower_cell(arch: str, shape_name: str):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh()
+    topo = make_topology(mesh)
+    api = build_model(cfg)
+    with use_topology(topo):
+        if shape.kind == "train":
+            step, shapes, _ = build_train_step(api, topo, shape)
+            return step.lower(*shapes[:3]).compile(), topo
+        if shape.kind == "prefill":
+            step, shapes, _ = build_prefill_step(api, topo, shape)
+            return step.lower(*shapes).compile(), topo
+        step, (ps, bs), _ = build_decode_step(api, topo, shape)
+        return step.lower(ps, bs["token"], bs["cache"], bs["cache_len"]).compile(), topo
+
+
+def breakdown(compiled, topo, kind: str, top: int):
+    comps, entry = H.parse_module(compiled.as_text())
+    agg = defaultdict(lambda: [0.0, 0.0])  # key -> [bytes, count]
+
+    def walk(comp, mult):
+        for op in comp.ops:
+            if op.kind == "while":
+                body = H._called(op.attrs, "body")
+                cond = H._called(op.attrs, "condition")
+                trip = H._trip_count(comps[cond], comps) if cond in comps else 1
+                if body in comps:
+                    walk(comps[body], mult * trip)
+                continue
+            if op.kind in ("fusion", "call"):
+                callee = H._called(op.attrs, "calls") or H._called(op.attrs, "to_apply")
+                if callee and callee in comps:
+                    walk_fused(comps[callee], mult)
+            if kind == "coll":
+                continue
+            b = H._traffic_bytes(op, comp, comps)
+            if b > 0:
+                key = (op.kind, op.result_type[:44], "")
+                agg[key][0] += b * mult
+                agg[key][1] += mult
+
+    def walk_fused(comp, mult):
+        for op in comp.ops:
+            is_coll = None
+            for c in H._COLLECTIVES:
+                if op.kind == c or op.kind == c + "-start":
+                    is_coll = c
+            if is_coll:
+                nbytes = H._collective_payload_bytes(op, comp, comps)
+                g = H._group_size(op.attrs, topo.model_size)
+                meta = ""
+                if "metadata" in op.attrs:
+                    i = op.attrs.find("op_name=")
+                    meta = op.attrs[i + 9 : i + 69] if i >= 0 else ""
+                key = (is_coll, op.result_type[:44], meta)
+                frac = (g - 1) / g if g > 1 else 0
+                wire = 2 * nbytes * frac if is_coll == "all-reduce" else (
+                    nbytes if is_coll == "collective-permute" else nbytes * frac
+                )
+                agg[key][0] += wire * mult
+                agg[key][1] += mult
+            if op.kind in ("fusion", "call"):
+                callee = H._called(op.attrs, "calls") or H._called(op.attrs, "to_apply")
+                if callee and callee in comps:
+                    walk_fused(comps[callee], mult)
+
+    if kind == "coll":
+        # collectives appear at computation scope too
+        def walk_coll(comp, mult):
+            for op in comp.ops:
+                if op.kind == "while":
+                    body = H._called(op.attrs, "body")
+                    cond = H._called(op.attrs, "condition")
+                    trip = H._trip_count(comps[cond], comps) if cond in comps else 1
+                    if body in comps:
+                        walk_coll(comps[body], mult * trip)
+                    continue
+                walk_fused_one(op, comp, mult)
+
+        def walk_fused_one(op, comp, mult):
+            is_coll = None
+            for c in H._COLLECTIVES:
+                if op.kind == c or op.kind == c + "-start":
+                    is_coll = c
+            if is_coll:
+                nbytes = H._collective_payload_bytes(op, comp, comps)
+                g = H._group_size(op.attrs, topo.model_size)
+                import re as _re
+                m = _re.search(r'op_name="([^"]{0,80})', op.attrs)
+                meta = m.group(1) if m else ""
+                key = (is_coll, op.result_type[:44], f"{meta} [{nbytes/1e6:.0f}MB sem]")
+                frac = (g - 1) / g if g > 1 else 0
+                wire = 2 * nbytes * frac if is_coll == "all-reduce" else (
+                    nbytes if is_coll == "collective-permute" else nbytes * frac
+                )
+                agg[key][0] += wire * mult
+                agg[key][1] += mult
+                return
+            if op.kind in ("fusion", "call"):
+                callee = H._called(op.attrs, "calls") or H._called(op.attrs, "to_apply")
+                if callee and callee in comps:
+                    for o2 in comps[callee].ops:
+                        walk_fused_one(o2, comps[callee], mult)
+
+        walk_coll(comps[entry], 1.0)
+    else:
+        walk(comps[entry], 1.0)
+
+    total = sum(v[0] for v in agg.values())
+    print(f"total {kind} bytes/device: {total:.3e}")
+    for key, (b, n) in sorted(agg.items(), key=lambda kv: -kv[1][0])[:top]:
+        k, rt, meta = key
+        print(f"{b:10.3e}  x{n:6.0f}  {k:20s} {rt:44s} {meta}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--opt", default="")
+    ap.add_argument("--top", type=int, default=15)
+    ap.add_argument("--kind", default="coll", choices=["coll", "mem"])
+    args = ap.parse_args()
+    perf_flags.parse_opt_string(args.opt)
+    compiled, topo = lower_cell(args.arch, args.shape)
+    breakdown(compiled, topo, args.kind, args.top)
+
+
+if __name__ == "__main__":
+    main()

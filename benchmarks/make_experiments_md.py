@@ -1,0 +1,281 @@
+"""Assemble EXPERIMENTS.md: narrative + auto-generated tables from artifacts.
+
+    PYTHONPATH=src python -m benchmarks.make_experiments_md > EXPERIMENTS.md
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.report import ART, dryrun_table, fit_report, fmt_s, load, roofline_table
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def headline_mfu() -> str:
+    """Best roofline fractions achieved (optimized artifacts)."""
+    rows = []
+    for p in sorted(ART.glob("*__single__opt.json")):
+        r = json.loads(p.read_text())
+        ro = r["roofline"]
+        tb = max(ro["t_compute_s"], ro["t_memory_s"], ro["t_collective_s"])
+        if tb <= 0 or r["kind"] == "decode":
+            continue
+        mfu = r["model_flops_total"] / (tb * ro["n_chips"] * 197e12)
+        rows.append((mfu, r["arch"], r["shape"], ro["bottleneck"], tb))
+    rows.sort(reverse=True)
+    out = ["| rank | arch | shape | MFU@bound | bottleneck |", "|---|---|---|---|---|"]
+    for i, (mfu, a, sh, b, tb) in enumerate(rows[:8], 1):
+        out.append(f"| {i} | {a} | {sh} | {mfu*100:.1f}% | {b} |")
+    return "\n".join(out)
+
+
+def opt_vs_baseline_table() -> str:
+    """Optimized-flag sweep vs baseline, per cell (single pod)."""
+    base = {(r["arch"], r["shape"]): r for r in load("single")}
+    rows = [
+        "| arch | shape | t_bound base | t_bound opt | speedup | bottleneck base -> opt |",
+        "|---|---|---|---|---|---|",
+    ]
+    for p in sorted(ART.glob("*__single__opt.json")):
+        r = json.loads(p.read_text())
+        key = (r["arch"], r["shape"])
+        if key not in base:
+            continue
+        b = base[key]["roofline"]
+        o = r["roofline"]
+        tb = max(b["t_compute_s"], b["t_memory_s"], b["t_collective_s"])
+        to = max(o["t_compute_s"], o["t_memory_s"], o["t_collective_s"])
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(tb)} | {fmt_s(to)} "
+            f"| {tb/to:.2f}x | {b['bottleneck']} -> {o['bottleneck']} |"
+        )
+    return "\n".join(rows)
+
+
+def perf_iteration_table(arch: str, shape: str, iters: list) -> str:
+    rows = [
+        "| iteration | flags | t_compute | t_memory | t_collective | bottleneck |",
+        "|---|---|---|---|---|---|",
+    ]
+    base = ART / f"{arch}__{shape}__single.json"
+    series = [("baseline (paper-faithful)", base)]
+    for tag, label in iters:
+        series.append((label, ART / f"{arch}__{shape}__single__{tag}.json"))
+    for label, p in series:
+        if not p.exists():
+            rows.append(f"| {label} | (missing) | - | - | - | - |")
+            continue
+        r = json.loads(p.read_text())
+        ro = r["roofline"]
+        flags = r.get("opt", {})
+        on = ",".join(
+            f"{k}={v}" for k, v in flags.items()
+            if v not in (False, "none", "binomial_tree", 0, 1024)
+        ) or "-"
+        rows.append(
+            f"| {label} | {on} | {fmt_s(ro['t_compute_s'])} "
+            f"| {fmt_s(ro['t_memory_s'])} | {fmt_s(ro['t_collective_s'])} "
+            f"| {ro['bottleneck']} |"
+        )
+    return "\n".join(rows)
+
+
+HEADER = """# EXPERIMENTS — Offloading MPI_Scan (NetFPGA) on a TPU v5e production mesh
+
+All numbers in this file are generated from artifacts
+(`benchmarks/artifacts/dryrun/*.json`, written by `repro.launch.dryrun`) or by
+`python -m benchmarks.run`; regenerate with
+`python -m benchmarks.make_experiments_md`. Hardware constants: TPU v5e,
+197 TFLOP/s bf16/chip, 819 GB/s HBM, 50 GB/s/link ICI; single pod = 16x16 =
+256 chips, multi-pod = 2x16x16 = 512.
+
+## Paper reproduction (Figs. 4-7)
+
+`python -m benchmarks.run` reproduces the paper's comparison on a simulated
+8-rank communicator (mapping in DESIGN.md section 2). Summary of the measured
+CSV (full output in bench_output.txt):
+
+* **Offload gap** (Fig. 4/5 analogue): the host-driven schedule ("software
+  MPI": one dispatch + sync per hop) costs 450-12000us per scan at 4B-1KB
+  payloads; the fused one-program schedule ("offloaded") costs 7-50us —
+  a 30-300x gap. This is the paper's architectural point isolated: who
+  drives the schedule.
+* **Software ordering matches the paper**: among software algorithms,
+  sequential is fastest (no synchronization structure, fewest dispatches),
+  and the synchronizing algorithms (recursive doubling, binomial) are 3-20x
+  worse — the paper's Fig. 4 finding. The paper's nuance that SW-sequential
+  beats offloaded on *average* latency (ranks returning early) is not
+  reproducible in SPMD timing (all ranks share one program) and is noted as
+  a divergence.
+* **In-network latency** (Fig. 6/7 analogue): measured fused-program times
+  plus the alpha-beta-gamma ICI model at production scale; the selector's
+  algo_type crossovers (paper: "runtime makes an intelligent selection")
+  appear in the `selector` CSV rows: log-depth algorithms win everywhere at
+  p>=16, `binomial_tree` is preferred only off-auto (its 2logp steps but
+  sparse per-step traffic), and `sequential` is auto-excluded at p>8 as the
+  paper's own conclusion dictates.
+"""
+
+
+def main() -> None:
+    print(HEADER)
+    print("\n## Dry-run (single pod, 16x16 = 256 chips)\n")
+    print(dryrun_table("single"))
+    print("\n### Memory fit (16GB HBM/chip)\n")
+    print(fit_report("single"))
+    print("\n## Dry-run (multi-pod, 2x16x16 = 512 chips)\n")
+    print(dryrun_table("multi"))
+    print(
+        "\nCell accounting: the assignment's 10 archs x 4 shapes = 40 cells; "
+        "long_500k is defined only for sub-quadratic families, so 33 cells "
+        "are applicable (run above, BOTH meshes, zero failures) and 7 are "
+        "documented skips (long_500k for the seven pure full-attention "
+        "archs: deepseek-moe, olmoe, whisper, smollm, granite, qwen2.5, "
+        "qwen2-vl) per DESIGN.md section 7. gemma3-27b runs long_500k via its 5:1 "
+        "sliding-window pattern; mamba2/jamba via SSM state."
+    )
+    print("\n## Roofline (single pod, baseline = paper-faithful config)\n")
+    print(roofline_table("single"))
+    print("""
+Reading guide: terms are seconds/step from the trip-count-aware HLO cost
+model (`repro/roofline/hlo_cost.py`; `cost_analysis()` counts loop bodies
+once and is recorded in artifacts as `raw_cost_analysis` for reference).
+`useful/HLO` = MODEL_FLOPS / compiled FLOPs (remat + replication waste
+shows up here); `MFU@bound` = MODEL_FLOPS / (t_bound x chips x peak).
+Decode rows are inherently memory-bound (one token against a large cache);
+their MFU is expected to be ~0 and the memory term is the figure of merit.
+""")
+    print("\n## Perf — headline roofline fractions (optimized, train/prefill cells)\n")
+    print(headline_mfu())
+    print("""
+MFU@bound = MODEL_FLOPS / (dominant-roofline-term x chips x peak): the
+fraction of peak the step would reach IF it exactly hit its own roofline
+bound — the score of how close the compiled program's work/traffic ratio is
+to ideal for its bottleneck. Decode cells are excluded (memory-bound by
+construction; their figure of merit is the memory term, see Roofline table).
+""")
+    print("\n## Perf — hillclimb logs (3 cells) and optimized-vs-baseline\n")
+    print("### Cell A: qwen2.5-14b x prefill_32k (worst roofline fraction)\n")
+    print(perf_iteration_table("qwen25_14b", "prefill_32k", [
+        ("opt_seqshard", "i1: seq_shard_attn"),
+        ("opt_i2", "i2: + attn_probs_bf16"),
+        ("opt_i3", "i3: + attn_kv_block=4096"),
+    ]))
+    print("""
+* i1 hypothesis: 40 heads don't divide the 16-way axis, so baseline
+  replicates ALL attention compute per device (useful/HLO 0.05). Sharding
+  flash q-blocks over the model axis predicts ~16x less attention work.
+  CONFIRMED: t_memory 138.8s -> 15.3s (9.1x), t_compute 13.3s -> 3.1s (4.3x).
+* i2 hypothesis: bf16 probs for the PV matmul cut score-tensor traffic.
+  CONFIRMED (small): t_memory -3%.
+* i3 hypothesis: 4x larger KV blocks amortize the (m,l,o) rescale traffic.
+  CONFIRMED (small): t_memory -2.5%. Stopping: two consecutive <5% changes.
+""")
+    print("### Cell B: gemma3-27b x train_4k (most collective-bound)\n")
+    print(perf_iteration_table("gemma3_27b", "train_4k", [
+        ("opt_i1", "i1: remat save_block_outputs"),
+        ("opt_i3", "i2: + explicit_tp (shard_map psums)"),
+    ]))
+    print("""
+* i1 hypothesis: default remat re-runs forward TP all-reduces during
+  backward; naming the post-collective block outputs in the checkpoint
+  policy removes them. CONFIRMED: collective wire bytes 1.337e12 ->
+  1.173e12 (-12.3%).
+* i2 hypothesis: explicit shard_map psums with bf16 payloads halve the
+  remaining AR bytes. REFUTED ON THIS METER: the CPU backend's
+  float-normalization widens every reduction to f32 and folds the bf16
+  casts away, so the HLO (and the meter) cannot express bf16 wires; on a
+  real TPU both baseline and explicit-TP ARs ride the dot's native bf16
+  output, so the honest claim is parity, not a win. The explicit-TP path is
+  kept (collective placement under our control, verified numerically
+  identical) and the lesson is recorded: payload-dtype optimizations must
+  be validated on hardware whose HLO can express them.
+* Remaining gap analysis: 62 layers x ~4 unavoidable dgrad/fwd ARs of the
+  (16,4096,5376) residual; the next lever is architectural (parallel
+  attention+MLP blocks share one psum) which would break paper-faithful
+  config reproduction, so it is documented, not applied.
+""")
+    print("### Cell C: mamba2-130m x train_4k (paper-representative: the scan collective)\n")
+    print(perf_iteration_table("mamba2_130m", "train_4k", [
+        ("opt_i1", "i1: scan_algorithm=hillis_steele"),
+        ("opt_i2", "i2: + bf16 scan payload"),
+        ("opt_i3", "i3: sklansky (multicast) instead"),
+        ("opt_i5", "i4: ssm_chunk 256->128"),
+        ("opt_i6", "i5: ssm_chunk 256->64"),
+    ]))
+    print("""
+* i1 hypothesis: the paper-faithful binomial tree costs 2log2(p) steps with
+  masked combines; Hillis-Steele needs log2(p) send-only steps, halving
+  collective-permutes and removing the (value,valid) masking traffic.
+  CONFIRMED: collective wire bytes 8.8GB -> 6.1GB (-31%), t_memory -6%
+  (the masking selects it removes are small next to the SSD math). An
+  earlier 2.6x memory claim from a pre-final meter version was an
+  apples-to-oranges comparison and is corrected here — the meter and all
+  artifacts in this file are one version.
+* i2 hypothesis: bf16 (decay,state) payloads halve permute bytes. REFUTED ON
+  THIS METER (same CPU float-normalization artifact as Cell B i2);
+  analytically ~2x on the CP term on TPU, recorded as expected-not-measured.
+* i3 hypothesis: Sklansky (the paper's Fig. 3 multicast) should match
+  Hillis-Steele latency with fewer messages. REFUTED, instructive: JAX's
+  ppermute forbids one-to-many sources, so the multicast decomposes into
+  fanout unicasts — measured 2.64x MORE wire bytes (16.1GB vs 6.1GB) and the
+  cell flips to collective-bound. The paper's NIC multicast does not
+  transfer to the ppermute lowering; with native ICI multicast it would
+  (DESIGN.md hardware-adaptation notes).
+* i4/i5 hypothesis: smaller SSD chunks shrink the (Q x Q) score tensors.
+  REFUTED: inter-chunk state tensors grow faster than score tensors shrink
+  (t_memory +10% / +33%); the config default Q=256 is on the knee.
+  Stopping: three consecutive non-improvements.
+""")
+    print("### Cell D (extra budget): deepseek-moe-16b x train_4k (MoE, collective-bound)\n")
+    print(perf_iteration_table("deepseek_moe_16b", "train_4k", [
+        ("opt", "i1: global production flags"),
+        ("opt_i2", "i2: attn_seq_over_tp (replicated projections)"),
+    ]))
+    print("""
+* Profile finding: for this fine-grained MoE (d=2048), the TP-attention dx
+  all-reduces are 43% of collective bytes — MORE than the EP all-to-alls
+  (19%). The MoE machinery is cheap; the dense attention plumbing is not.
+* i1 (remat policy et al.): CONFIRMED, collective 4.10s -> 3.46s (1.19x).
+* i2 hypothesis: replicate the attention projections and shard flash
+  query-blocks instead — no contraction over a sharded dim means NO dx
+  psum at all. REFUTED: collective 3.46s -> 6.67s (1.9x worse). The dx AR
+  carries ONE (B,S,d) tensor but the replacement needs K AND V gathered
+  (2x the payload) plus the remat re-gather — the napkin missed that
+  attention has two activation streams to move but only one gradient
+  stream to reduce. TP attention stays optimal even at small d_model.
+""")
+    print("### Optimized flags vs baseline — every cell (single pod)\n")
+    print(
+        "Production flags: seq_shard_attn, attn_probs_bf16, remat "
+        "save_block_outputs, explicit_tp, scan hillis_steele — selected "
+        "PER-ARCH: granite-20b drops explicit_tp (see note below).\n"
+    )
+    print(opt_vs_baseline_table())
+    print("""
+Per-arch flag finding (measured): `explicit_tp` REGRESSES MQA/low-KV archs
+(granite kv=1: collective 0.83e12 -> 1.30e12, 1.57x worse) because the
+replicated-KV branch's backward inside shard_map pays a boundary psum of the
+x-cotangent every layer, where the auto-partitioned baseline recomputes that
+branch redundantly-but-locally. Rule shipped in the config guidance: enable
+explicit_tp only when num_kv_heads divides the model axis. granite's row
+above uses its per-arch flags (remat-only: collective -19%, bottleneck flips
+collective->memory).
+""")
+    print("""
+## Multi-pod note
+
+The 2x16x16 dry-run shards batch over ('pod','data'): per-device argument
+and temp bytes halve vs single-pod (tables above), collective schedules gain
+the cross-pod gradient all-reduce on the 'pod' axis, and every cell still
+compiles — the 'pod' axis is load-bearing. At 1000+ nodes the pod axis is
+where int8+error-feedback gradient compression (optim/compression.py,
+convergence-parity tested) and the elastic re-mesh path (runtime/fault.py,
+recovery-tested) engage.
+""")
+
+
+if __name__ == "__main__":
+    main()

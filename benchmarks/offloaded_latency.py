@@ -1,0 +1,79 @@
+"""Paper Figs. 6-7 analogue: in-network latency per algorithm AFTER offload.
+
+The paper's 8ns on-NIC timer measures offload->release time — collective time
+with host/driver overhead excluded. Our analogue has two parts:
+
+  1. measured: per-schedule device execution time of the fused program on the
+     simulated 8-rank mesh (host dispatch excluded by timing only the second
+     of back-to-back calls on donated buffers);
+  2. derived: the alpha-beta-gamma ICI model (core.selector.estimate_cost)
+     evaluated at TPU v5e constants for the production 16-way model axis —
+     the number the real pod would see, reported alongside so the crossovers
+     the selector uses are visible.
+
+Emits CSV rows: figure,algo,metric,msg_bytes,value_us
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import TPU_V5E, estimate_cost, sim_scan, time_offloaded_scan
+
+P_SIM = 8
+P_PROD = 16
+ALGOS = [
+    "sequential",
+    "sequential_pipelined",
+    "hillis_steele",
+    "recursive_doubling",
+    "binomial_tree",
+    "sklansky",
+]
+MSG_BYTES = [4, 64, 1024, 16384, 262144, 1 << 20]
+
+
+def run() -> List[str]:
+    rows = []
+    rng = np.random.default_rng(0)
+    for msg in MSG_BYTES:
+        n = max(1, msg // 4)
+        x = jnp.asarray(rng.normal(size=(P_SIM, n)).astype(np.float32))
+        for algo in ALGOS:
+            t = time_offloaded_scan(x, "sum", P_SIM, algorithm=algo, iters=20)
+            rows.append(
+                f"fig6_offloaded_avg,{algo},measured_sim8,{msg},{t*1e6:.2f}"
+            )
+            # derived in-network time on the production axis
+            t_ici = estimate_cost(algo, P_PROD, msg, TPU_V5E)
+            rows.append(
+                f"fig6_offloaded_avg,{algo},derived_ici16,{msg},{t_ici*1e6:.3f}"
+            )
+    return rows
+
+
+def selector_crossover() -> List[str]:
+    """The paper's 'runtime picks algo_type': report the selected algorithm
+    per (p, msg) from the cost model."""
+    from repro.core import SUM, select_algorithm
+
+    rows = []
+    for p in (4, 8, 16, 64, 256):
+        for msg in (64, 4096, 262144, 1 << 22):
+            algo = select_algorithm(p, msg, SUM)
+            rows.append(f"selector,{algo},selected,{msg},{p}")
+    return rows
+
+
+def main() -> None:
+    print("figure,algo,metric,msg_bytes,value_us")
+    for row in run() + selector_crossover():
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,118 @@
+"""Roofline report generator: dry-run artifacts -> markdown tables.
+
+Reads benchmarks/artifacts/dryrun/*.json (written by repro.launch.dryrun) and
+emits the EXPERIMENTS.md section bodies. Never hand-type a roofline number:
+this script is the single source of truth.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List
+
+ART = Path(__file__).resolve().parent / "artifacts" / "dryrun"
+HBM_PER_CHIP = 16e9  # v5e
+
+
+def load(mesh: str) -> List[Dict]:
+    recs = []
+    for p in sorted(ART.glob(f"*__{mesh}.json")):
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def fmt_b(x) -> str:
+    if x is None:
+        return "-"
+    for unit, div in (("TB", 1e12), ("GB", 1e9), ("MB", 1e6), ("KB", 1e3)):
+        if x >= div:
+            return f"{x/div:.2f}{unit}"
+    return f"{x:.0f}B"
+
+
+def roofline_table(mesh: str = "single") -> str:
+    rows = [
+        "| arch | shape | t_compute | t_memory | t_collective | bottleneck "
+        "| useful/HLO | MFU@bound |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in load(mesh):
+        ro = r["roofline"]
+        tb = max(ro["t_compute_s"], ro["t_memory_s"], ro["t_collective_s"])
+        mfu = (
+            r["model_flops_total"] / (tb * ro["n_chips"] * 197e12)
+            if tb > 0 else 0.0
+        )
+        ratio = r.get("useful_flops_ratio")
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(ro['t_compute_s'])} "
+            f"| {fmt_s(ro['t_memory_s'])} | {fmt_s(ro['t_collective_s'])} "
+            f"| {ro['bottleneck']} | {ratio:.2f} | {mfu*100:.1f}% |"
+            if ratio is not None else
+            f"| {r['arch']} | {r['shape']} | - | - | - | - | - | - |"
+        )
+    return "\n".join(rows)
+
+
+def dryrun_table(mesh: str) -> str:
+    rows = [
+        "| arch | shape | chips | compile | args/dev | temps/dev | "
+        "collectives (AR/AG/RS/A2A/CP) | coll wire bytes |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in load(mesh):
+        m = r["memory"]
+        c = r["collectives"]["counts"]
+        n = r["n_chips"]
+        args = m["argument_size_bytes"]
+        temps = m["temp_size_bytes"]
+        counts = (
+            f"{c.get('all-reduce',0):.0f}/{c.get('all-gather',0):.0f}/"
+            f"{c.get('reduce-scatter',0):.0f}/{c.get('all-to-all',0):.0f}/"
+            f"{c.get('collective-permute',0):.0f}"
+        )
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {n} | {r['compile_s']}s "
+            f"| {fmt_b(args/n if args else None)} | {fmt_b(temps/n if temps else None)} "
+            f"| {counts} | {fmt_b(r['roofline']['collective_bytes_per_device'])} |"
+        )
+    return "\n".join(rows)
+
+
+def fit_report(mesh: str = "single") -> str:
+    """Per-device memory fit check vs 16GB HBM."""
+    lines = []
+    for r in load(mesh):
+        m = r["memory"]
+        n = r["n_chips"]
+        total = (m["argument_size_bytes"] or 0) / n + (m["temp_size_bytes"] or 0) / n
+        flag = "OK" if total < HBM_PER_CHIP else "OVER"
+        if flag == "OVER":
+            lines.append(
+                f"  - {r['arch']} x {r['shape']}: {fmt_b(total)}/chip {flag}"
+            )
+    return "\n".join(lines) if lines else "  - all cells fit in 16GB/chip"
+
+
+def main() -> None:
+    print("## Dry-run (single pod, 16x16)\n")
+    print(dryrun_table("single"))
+    print("\n## Dry-run (multi-pod, 2x16x16)\n")
+    print(dryrun_table("multi"))
+    print("\n## Roofline (single pod)\n")
+    print(roofline_table("single"))
+    print("\n## Memory fit\n")
+    print(fit_report("single"))
+
+
+if __name__ == "__main__":
+    main()

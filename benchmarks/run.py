@@ -1,0 +1,51 @@
+"""Benchmark harness entrypoint: one function per paper table/figure.
+
+  fig4/fig5 (scan_latency)      -- host-visible SW vs offloaded scan latency
+  fig6/fig7 (offloaded_latency) -- in-network latency per algorithm + the
+                                   derived ICI model + selector crossovers
+  roofline (report)             -- dry-run derived roofline tables
+
+Prints ``name,...,derived`` CSV sections. Run:
+  PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks import offloaded_latency, report, scan_latency  # noqa: E402
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="fewer timing iters")
+    args = ap.parse_args()
+    iters = 8 if args.quick else 30
+
+    print("# === Paper Fig. 4/5: host-visible scan latency (8 ranks) ===")
+    print("figure,algo,variant,msg_bytes,us_per_call")
+    for row in scan_latency.run(iters=iters):
+        print(row)
+    for row in scan_latency.run_min(iters=iters):
+        print(row)
+
+    print()
+    print("# === Paper Fig. 6/7: offloaded in-network latency ===")
+    print("figure,algo,metric,msg_bytes,value_us")
+    for row in offloaded_latency.run():
+        print(row)
+    for row in offloaded_latency.selector_crossover():
+        print(row)
+
+    print()
+    print("# === Roofline tables (from dry-run artifacts) ===")
+    try:
+        report.main()
+    except Exception as e:  # artifacts may be absent on a fresh clone
+        print(f"(roofline artifacts missing: {e}; run repro.launch.dryrun --all)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Paper Figs. 4-5 analogue: host-visible MPI_Scan latency, software vs
+offloaded, per algorithm x message size, 8 ranks.
+
+Mapping (DESIGN.md section 2):
+  software ("SW_")   = host-orchestrated schedule: one dispatch + host sync
+                       per hop (core.host_scan) — the MPI-over-Ethernet role.
+  offloaded ("NF_")  = whole schedule fused into ONE compiled program
+                       (core.sim_scan under jit) — the NIC-offload role: one
+                       descriptor in, one result out.
+
+Ranks are simulated as the leading axis on one device, so the deltas isolate
+exactly what the paper isolates: who drives the schedule. Message sizes match
+the paper's sweep (4B..1KB of int/float payload per rank).
+
+Emits CSV rows: figure,algo,variant,msg_bytes,us_per_call
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sim_scan, time_host_scan, time_offloaded_scan
+
+P = 8  # paper: 8 NetFPGA nodes
+ALGOS = ["sequential", "recursive_doubling", "binomial_tree", "sklansky"]
+MSG_BYTES = [4, 16, 64, 256, 1024]
+
+
+def _payload(msg_bytes: int) -> jax.Array:
+    n = max(1, msg_bytes // 4)
+    rng = np.random.default_rng(0)
+    return jnp.asarray(rng.normal(size=(P, n)).astype(np.float32))
+
+
+def run(iters: int = 30) -> List[str]:
+    rows = []
+    for msg in MSG_BYTES:
+        x = _payload(msg)
+        for algo in ALGOS:
+            t_sw = time_host_scan(x, "sum", P, algorithm=algo, iters=iters)
+            t_nf = time_offloaded_scan(x, "sum", P, algorithm=algo, iters=iters)
+            rows.append(f"fig4_avg_latency,SW_{algo},software,{msg},{t_sw*1e6:.2f}")
+            rows.append(f"fig4_avg_latency,NF_{algo},offloaded,{msg},{t_nf*1e6:.2f}")
+    return rows
+
+
+def run_min(iters: int = 30) -> List[str]:
+    """Fig. 5: minimum observed latency (best case over iterations)."""
+    rows = []
+    for msg in MSG_BYTES:
+        x = _payload(msg)
+        for algo in ALGOS:
+            best_sw = float("inf")
+            best_nf = float("inf")
+            from repro.core import host_scan
+            fused = jax.jit(
+                lambda s, a=algo: sim_scan(s, "sum", P, algorithm=a)
+            )
+            fused(x).block_until_ready()
+            host_scan(x, "sum", P, algorithm=algo)  # warm
+            for _ in range(iters):
+                t0 = time.perf_counter()
+                host_scan(x, "sum", P, algorithm=algo)
+                best_sw = min(best_sw, time.perf_counter() - t0)
+                t0 = time.perf_counter()
+                fused(x).block_until_ready()
+                best_nf = min(best_nf, time.perf_counter() - t0)
+            rows.append(f"fig5_min_latency,SW_{algo},software,{msg},{best_sw*1e6:.2f}")
+            rows.append(f"fig5_min_latency,NF_{algo},offloaded,{msg},{best_nf*1e6:.2f}")
+    return rows
+
+
+def main() -> None:
+    print("figure,algo,variant,msg_bytes,us_per_call")
+    for row in run() + run_min():
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

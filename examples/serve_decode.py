@@ -1,0 +1,68 @@
+"""Serve a small model with batched requests (continuous batching engine).
+
+Trains a tiny LM briefly so generations aren't pure noise, then serves a
+burst of requests through the ServeEngine: prefill -> slot splice -> batched
+greedy decode, exercising the same decode_step the dry-run compiles for the
+decode_32k / long_500k cells.
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, batches
+from repro.models import build_model
+from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
+from repro.serving.engine import Request, ServeEngine
+from repro.sharding.specs import Topology
+
+
+def main() -> None:
+    cfg = get_config("smollm_360m").reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.key(0))
+
+    # brief training so the model learns the synthetic bigram structure
+    opt = init_opt_state(params)
+    ocfg = AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=100)
+    data = batches(DataConfig(vocab_size=cfg.vocab_size, seq_len=64, global_batch=8, seed=0))
+
+    @jax.jit
+    def step(params, opt, batch):
+        (loss, _), g = jax.value_and_grad(api.loss, has_aux=True)(params, batch)
+        p2, o2, _ = adamw_update(g, opt, params, ocfg)
+        return p2, o2, loss
+
+    for i in range(60):
+        b = next(data)
+        params, opt, loss = step(params, opt, {k: jnp.asarray(v) for k, v in b.items()})
+    print(f"trained 60 steps, loss={float(loss):.3f}")
+
+    eng = ServeEngine(api, params, Topology(mesh=None), batch_size=4, max_len=96)
+    rng = np.random.default_rng(1)
+    reqs = []
+    for rid in range(6):
+        start = int(rng.integers(2, cfg.vocab_size - 32))
+        prompt = np.arange(start, start + 12, dtype=np.int32) % cfg.vocab_size
+        r = Request(rid=rid, prompt=prompt, max_new_tokens=8)
+        reqs.append(r)
+        eng.submit(r)
+    eng.run_until_drained()
+
+    hits = 0
+    total = 0
+    for r in reqs:
+        expect = [(int(r.prompt[-1]) + 1 + i) for i in range(len(r.generated))]
+        match = sum(1 for g, e in zip(r.generated, expect) if g == e)
+        hits += match
+        total += len(r.generated)
+        print(f"req {r.rid}: prompt tail {r.prompt[-3:].tolist()} -> {r.generated}")
+    print(f"next-token structure hit-rate: {hits}/{total}")
+    print("OK: batched serving drained all requests.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""End-to-end driver: train a Mamba2 LM with the paper's scan collective in
+the loss path (sequence-parallel SSD state hand-off via dist_exscan).
+
+Uses the full production stack — data pipeline, AdamW + ZeRO specs,
+checkpointing, fault-tolerant trainer — on whatever devices exist (1 CPU
+device here; the identical code runs on the 16x16 pod mesh).
+
+    PYTHONPATH=src python examples/train_ssm_seq_parallel.py [--steps 200]
+"""
+
+import argparse
+import tempfile
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.data.pipeline import DataConfig, batches
+from repro.models import build_model
+from repro.optim.adamw import AdamWConfig
+from repro.runtime.train_loop import Trainer, TrainerConfig
+from repro.sharding.specs import Topology
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    args = ap.parse_args()
+
+    cfg = get_config("mamba2_130m").reduced()
+    api = build_model(cfg)
+    shape = ShapeConfig("example", args.seq, args.batch, "train")
+    data = batches(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq,
+        global_batch=args.batch, seed=0,
+    ))
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        tr = Trainer(
+            api, Topology(mesh=None), shape, data,
+            TrainerConfig(ckpt_dir=ckpt_dir, ckpt_every=50, async_ckpt=True),
+            AdamWConfig(lr=3e-3, warmup_steps=10, total_steps=args.steps),
+        )
+        params, opt = tr.init_state()
+        params, opt, hist = tr.run(params, opt, num_steps=args.steps)
+    first = np.mean([h["loss"] for h in hist[:10]])
+    last = np.mean([h["loss"] for h in hist[-10:]])
+    print(f"steps={len(hist)}  loss {first:.3f} -> {last:.3f}")
+    print(f"mean step time: {np.mean([h['step_time_s'] for h in hist[5:]])*1e3:.1f}ms")
+    assert last < first, "training should reduce loss"
+    print("OK: sequence-parallel SSM trained end-to-end.")
+
+
+if __name__ == "__main__":
+    main()

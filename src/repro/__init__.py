@@ -1,0 +1,1 @@
+"""repro: the paper (MPI_Scan offload) as a JAX/TPU framework."""

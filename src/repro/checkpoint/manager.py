@@ -1,0 +1,123 @@
+"""Checkpoint manager: atomic, keep-k, background writes, crash-safe restore.
+
+Layout:  <dir>/step_<n>/  arrays.npz + tree.json   (+ .tmp staging)
+A checkpoint becomes visible only via the final atomic rename, so a process
+killed mid-write never corrupts the restore path — the fault-tolerance story
+(runtime/) leans on this.
+"""
+
+from __future__ import annotations
+
+import json
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+def _flatten(tree: PyTree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_write: bool = False):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.async_write = async_write
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, tree: PyTree, *, block: bool = False) -> None:
+        # materialize on host BEFORE handing to the writer thread, so the
+        # caller may donate/overwrite device buffers immediately
+        leaves, treedef = _flatten(tree)
+        host_leaves = [np.asarray(x) for x in leaves]
+        treedef_str = str(treedef)
+
+        def write():
+            tmp = self.dir / f".tmp_step_{step}"
+            final = self.dir / f"step_{step}"
+            if tmp.exists():
+                shutil.rmtree(tmp)
+            tmp.mkdir(parents=True)
+            np.savez(tmp / "arrays.npz", **{
+                f"leaf_{i}": a for i, a in enumerate(host_leaves)
+            })
+            (tmp / "tree.json").write_text(json.dumps({
+                "step": step,
+                "n_leaves": len(host_leaves),
+                "treedef": treedef_str,
+            }))
+            if final.exists():
+                shutil.rmtree(final)
+            tmp.rename(final)  # atomic visibility
+            self._gc()
+
+        if self.async_write and not block:
+            self.wait()
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+        else:
+            write()
+
+    def wait(self) -> None:
+        if self._thread is not None and self._thread.is_alive():
+            self._thread.join()
+
+    def _gc(self) -> None:
+        steps = sorted(self.all_steps())
+        for s in steps[: -self.keep] if self.keep > 0 else []:
+            shutil.rmtree(self.dir / f"step_{s}", ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def all_steps(self):
+        out = []
+        for p in self.dir.glob("step_*"):
+            try:
+                out.append(int(p.name.split("_")[1]))
+            except (IndexError, ValueError):
+                continue
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(
+        self, like: PyTree, step: Optional[int] = None,
+        shardings: Optional[PyTree] = None,
+    ) -> Tuple[int, PyTree]:
+        """Restore into the structure of ``like``; returns (step, tree).
+
+        With ``shardings`` given, leaves are device_put against them (the
+        resume path re-lays-out a checkpoint onto a possibly DIFFERENT mesh —
+        elastic re-mesh restores go through exactly this call).
+        """
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        d = self.dir / f"step_{step}"
+        data = np.load(d / "arrays.npz")
+        leaves, treedef = _flatten(like)
+        assert len(leaves) == len(data.files), (len(leaves), len(data.files))
+        new_leaves = []
+        for i, ref in enumerate(leaves):
+            arr = data[f"leaf_{i}"]
+            arr = arr.astype(ref.dtype) if hasattr(ref, "dtype") else arr
+            new_leaves.append(arr)
+        tree = jax.tree_util.tree_unflatten(treedef, new_leaves)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda a, s: jax.device_put(a, s) if s is not None else jax.device_put(a),
+                tree, shardings,
+                is_leaf=lambda x: isinstance(x, np.ndarray),
+            )
+        return step, tree

@@ -1,0 +1,19 @@
+from repro.configs.base import (
+    ARCH_IDS,
+    SHAPES,
+    ModelConfig,
+    ShapeConfig,
+    all_cells,
+    applicable_shapes,
+    get_config,
+)
+
+__all__ = [
+    "ARCH_IDS",
+    "SHAPES",
+    "ModelConfig",
+    "ShapeConfig",
+    "all_cells",
+    "applicable_shapes",
+    "get_config",
+]

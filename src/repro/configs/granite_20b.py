@@ -1,0 +1,15 @@
+"""Granite-20B code [arXiv:2405.04324; hf] — MQA (kv=1), wide FFN."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-20b",
+    family="dense",
+    num_layers=52,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=1,
+    d_ff=24576,
+    vocab_size=49152,
+    head_dim=128,
+    gated_mlp=False,
+)

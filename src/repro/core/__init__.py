@@ -1,0 +1,98 @@
+"""Core: the paper's contribution — network-offloaded parallel prefix scan.
+
+Public surface:
+  dist_scan / dist_exscan / dist_scan_pair  — SPMD collectives (inside shard_map)
+  sim_scan                                  — single-device schedule simulator
+  host_scan                                 — host-orchestrated "software MPI" baseline
+  AssocOp, SUM/MAX/MIN/PROD/SSD             — operator algebra
+  select_algorithm / cost_table             — algo_type auto-selection
+  CollectiveDescriptor                      — Fig. 1 offload packet analogue
+"""
+
+from repro.core.algorithms import (
+    ALGORITHMS,
+    SimBackend,
+    SpmdBackend,
+    algorithm_step_count,
+)
+from repro.core.host_scan import (
+    host_scan,
+    schedule_trace,
+    time_host_scan,
+    time_offloaded_scan,
+)
+from repro.core.operators import (
+    MAX,
+    MIN,
+    PROD,
+    SSD,
+    SUM,
+    AssocOp,
+    get_operator,
+    make_flash_op,
+    register_operator,
+    segmented_operator,
+)
+from repro.core.reduce_ops import dist_allreduce, dist_barrier, dist_reduce
+from repro.core.packet import (
+    AlgoType,
+    CollType,
+    CollectiveDescriptor,
+    MsgType,
+    NodeType,
+    WireDType,
+    WireOp,
+)
+from repro.core.scan_collective import (
+    dist_exscan,
+    dist_scan,
+    dist_scan_pair,
+    sim_scan,
+)
+from repro.core.selector import (
+    TPU_V5E,
+    LinkModel,
+    cost_table,
+    estimate_cost,
+    select_algorithm,
+)
+
+__all__ = [
+    "ALGORITHMS",
+    "AssocOp",
+    "AlgoType",
+    "CollType",
+    "CollectiveDescriptor",
+    "LinkModel",
+    "MAX",
+    "MIN",
+    "MsgType",
+    "NodeType",
+    "PROD",
+    "SSD",
+    "SUM",
+    "SimBackend",
+    "SpmdBackend",
+    "TPU_V5E",
+    "WireDType",
+    "WireOp",
+    "algorithm_step_count",
+    "cost_table",
+    "dist_exscan",
+    "dist_scan",
+    "dist_scan_pair",
+    "estimate_cost",
+    "get_operator",
+    "host_scan",
+    "make_flash_op",
+    "register_operator",
+    "schedule_trace",
+    "segmented_operator",
+    "select_algorithm",
+    "dist_allreduce",
+    "dist_barrier",
+    "dist_reduce",
+    "sim_scan",
+    "time_host_scan",
+    "time_offloaded_scan",
+]

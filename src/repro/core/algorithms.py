@@ -1,0 +1,426 @@
+"""Scan-collective schedules (the NetFPGA state machines, as ppermute programs).
+
+Each algorithm from the paper is a *schedule*: a fixed sequence of
+(permutation, combine) steps. On the NetFPGA these were hardware state machines
+selected by the offload packet's ``algo_type`` field; here they are pure
+functions over an abstract :class:`Backend`, so the identical schedule runs
+
+  * inside ``shard_map`` via ``lax.ppermute`` (the *offloaded* path — the whole
+    schedule compiles into the device program, no host involvement per step), or
+  * on a stacked-array simulator (:class:`SimBackend`) used by the hypothesis
+    property tests and by the host-orchestrated "software MPI" baseline.
+
+All schedules carry ``(value, valid)`` pairs: ``ppermute`` delivers zeros on
+ranks with no in-edge, so an arriving ``valid == 0`` marks "no message", which
+makes every schedule correct for arbitrary operators and non-power-of-two rank
+counts. For operators whose identity is the zero tree (``op.zero_identity``,
+e.g. sum) the masking is skipped entirely — the compiled schedule is a bare
+ppermute/add chain.
+
+Fidelity notes (paper section III):
+  * ``sequential``     — Open MPI's default; p-1 single-hop steps. The paper's
+    NIC ACK protocol guards a single hardware buffer against back-to-back
+    scans; in a compiled SPMD program ordering is structural, and each step
+    keeps exactly one live carry (the same O(1) buffer bound).
+  * ``recursive_doubling`` — MPICH's pairwise-exchange butterfly with the
+    partner<j conditional accumulate (paper II-B2).
+  * ``hillis_steele``  — the send-only distance-doubling variant.
+  * ``binomial_tree``  — the two-phase up/down sweep (paper II-B3, III-D);
+    out-of-range sends are dropped exactly as in the paper's schedule.
+  * ``sklansky``       — log2(p) steps where one boundary rank *multicasts* to
+    an entire half-block: a source may appear in multiple (src, dst) pairs of a
+    single collective-permute, which is the ICI analogue of the paper's
+    Ethernet multicast (Fig. 3).
+  * ``invertible_doubling`` — hillis-steele whose *exclusive* form recovers
+    the answer locally via the operator inverse (the paper's subtraction
+    trick) instead of an extra shift step.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.operators import AssocOp
+
+PyTree = Any
+Perm = List[Tuple[int, int]]
+
+
+# ---------------------------------------------------------------------------
+# Backends
+# ---------------------------------------------------------------------------
+
+
+class Backend:
+    """Minimal comm interface a schedule needs: rank id + permute."""
+
+    p: int
+
+    def rank(self):  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def permute(self, tree: PyTree, perm: Perm) -> PyTree:  # pragma: no cover
+        raise NotImplementedError
+
+
+def split_multicast(perm: Perm) -> List[Perm]:
+    """Split a one-to-many permutation into unique-source sub-permutations.
+
+    ``jax.lax.ppermute`` requires unique sources AND destinations, so the
+    paper's NIC-style hardware multicast (one payload, many receivers) cannot
+    be expressed as a single collective-permute through JAX. We decompose:
+    the i-th destination of each source lands in sub-permutation i. The
+    sub-permutes are data-independent (XLA may run them concurrently) and each
+    destination appears exactly once overall, so with ppermute's zero-fill
+    semantics the receiver-side merge is a plain sum. Per-link traffic matches
+    true multicast everywhere except the source's egress, which sends
+    fanout copies — recorded as a hardware-adaptation delta in DESIGN.md.
+    """
+    buckets: List[Perm] = []
+    seen: dict[int, int] = {}
+    for src, dst in perm:
+        i = seen.get(src, 0)
+        seen[src] = i + 1
+        while len(buckets) <= i:
+            buckets.append([])
+        buckets[i].append((src, dst))
+    return buckets
+
+
+class SpmdBackend(Backend):
+    """Runs inside shard_map; permute lowers to XLA collective-permute."""
+
+    def __init__(self, axis_name: str, axis_size: int | None = None):
+        self.axis_name = axis_name
+        self.p = int(axis_size if axis_size is not None else lax.axis_size(axis_name))
+
+    def rank(self):
+        return lax.axis_index(self.axis_name)
+
+    def permute(self, tree: PyTree, perm: Perm) -> PyTree:
+        if not perm:
+            return jax.tree.map(jnp.zeros_like, tree)
+        subperms = split_multicast(list(perm))
+        if len(subperms) == 1:
+            return jax.tree.map(
+                lambda a: lax.ppermute(a, self.axis_name, subperms[0]), tree
+            )
+        parts = [
+            jax.tree.map(lambda a, sp=sp: lax.ppermute(a, self.axis_name, sp), tree)
+            for sp in subperms
+        ]
+        out = parts[0]
+        for part in parts[1:]:
+            out = jax.tree.map(jnp.add, out, part)
+        return out
+
+
+class SimBackend(Backend):
+    """Single-device simulator: every pytree leaf carries a leading rank axis.
+
+    Semantically identical to SpmdBackend (missing in-edges deliver zeros);
+    used by property tests and by the host-orchestrated baseline, where each
+    ``permute`` models one host-driven message hop.
+    """
+
+    def __init__(self, p: int):
+        self.p = int(p)
+
+    def rank(self):
+        return jnp.arange(self.p, dtype=jnp.int32)
+
+    def permute(self, tree: PyTree, perm: Perm) -> PyTree:
+        def shuffle(a):
+            out = jnp.zeros_like(a)
+            for src, dst in perm:
+                out = out.at[dst].set(a[src])
+            return out
+
+        return jax.tree.map(shuffle, tree)
+
+
+# ---------------------------------------------------------------------------
+# Masked combine plumbing
+# ---------------------------------------------------------------------------
+
+
+def _bwhere(cond, a, b):
+    """tree-where with a rank-shaped (scalar or (p,)) condition broadcast."""
+
+    def leaf(x, y):
+        c = cond
+        extra = x.ndim - c.ndim
+        if extra > 0:
+            c = c.reshape(c.shape + (1,) * extra)
+        return jnp.where(c, x, y)
+
+    return jax.tree.map(leaf, a, b)
+
+
+def _combine_lr(op: AssocOp, lv, lval, rv, rval):
+    """Masked combine with *l* the earlier-prefix operand.
+
+    valid flags are float32 (0/1) so they travel through ppermute and arriving
+    zero-fill naturally reads as "no message".
+    """
+    both = (lval > 0.5) & (rval > 0.5)
+    merged = op.combine(lv, rv)
+    keep_l = _bwhere(lval > 0.5, lv, rv)
+    return _bwhere(both, merged, keep_l), jnp.maximum(lval, rval)
+
+
+def _ones_flag(backend: Backend):
+    r = backend.rank()
+    return jnp.ones(jnp.shape(r), dtype=jnp.float32)
+
+
+def num_steps(p: int) -> int:
+    return max(0, math.ceil(math.log2(p))) if p > 1 else 0
+
+
+# ---------------------------------------------------------------------------
+# Schedules. Each returns the INCLUSIVE scan; exclusive handling lives in
+# scan_collective (structural shift or inverse-op recovery).
+# ---------------------------------------------------------------------------
+
+
+def sequential(backend: Backend, x: PyTree, op: AssocOp) -> PyTree:
+    """Open MPI's linear algorithm: p-1 steps, one single-hop message each.
+
+    At step s, rank s-1's accumulator is a complete prefix and is handed to
+    rank s. SPMD realization: every step performs one (s-1 -> s) permute and
+    only the destination rank folds it in.
+    """
+    p = backend.p
+    if p == 1:
+        return x
+    rank = backend.rank()
+    acc = x
+    for s in range(1, p):
+        recv = backend.permute(acc, [(s - 1, s)])
+        is_dst = rank == s
+        merged = op.combine(recv, acc)
+        acc = _bwhere(is_dst, merged, acc)
+    return acc
+
+
+def sequential_pipelined(backend: Backend, x: PyTree, op: AssocOp) -> PyTree:
+    """Ring variant: every rank forwards every step (p-1 steps, stride-1).
+
+    Raw contributions are *relayed* around the ring: at step s rank j receives
+    x_{j-s}, which precedes its current window [j-s+1, j], so each step folds
+    in exactly one new term (no window overlap). Same wire pattern as
+    ``sequential`` but every link is busy every step — the bandwidth-friendly,
+    torus-native form with a single static permute.
+    """
+    p = backend.p
+    if p == 1:
+        return x
+    perm = [(i, i + 1) for i in range(p - 1)]
+    if op.zero_identity:
+        acc = x
+        relay = x
+        for _ in range(p - 1):
+            relay = backend.permute(relay, perm)
+            acc = op.combine(relay, acc)
+        return acc
+    acc_v, acc_f = x, _ones_flag(backend)
+    rel_v, rel_f = x, acc_f
+    for _ in range(p - 1):
+        rel_v, rel_f = backend.permute((rel_v, rel_f), perm)
+        acc_v, acc_f = _combine_lr(op, rel_v, rel_f, acc_v, acc_f)
+    return acc_v
+
+
+def hillis_steele(backend: Backend, x: PyTree, op: AssocOp) -> PyTree:
+    """Distance-doubling send-only scan: ceil(log2 p) steps of stride 2^k."""
+    p = backend.p
+    if p == 1:
+        return x
+    if op.zero_identity:
+        acc = x
+        for k in range(num_steps(p)):
+            d = 1 << k
+            perm = [(i, i + d) for i in range(p - d)]
+            recv = backend.permute(acc, perm)
+            acc = op.combine(recv, acc)
+        return acc
+    acc_v, acc_f = x, _ones_flag(backend)
+    for k in range(num_steps(p)):
+        d = 1 << k
+        perm = [(i, i + d) for i in range(p - d)]
+        rv, rf = backend.permute((acc_v, acc_f), perm)
+        acc_v, acc_f = _combine_lr(op, rv, rf, acc_v, acc_f)
+    return acc_v
+
+
+def recursive_doubling(backend: Backend, x: PyTree, op: AssocOp) -> PyTree:
+    """MPICH's pairwise-exchange butterfly (paper II-B2).
+
+    Maintains ``result`` (the answer) and ``partial`` (the running block
+    total). Step k exchanges ``partial`` with partner j^2^k; ranks whose
+    partner is lower fold the received block into both.
+    """
+    p = backend.p
+    if p == 1:
+        return x
+    rank = backend.rank()
+    one = _ones_flag(backend)
+    res_v, res_f = x, one
+    par_v, par_f = x, one
+    for k in range(num_steps(p)):
+        d = 1 << k
+        perm = [(j, j ^ d) for j in range(p) if (j ^ d) < p]
+        rv, rf = backend.permute((par_v, par_f), perm)
+        partner_lower = (rank & d) != 0  # partner = rank ^ d < rank
+        got = rf > 0.5
+        # partner < j: received block precedes ours -> fold into result+partial
+        fold = partner_lower & got
+        nres_v, nres_f = _combine_lr(op, rv, rf, res_v, res_f)
+        res_v = _bwhere(fold, nres_v, res_v)
+        res_f = jnp.where(fold, nres_f, res_f)
+        # partial always absorbs the partner block, ordered by rank
+        lo_v, lo_f = _combine_lr(op, rv, rf, par_v, par_f)   # partner lower
+        hi_v, hi_f = _combine_lr(op, par_v, par_f, rv, rf)   # partner higher
+        par_v = _bwhere(partner_lower & got, lo_v, _bwhere(got, hi_v, par_v))
+        par_f = jnp.where(got, jnp.maximum(par_f, rf), par_f)
+        del nres_f, lo_f, hi_f
+    return res_v
+
+
+def binomial_tree(backend: Backend, x: PyTree, op: AssocOp) -> PyTree:
+    """The paper's two-phase binomial/Brent-Kung schedule (II-B3, III-D).
+
+    Up-phase: rank j with j & (2^(k+1)-1) == 2^(k+1)-1 receives from j-2^k and
+    accumulates (the NIC caches children partials). Down-phase: complete ranks
+    j & (2^k - 1) == 2^k - 1 send their inclusive prefix to j + 2^(k-1);
+    out-of-range sends drop, exactly as in the paper's description.
+    """
+    p = backend.p
+    if p == 1:
+        return x
+    K = num_steps(p)
+    acc_v, acc_f = x, _ones_flag(backend)
+    # Up-sweep.
+    for k in range(K):
+        mask = (1 << (k + 1)) - 1
+        d = 1 << k
+        perm = [
+            (j - d, j)
+            for j in range(p)
+            if (j & mask) == mask and j - d >= 0
+        ]
+        if not perm:
+            continue
+        rv, rf = backend.permute((acc_v, acc_f), perm)
+        got = rf > 0.5
+        nv, nf = _combine_lr(op, rv, rf, acc_v, acc_f)
+        acc_v = _bwhere(got, nv, acc_v)
+        acc_f = jnp.where(got, nf, acc_f)
+    # Down-sweep.
+    for k in range(K, 0, -1):
+        mask = (1 << k) - 1
+        d = 1 << (k - 1)
+        perm = [
+            (j, j + d)
+            for j in range(p)
+            if (j & mask) == mask and j + d < p
+        ]
+        if not perm:
+            continue
+        rv, rf = backend.permute((acc_v, acc_f), perm)
+        got = rf > 0.5
+        nv, nf = _combine_lr(op, rv, rf, acc_v, acc_f)
+        acc_v = _bwhere(got, nv, acc_v)
+        acc_f = jnp.where(got, nf, acc_f)
+    return acc_v
+
+
+def sklansky(backend: Backend, x: PyTree, op: AssocOp) -> PyTree:
+    """Sklansky's divide-and-conquer scan with one-to-many permutes.
+
+    Step k: in each block of 2^(k+1), the last rank of the left half
+    multicasts its inclusive prefix to every rank of the right half — a single
+    collective-permute whose source appears in many (src, dst) pairs. This is
+    the TPU/ICI realization of the paper's NIC multicast (Fig. 3): one message
+    payload serves a whole receiver group.
+    """
+    p = backend.p
+    if p == 1:
+        return x
+    acc_v, acc_f = x, _ones_flag(backend)
+    for k in range(num_steps(p)):
+        half = 1 << k
+        block = half << 1
+        perm: Perm = []
+        for start in range(0, p, block):
+            src = start + half - 1
+            if src >= p:
+                continue
+            for dst in range(start + half, min(start + block, p)):
+                perm.append((src, dst))
+        if not perm:
+            continue
+        rv, rf = backend.permute((acc_v, acc_f), perm)
+        got = rf > 0.5
+        nv, nf = _combine_lr(op, rv, rf, acc_v, acc_f)
+        acc_v = _bwhere(got, nv, acc_v)
+        acc_f = jnp.where(got, nf, acc_f)
+    return acc_v
+
+
+def invertible_doubling(backend: Backend, x: PyTree, op: AssocOp) -> PyTree:
+    """Inclusive form is hillis-steele; the payoff is in the exclusive form.
+
+    ``scan_collective`` recognizes this algo_type and, given ``op.inverse``,
+    derives MPI_Exscan locally as ``inv(x) (+) inclusive`` — zero extra
+    communication, the compiled analogue of the paper's "receiver already
+    caches its own contribution and subtracts it" (Fig. 3).
+    """
+    if op.inverse is None:
+        raise ValueError(
+            "invertible_doubling requires an operator with an inverse "
+            f"(op={op.name!r} has none)"
+        )
+    return hillis_steele(backend, x, op)
+
+
+ALGORITHMS = {
+    "sequential": sequential,
+    "sequential_pipelined": sequential_pipelined,
+    "hillis_steele": hillis_steele,
+    "recursive_doubling": recursive_doubling,
+    "binomial_tree": binomial_tree,
+    "sklansky": sklansky,
+    "invertible_doubling": invertible_doubling,
+}
+
+
+def get_algorithm(name: str):
+    try:
+        return ALGORITHMS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown algo_type {name!r}; known: {sorted(ALGORITHMS)}"
+        ) from None
+
+
+def algorithm_step_count(name: str, p: int) -> int:
+    """Latency in schedule steps — used by the selector's alpha term."""
+    if p <= 1:
+        return 0
+    lg = num_steps(p)
+    return {
+        "sequential": p - 1,
+        "sequential_pipelined": p - 1,
+        "hillis_steele": lg,
+        "recursive_doubling": lg,
+        "binomial_tree": 2 * lg,
+        "sklansky": lg,
+        "invertible_doubling": lg,
+    }[name]

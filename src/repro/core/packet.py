@@ -1,0 +1,140 @@
+"""The offload descriptor — software analogue of the paper's Fig. 1 packet.
+
+The NetFPGA consumed a UDP packet whose payload carried the collective
+descriptor (comm_id, comm_size, coll_type, algo_type, node_type, msg_type,
+rank, root, operation, data_type, count). The Ethernet/IP/UDP framing has no
+TPU analogue (XLA owns transport); we keep the descriptor itself: it is how
+the framework names, logs, and selects compiled collective schedules, and the
+encode/decode round-trip keeps the format "self-describing" as the paper
+intends. ``node_type`` is derived from (rank, comm_size) inside the SPMD
+program — the hardware-side derivation the paper lists as future work is
+trivial in software, so we do it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+
+import numpy as np
+
+
+class CollType(enum.IntEnum):
+    SCAN = 0       # MPI_Scan
+    EXSCAN = 1     # MPI_Exscan
+    REDUCE = 2
+    ALLREDUCE = 3
+    BARRIER = 4
+
+
+class AlgoType(enum.IntEnum):
+    SEQUENTIAL = 0
+    SEQUENTIAL_PIPELINED = 1
+    HILLIS_STEELE = 2
+    RECURSIVE_DOUBLING = 3
+    BINOMIAL_TREE = 4
+    SKLANSKY = 5
+    INVERTIBLE_DOUBLING = 6
+
+
+class NodeType(enum.IntEnum):
+    LEAF = 0
+    INTERNAL = 1
+    ROOT = 2
+
+
+class MsgType(enum.IntEnum):
+    OFFLOAD_REQUEST = 0
+    PARTIAL = 1
+    RESULT = 2
+    ACK = 3        # the paper's back-to-back flow-control packet
+
+
+class WireOp(enum.IntEnum):
+    SUM = 0
+    PROD = 1
+    MAX = 2
+    MIN = 3
+    SSD = 4
+    FLASH = 5
+
+
+class WireDType(enum.IntEnum):
+    INT32 = 0
+    FLOAT32 = 1
+    BFLOAT16 = 2
+    FLOAT16 = 3
+    INT8 = 4
+
+
+_ALGO_NAMES = {
+    AlgoType.SEQUENTIAL: "sequential",
+    AlgoType.SEQUENTIAL_PIPELINED: "sequential_pipelined",
+    AlgoType.HILLIS_STEELE: "hillis_steele",
+    AlgoType.RECURSIVE_DOUBLING: "recursive_doubling",
+    AlgoType.BINOMIAL_TREE: "binomial_tree",
+    AlgoType.SKLANSKY: "sklansky",
+    AlgoType.INVERTIBLE_DOUBLING: "invertible_doubling",
+}
+_ALGO_IDS = {v: k for k, v in _ALGO_NAMES.items()}
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveDescriptor:
+    """Fig. 1 descriptor fields (transport framing dropped)."""
+
+    comm_id: int = 0
+    comm_size: int = 1
+    coll_type: CollType = CollType.SCAN
+    algo_type: str = "recursive_doubling"
+    rank: int = 0
+    root: int = 0
+    operation: WireOp = WireOp.SUM
+    data_type: WireDType = WireDType.FLOAT32
+    count: int = 1
+    msg_type: MsgType = MsgType.OFFLOAD_REQUEST
+
+    @property
+    def node_type(self) -> NodeType:
+        """Derived role in the binomial tree (paper left this to software)."""
+        p, j = self.comm_size, self.rank
+        if p <= 1:
+            return NodeType.ROOT
+        if j == p - 1:
+            return NodeType.ROOT
+        # leaf iff it never receives in the up-phase: lowest bit of j is 0
+        return NodeType.LEAF if (j & 1) == 0 else NodeType.INTERNAL
+
+    def encode(self) -> np.ndarray:
+        """Pack to a uint32 word vector (round-trippable, logged by launch)."""
+        return np.asarray(
+            [
+                self.comm_id,
+                self.comm_size,
+                int(self.coll_type),
+                int(_ALGO_IDS[self.algo_type]),
+                self.rank,
+                self.root,
+                int(self.operation),
+                int(self.data_type),
+                self.count,
+                int(self.msg_type),
+            ],
+            dtype=np.uint32,
+        )
+
+    @staticmethod
+    def decode(words: np.ndarray) -> "CollectiveDescriptor":
+        w = [int(v) for v in np.asarray(words, dtype=np.uint32)]
+        return CollectiveDescriptor(
+            comm_id=w[0],
+            comm_size=w[1],
+            coll_type=CollType(w[2]),
+            algo_type=_ALGO_NAMES[AlgoType(w[3])],
+            rank=w[4],
+            root=w[5],
+            operation=WireOp(w[6]),
+            data_type=WireDType(w[7]),
+            count=w[8],
+            msg_type=MsgType(w[9]),
+        )

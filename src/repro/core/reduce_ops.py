@@ -1,0 +1,73 @@
+"""The descriptor's other coll_types on the same schedule machinery:
+MPI_Reduce / MPI_Allreduce / MPI_Barrier (the paper's companion collectives,
+refs [6][7]) built from the identical backend abstraction — a reduce is a
+scan whose result is read at the root; a barrier is a zero-byte allreduce.
+
+These complete the CollectiveDescriptor's CollType coverage and give the
+benchmark suite a like-for-like latency comparison across collectives.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import algorithms as alg
+from repro.core.operators import AssocOp, get_operator
+
+PyTree = Any
+
+
+def dist_reduce(
+    x: PyTree, op: "AssocOp | str", axis_name: str, *, root: int = 0,
+    algorithm: str = "binomial_tree",
+) -> PyTree:
+    """MPI_Reduce: the full reduction lands on ``root``; other ranks receive
+    the operator identity. Runs the scan schedule (rank p-1 holds the total)
+    and ships it to root with one permute."""
+    op = get_operator(op)
+    backend = alg.SpmdBackend(axis_name)
+    p = backend.p
+    total = alg.get_algorithm(algorithm)(backend, x, op)
+    if p == 1:
+        return total
+    rank = backend.rank()
+    ident = op.identity_like(x)
+    if root == p - 1:
+        return alg._bwhere(rank == root, total, ident)
+    moved = backend.permute(total, [(p - 1, root)])
+    return alg._bwhere(rank == root, moved, ident)
+
+
+def dist_allreduce(
+    x: PyTree, op: "AssocOp | str", axis_name: str, *,
+    algorithm: str = "recursive_doubling",
+) -> PyTree:
+    """MPI_Allreduce via the butterfly (every rank ends with the total).
+
+    For ops with zero identity this is bitwise-equivalent to lax.psum's ring
+    for 'sum'; the point is schedule control (the paper's [7])."""
+    op = get_operator(op)
+    backend = alg.SpmdBackend(axis_name)
+    p = backend.p
+    if p == 1:
+        return x
+    acc_v, acc_f = x, alg._ones_flag(backend)
+    for k in range(alg.num_steps(p)):
+        d = 1 << k
+        perm = [(j, j ^ d) for j in range(p) if (j ^ d) < p]
+        rv, rf = backend.permute((acc_v, acc_f), perm)
+        acc_v, acc_f = alg._combine_lr(op, acc_v, acc_f, rv, rf)
+    return acc_v
+
+
+def dist_barrier(axis_name: str, *, algorithm: str = "recursive_doubling") -> jax.Array:
+    """MPI_Barrier (the authors' NetFPGA barrier, ref [6]): a minimal-payload
+    allreduce; returns a scalar 1.0 whose data dependency fences the program."""
+    token = jnp.ones((), jnp.float32)
+    from repro.core.operators import MAX
+
+    return dist_allreduce(token, MAX, axis_name, algorithm=algorithm)

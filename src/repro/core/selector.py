@@ -1,0 +1,119 @@
+"""Algorithm selection — the paper's "MPI runtime can make an intelligent
+selection of algorithms based on the underlying network topology".
+
+The NetFPGA exposes ``algo_type`` in the offload packet and leaves the choice
+to software. We implement the choice as an alpha-beta-gamma cost model over the
+target interconnect:
+
+    T(algo) = sum over steps of [ alpha + bytes_on_wire * beta + hops * gamma ]
+
+with per-algorithm step counts and wire patterns. Constants default to TPU
+v5e ICI (the production target); the benchmark suite re-fits alpha/beta for
+the CPU-simulated mesh so the selected crossovers can be validated in software.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict
+
+from repro.core.algorithms import ALGORITHMS, algorithm_step_count, num_steps
+from repro.core.operators import AssocOp
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkModel:
+    """Interconnect constants.
+
+    alpha: per-step launch latency (s) — collective-permute issue overhead.
+    beta: seconds per byte per link (1 / link bandwidth).
+    gamma: per-hop transit latency (s) on the torus.
+    ring: ICI axes are rings; hop distance of a stride-s permute is
+      min(s, p - s).
+    """
+
+    alpha: float = 1.0e-6
+    beta: float = 1.0 / 50.0e9     # ~50 GB/s/link ICI
+    gamma: float = 0.5e-6
+    ring: bool = True
+
+
+TPU_V5E = LinkModel()
+
+
+def _hop(stride: int, p: int, ring: bool) -> int:
+    return min(stride, p - stride) if ring else stride
+
+
+def estimate_cost(
+    algo: str, p: int, payload_bytes: int, model: LinkModel = TPU_V5E
+) -> float:
+    """Predicted completion latency of one scan with ``algo`` at size p."""
+    if p <= 1:
+        return 0.0
+    m = payload_bytes
+    a, b, g = model.alpha, model.beta, model.gamma
+    lg = num_steps(p)
+    if algo in ("sequential", "sequential_pipelined"):
+        # p-1 dependent single-hop steps. The pipelined form has identical
+        # critical path; it differs in aggregate link traffic, not latency.
+        return (p - 1) * (a + m * b + g)
+    if algo in ("hillis_steele", "invertible_doubling"):
+        return sum(
+            a + m * b + _hop(1 << k, p, model.ring) * g for k in range(lg)
+        )
+    if algo == "recursive_doubling":
+        # pairwise exchange: full duplex links carry both directions at once.
+        return sum(
+            a + m * b + _hop(1 << k, p, model.ring) * g for k in range(lg)
+        )
+    if algo == "binomial_tree":
+        up = sum(a + m * b + _hop(1 << k, p, model.ring) * g for k in range(lg))
+        down = sum(
+            a + m * b + _hop(1 << (k - 1), p, model.ring) * g
+            for k in range(lg, 0, -1)
+        )
+        return up + down
+    if algo == "sklansky":
+        # multicast: one payload injected, fan-out handled by the fabric;
+        # worst hop in step k is the half-block diameter.
+        return sum(
+            a + m * b + _hop(1 << k, p, model.ring) * g for k in range(lg)
+        )
+    raise ValueError(f"unknown algo {algo!r}")
+
+
+def cost_table(
+    p: int, payload_bytes: int, model: LinkModel = TPU_V5E
+) -> Dict[str, float]:
+    return {
+        name: estimate_cost(name, p, payload_bytes, model)
+        for name in ALGORITHMS
+    }
+
+
+def select_algorithm(
+    p: int,
+    payload_bytes: int,
+    op: AssocOp,
+    model: LinkModel = TPU_V5E,
+) -> str:
+    """Pick the cheapest *applicable* schedule.
+
+    Applicability: invertible_doubling needs op.inverse (+ commutativity for
+    its exscan payoff); everything else is generic. Ties break toward fewer
+    steps, then lexicographic for determinism.
+    """
+    costs = cost_table(p, payload_bytes, model)
+    if op.inverse is None or not op.commutative:
+        costs.pop("invertible_doubling", None)
+    # sequential's O(p) critical path makes it a scalability trap (the paper's
+    # own conclusion); keep it out of auto-selection beyond tiny axes.
+    if p > 8:
+        costs.pop("sequential", None)
+        costs.pop("sequential_pipelined", None)
+    return min(
+        costs.items(),
+        key=lambda kv: (kv[1], algorithm_step_count(kv[0], p), kv[0]),
+    )[0]

@@ -1,0 +1,1 @@
+from repro.data.pipeline import DataConfig, batches, document_stream, pack_documents

@@ -1,0 +1,1 @@
+from repro.kernels.ops import flash_attention, prefix_scan, ssd_scan

@@ -1,0 +1,124 @@
+"""Flash-attention Pallas kernel (TPU target; interpret-validated on CPU).
+
+Online-softmax attention over (BH, S, D) operands with VMEM-blocked tiles:
+grid (batch*heads, q_blocks, kv_blocks), kv innermost (sequential on the
+TensorCore) so the running (m, l, acc) statistics live in VMEM scratch across
+kv steps — the same carry-in-scratch pattern as the prefix-scan kernel, which
+is exactly the flash recurrence: an associative (max, sum, weighted-sum)
+scan over KV blocks (core.operators.make_flash_op is its algebra).
+
+Causal and sliding-window masks are computed from grid indices; ``q_offset``
+supports decode/sharded-query positions. Q/KV tiles are MXU-aligned
+(multiples of 128 on the matmul dims via the ops.py wrapper's padding).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, block_q: int, block_kv: int, nkv: int, causal: bool,
+    window: int, q_offset: int, kv_len: int, scale: float,
+):
+    jq = pl.program_id(1)
+    jk = pl.program_id(2)
+
+    @pl.when(jk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                                   # (bq, D)
+    k = k_ref[0]                                   # (bkv, D)
+    v = v_ref[0]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale                                      # (bq, bkv)
+
+    qpos = q_offset + jq * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_kv), 0
+    )
+    kpos = jk * block_kv + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_kv), 1
+    )
+    mask = kpos < kv_len
+    if causal:
+        mask = mask & (qpos >= kpos)
+    if window > 0:
+        mask = mask & (qpos - kpos < window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_old = m_ref[:, 0]                            # (bq,)
+    m_new = jnp.maximum(m_old, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_old - m_new)
+    l_new = l_ref[:, 0] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[:, 0] = m_new
+    l_ref[:, 0] = l_new
+
+    @pl.when(jk == nkv - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[:, 0], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,          # (BH, Sq, D)
+    k: jax.Array,          # (BH, Skv, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    kv_len: int | None = None,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    BH, Sq, D = q.shape
+    _, Skv, _ = k.shape
+    if kv_len is None:
+        kv_len = Skv
+    block_q = min(block_q, Sq)
+    block_kv = min(block_kv, Skv)
+    assert Sq % block_q == 0 and Skv % block_kv == 0, (q.shape, k.shape)
+    nkv = Skv // block_kv
+    grid = (BH, Sq // block_q, nkv)
+    kernel = functools.partial(
+        _flash_kernel,
+        block_q=block_q, block_kv=block_kv, nkv=nkv,
+        causal=causal, window=window, q_offset=q_offset,
+        kv_len=kv_len, scale=1.0 / (D ** 0.5),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_kv, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_kv, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 128), jnp.float32),   # running max
+            pltpu.VMEM((block_q, 128), jnp.float32),   # running denom
+            pltpu.VMEM((block_q, D), jnp.float32),     # weighted accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

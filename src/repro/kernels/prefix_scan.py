@@ -1,0 +1,96 @@
+"""Blocked prefix-scan Pallas kernel (the on-chip half of the paper's scan).
+
+The paper offloads the *inter-node* scan to the NIC; the *intra-node* combine
+ran in the NetFPGA datapath at line rate. On TPU the intra-device analogue is
+this kernel: a VMEM-blocked scan along the last axis that streams HBM tiles
+through VMEM exactly once, carrying the running prefix in a VMEM scratch
+across sequential grid steps (the TPU grid's innermost dimension executes in
+order on the TensorCore, so the scratch acts as the NIC's "partial sum
+register").
+
+Layout: rows are blocked to sublane multiples (8 for f32), the scan axis to
+lane multiples (128). Each grid step loads one (BR, BL) tile, does an in-tile
+associative scan on the VPU, folds in the carry, and updates the carry with
+the tile's last column — one HBM read + one HBM write per element, the memory
+roofline for a scan.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_IDENT = {
+    "add": lambda dt: jnp.zeros((), dt),
+    "max": lambda dt: (
+        jnp.array(jnp.finfo(dt).min, dt)
+        if jnp.issubdtype(dt, jnp.floating)
+        else jnp.array(jnp.iinfo(dt).min, dt)
+    ),
+    "mul": lambda dt: jnp.ones((), dt),
+}
+
+_COMBINE = {
+    "add": jnp.add,
+    "max": jnp.maximum,
+    "mul": jnp.multiply,
+}
+
+
+def _scan_kernel(x_ref, o_ref, carry_ref, *, op: str):
+    """One (BR, BL) tile: local scan + carry fold, carry update."""
+    j = pl.program_id(1)
+    combine = _COMBINE[op]
+    ident = _IDENT[op](x_ref.dtype)
+
+    @pl.when(j == 0)
+    def _init():
+        carry_ref[...] = jnp.full_like(carry_ref, ident)
+
+    x = x_ref[...]
+    local = lax.associative_scan(combine, x, axis=1)
+    carry = carry_ref[:, :1]  # (BR, 1) broadcasts over the tile
+    out = combine(carry, local)
+    o_ref[...] = out
+    carry_ref[:, :1] = out[:, -1:]
+
+
+def prefix_scan_pallas(
+    x: jax.Array,
+    *,
+    op: str = "add",
+    block_rows: int = 256,
+    block_len: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Inclusive scan along axis -1 of a 2D (R, L) array.
+
+    R must divide by block_rows and L by block_len (ops.py pads).
+    """
+    if x.ndim != 2:
+        raise ValueError(f"expected 2D (rows, length), got {x.shape}")
+    rows, length = x.shape
+    block_rows = min(block_rows, rows)
+    block_len = min(block_len, length)
+    if rows % block_rows or length % block_len:
+        raise ValueError(
+            f"shape {x.shape} not divisible by blocks ({block_rows},{block_len})"
+        )
+    grid = (rows // block_rows, length // block_len)
+    kernel = functools.partial(_scan_kernel, op=op)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, block_len), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, block_len), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_rows, 128), x.dtype)],
+        interpret=interpret,
+    )(x)

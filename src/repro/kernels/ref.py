@@ -1,0 +1,93 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the semantic ground truth: kernel tests sweep shapes/dtypes and
+assert_allclose against these, and the CPU runtime path (this container) uses
+them directly so compiled programs have kernel-equivalent FLOPs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def ref_prefix_scan(x: jax.Array, op: str = "add", *, exclusive: bool = False) -> jax.Array:
+    """Prefix scan along the LAST axis. op in {add, max, mul}."""
+    if op == "add":
+        out = jnp.cumsum(x, axis=-1)
+        ident = 0
+    elif op == "max":
+        out = lax.cummax(x, axis=x.ndim - 1)
+        ident = (
+            jnp.finfo(x.dtype).min
+            if jnp.issubdtype(x.dtype, jnp.floating)
+            else jnp.iinfo(x.dtype).min
+        )
+    elif op == "mul":
+        out = jnp.cumprod(x, axis=-1)
+        ident = 1
+    else:
+        raise ValueError(f"unknown op {op!r}")
+    if exclusive:
+        pad = jnp.full_like(x[..., :1], ident)
+        out = jnp.concatenate([pad, out[..., :-1]], axis=-1)
+    return out
+
+
+def ref_ssd_scan(
+    a: jax.Array, b: jax.Array, h0: jax.Array | None = None
+) -> tuple[jax.Array, jax.Array]:
+    """Diagonal linear recurrence h_t = a_t * h_{t-1} + b_t along axis -2.
+
+    a, b: (..., T, D); h0: (..., D) initial state (zeros if None).
+    Returns (h, h_last): the full state trajectory and the final state.
+    """
+    if h0 is None:
+        h0 = jnp.zeros(a.shape[:-2] + a.shape[-1:], dtype=b.dtype)
+
+    def combine(left, right):
+        al, bl = left
+        ar, br = right
+        return (ar * al, ar * bl + br)
+
+    A, B = lax.associative_scan(combine, (a, b), axis=a.ndim - 2)
+    # fold in the initial state: h_t = B_t + A_t * h0
+    h = B + A * h0[..., None, :]
+    return h, h[..., -1, :]
+
+
+def ref_chunk_state(
+    a_cum_last: jax.Array, x_decay: jax.Array, B_blk: jax.Array
+) -> jax.Array:
+    """Oracle for the SSD chunk-state matmul: state = (decayed x)^T @ B.
+
+    x_decay: (..., T, P) inputs pre-scaled by a_cum_last/a_cum_t;
+    B_blk: (..., T, N). Returns (..., P, N).
+    """
+    del a_cum_last
+    return jnp.einsum("...tp,...tn->...pn", x_decay, B_blk)
+
+
+def ref_flash_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    *, causal: bool = True, window: int = 0, q_offset: int = 0,
+    kv_len: int | None = None,
+) -> jax.Array:
+    """Plain softmax attention oracle for the flash kernel. (BH, S, D)."""
+    BH, Sq, D = q.shape
+    _, Skv, _ = k.shape
+    if kv_len is None:
+        kv_len = Skv
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (D ** 0.5)
+    qpos = q_offset + jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    mask = kpos < kv_len
+    if causal:
+        mask = mask & (qpos >= kpos)
+    if window > 0:
+        mask = mask & (qpos - kpos < window)
+    s = jnp.where(mask[None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", w, v.astype(jnp.float32)).astype(q.dtype)

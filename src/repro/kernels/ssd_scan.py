@@ -1,0 +1,91 @@
+"""Chunked diagonal-SSM scan Pallas kernel (Mamba2 SSD intra-chunk engine).
+
+Computes h_t = a_t * h_{t-1} + b_t along time for (B, T, D) operands, blocked
+over (batch-rows, time). The (decay-product, state) pair carry lives in VMEM
+scratch across the sequential time-block grid steps — the same
+carry-in-a-register structure the NetFPGA used to stream partial sums, and the
+intra-device complement of ``core.dist_scan``'s inter-device SSD operator: the
+model layer computes chunk-local trajectories with this kernel, then stitches
+chunks across devices with the offloaded scan collective.
+
+Time is mapped to the TPU *lane* axis within a tile (contiguous, 128-aligned)
+and the (batch×feature) rows to sublanes; the in-tile pair scan is a
+log2(tile) shift/multiply ladder on the VPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _pair_combine(left, right):
+    al, bl = left
+    ar, br = right
+    return ar * al, ar * bl + br
+
+
+def _ssd_kernel(a_ref, b_ref, h_ref, acc_ref, *, nblocks: int):
+    """One (BR, BT) tile of rows x time. acc holds (a_prod, h) carries."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[0, ...] = jnp.ones_like(acc_ref[0])
+        acc_ref[1, ...] = jnp.zeros_like(acc_ref[1])
+
+    a = a_ref[...]
+    b = b_ref[...]
+    # In-tile inclusive pair scan along time (axis 1).
+    A, B = lax.associative_scan(_pair_combine, (a, b), axis=1)
+    a_in = acc_ref[0, :, :1]
+    h_in = acc_ref[1, :, :1]
+    # Fold in carry: h_t = B_t + A_t * h_in ; decay product also accumulates.
+    h = B + A * h_in
+    h_ref[...] = h
+    acc_ref[0, :, :1] = A[:, -1:] * a_in
+    acc_ref[1, :, :1] = h[:, -1:]
+    del nblocks
+
+
+def ssd_scan_pallas(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    block_rows: int = 256,
+    block_time: int = 512,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Diagonal recurrence along axis -1 of 2D (rows, T) operands.
+
+    Returns (h, h_last). rows = flattened (batch x feature); callers reshape.
+    """
+    if a.shape != b.shape or a.ndim != 2:
+        raise ValueError(f"expected matching 2D shapes, got {a.shape} {b.shape}")
+    rows, t = a.shape
+    block_rows = min(block_rows, rows)
+    block_time = min(block_time, t)
+    if rows % block_rows or t % block_time:
+        raise ValueError(
+            f"shape {a.shape} not divisible by blocks ({block_rows},{block_time})"
+        )
+    grid = (rows // block_rows, t // block_time)
+    kernel = functools.partial(_ssd_kernel, nblocks=grid[1])
+    h = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, block_time), lambda i, j: (i, j)),
+            pl.BlockSpec((block_rows, block_time), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, block_time), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(a.shape, b.dtype),
+        scratch_shapes=[pltpu.VMEM((2, block_rows, 128), b.dtype)],
+        interpret=interpret,
+    )(a, b)
+    return h, h[:, -1]

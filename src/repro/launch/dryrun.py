@@ -1,0 +1,171 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This is the proof that the distribution config is coherent without real
+hardware: 512 placeholder host devices stand in for 2 pods x 256 chips, the
+full production sharding lowers, XLA compiles it, and we record
+memory_analysis (fits-per-device), cost_analysis (FLOPs/bytes) and the
+collective schedule (parsed from optimized HLO) into a JSON artifact per cell.
+
+Usage:
+  python -m repro.launch.dryrun --arch mamba2-130m --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--skip-existing]
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro import perf_flags  # noqa: E402
+from repro.configs import SHAPES, applicable_shapes, get_config  # noqa: E402
+from repro.configs.base import ARCH_IDS  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.steps import (  # noqa: E402
+    build_decode_step,
+    build_prefill_step,
+    build_train_step,
+)
+from repro.models import build_model, input_specs  # noqa: E402
+from repro.roofline.analysis import analyze_hlo, model_flops  # noqa: E402
+from repro.sharding.specs import make_topology, use_topology  # noqa: E402
+
+ART_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "artifacts" / "dryrun"
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: Path,
+             tag: str = "") -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    topo = make_topology(mesh)
+    n_chips = mesh.devices.size
+    api = build_model(cfg)
+
+    t0 = time.time()
+    with use_topology(topo):
+        if shape.kind == "train":
+            step, shapes, _ = build_train_step(api, topo, shape)
+            lowered = step.lower(*shapes[:3])
+        elif shape.kind == "prefill":
+            step, shapes, _ = build_prefill_step(api, topo, shape)
+            lowered = step.lower(*shapes)
+        else:  # decode
+            step, (pshapes, bshapes), _ = build_decode_step(api, topo, shape)
+            lowered = step.lower(
+                pshapes, bshapes["token"], bshapes["cache"], bshapes["cache_len"]
+            )
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    roof, coll = analyze_hlo(hlo, n_chips, default_group=topo.model_size)
+    mf = model_flops(cfg, shape, shape.kind)
+    hlo_flops_total = roof.flops_per_device * n_chips
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "n_chips": n_chips,
+        "kind": shape.kind,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_size_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_size_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_size_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_size_bytes": getattr(
+                mem, "generated_code_size_in_bytes", None
+            ),
+        },
+        "roofline": roof.as_dict(),
+        "collectives": {
+            "counts": coll.coll_counts,
+            "wire_bytes": coll.coll_bytes,
+        },
+        "raw_cost_analysis": {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        },
+        "model_flops_total": mf,
+        "useful_flops_ratio": (mf / hlo_flops_total) if hlo_flops_total else None,
+        "params_total": cfg.param_count(),
+        "params_active": cfg.active_param_count(),
+    }
+    record["opt"] = dataclasses_asdict(perf_flags.FLAGS)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    out_path = out_dir / f"{arch}__{shape_name}__{mesh_kind}{suffix}.json"
+    out_path.write_text(json.dumps(record, indent=2))
+    return record
+
+
+def dataclasses_asdict(obj):
+    import dataclasses
+    return dataclasses.asdict(obj)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str)
+    ap.add_argument("--shape", type=str)
+    ap.add_argument("--mesh", type=str, default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--out", type=str, default=str(ART_DIR))
+    ap.add_argument("--opt", type=str, default="",
+                    help="perf flags, e.g. seq_shard_attn=1,remat_policy=save_block_outputs")
+    ap.add_argument("--tag", type=str, default="",
+                    help="artifact filename suffix for perf iterations")
+    args = ap.parse_args()
+    perf_flags.parse_opt_string(args.opt)
+    out_dir = Path(args.out)
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in applicable_shapes(get_config(arch)):
+                for m in meshes:
+                    cells.append((arch, shape, m))
+    else:
+        cells = [(args.arch, args.shape, m) for m in meshes]
+
+    failures = 0
+    for arch, shape, m in cells:
+        tag = f"{arch} x {shape} x {m}"
+        path = out_dir / f"{arch}__{shape}__{m}.json"
+        if args.skip_existing and path.exists():
+            print(f"[skip] {tag}")
+            continue
+        try:
+            rec = run_cell(arch, shape, m, out_dir, tag=args.tag)
+            r = rec["roofline"]
+            print(
+                f"[ok]   {tag}: compile={rec['compile_s']}s "
+                f"flops/dev={r['flops_per_device']:.3e} "
+                f"bytes/dev={r['bytes_per_device']:.3e} "
+                f"coll={r['collective_bytes_per_device']:.3e}B "
+                f"bottleneck={r['bottleneck']}"
+            )
+        except Exception:
+            failures += 1
+            print(f"[FAIL] {tag}")
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Production mesh definitions.
+
+A v5e pod is 16x16 = 256 chips; the multi-pod config stacks 2 pods on a
+'pod' axis (DCN-connected). Defined as FUNCTIONS so importing this module
+never touches jax device state (device count is locked at first use).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.sharding.specs import Topology, make_topology
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh():
+    """Whatever devices exist, all on the data axis (CPU tests)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def production_topology(*, multi_pod: bool = False) -> Topology:
+    return make_topology(make_production_mesh(multi_pod=multi_pod))

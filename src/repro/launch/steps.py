@@ -1,0 +1,134 @@
+"""Step builders: jitted train_step / prefill / decode with full shardings.
+
+These are shared by the real launchers (train.py / serve.py) and the dry-run:
+the dry-run lowers exactly what the launcher would execute.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import ModelApi, input_specs
+from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
+from repro.sharding.rules import batch_specs, cache_specs, param_specs, zero1_specs
+from repro.sharding.specs import Topology
+
+
+def _sharding(topo: Topology, spec_tree):
+    if topo.mesh is None:
+        return None
+    return jax.tree.map(
+        lambda s: NamedSharding(topo.mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec),
+    )
+
+
+def build_train_step(
+    api: ModelApi,
+    topo: Topology,
+    shape: ShapeConfig,
+    opt_cfg: Optional[AdamWConfig] = None,
+):
+    """Returns (jitted_step, arg_shapes, shardings) for one optimizer step."""
+    opt_cfg = opt_cfg or AdamWConfig()
+    cfg = api.cfg
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(api.loss, has_aux=True)(
+            params, batch
+        )
+        new_params, new_opt, stats = adamw_update(
+            grads, opt_state, params, opt_cfg
+        )
+        out = {"loss": loss, **metrics, **stats}
+        return new_params, new_opt, out
+
+    pshapes = api.param_shapes()
+    oshapes = jax.eval_shape(init_opt_state, pshapes)
+    bshapes = input_specs(cfg, shape)
+
+    pspec = param_specs(pshapes, cfg, topo)
+    ospec = {
+        "m": zero1_specs(pspec, pshapes, topo),
+        "v": zero1_specs(pspec, pshapes, topo),
+        "master": zero1_specs(pspec, pshapes, topo),
+        "count": jax.sharding.PartitionSpec(),
+    }
+    bspec = batch_specs(bshapes, topo)
+
+    jitted = jax.jit(
+        train_step,
+        in_shardings=(
+            _sharding(topo, pspec),
+            _sharding(topo, ospec),
+            _sharding(topo, bspec),
+        ),
+        out_shardings=(
+            _sharding(topo, pspec),
+            _sharding(topo, ospec),
+            None,
+        ),
+        donate_argnums=(0, 1),
+    )
+    return jitted, (pshapes, oshapes, bshapes), (pspec, ospec, bspec)
+
+
+def build_prefill_step(api: ModelApi, topo: Topology, shape: ShapeConfig):
+    cfg = api.cfg
+    bshapes = input_specs(cfg, shape)
+    pshapes = api.param_shapes()
+    pspec = param_specs(pshapes, cfg, topo)
+    bspec = batch_specs(bshapes, topo)
+
+    def prefill(params, batch):
+        return api.prefill(params, batch)
+
+    # output cache sharding: same rules as decode caches
+    cshapes = jax.eval_shape(
+        lambda p, b: api.prefill(p, b)[1], pshapes, bshapes
+    )
+    cspec = cache_specs(cshapes, cfg, topo)
+    lspec = batch_specs(
+        jax.eval_shape(lambda p, b: api.prefill(p, b)[0], pshapes, bshapes),
+        topo,
+    )
+    jitted = jax.jit(
+        prefill,
+        in_shardings=(_sharding(topo, pspec), _sharding(topo, bspec)),
+        out_shardings=(_sharding(topo, lspec), _sharding(topo, cspec)),
+    )
+    return jitted, (pshapes, bshapes), (pspec, bspec)
+
+
+def build_decode_step(api: ModelApi, topo: Topology, shape: ShapeConfig):
+    cfg = api.cfg
+    bshapes = input_specs(cfg, shape)  # {token, cache, cache_len}
+    pshapes = api.param_shapes()
+    pspec = param_specs(pshapes, cfg, topo)
+    cspec = cache_specs(bshapes["cache"], cfg, topo)
+    tspec = batch_specs(bshapes["token"], topo)
+
+    def decode(params, token, cache, cache_len):
+        return api.decode_step(params, token, cache, cache_len)
+
+    jitted = jax.jit(
+        decode,
+        in_shardings=(
+            _sharding(topo, pspec),
+            _sharding(topo, tspec),
+            _sharding(topo, cspec),
+            None,
+        ),
+        out_shardings=(
+            _sharding(topo, tspec),
+            _sharding(topo, cspec),
+        ),
+        donate_argnums=(2,),
+    )
+    return jitted, (pshapes, bshapes), (pspec, cspec)

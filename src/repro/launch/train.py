@@ -1,0 +1,80 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch mamba2-130m \
+        --steps 100 --batch 8 --seq 128 [--reduced] [--ckpt-dir /tmp/ckpt]
+
+On a real pod this runs under one process per host with jax.distributed
+initialized by the cluster runtime; the mesh/topology code is identical.
+On this container it runs the reduced config on the local device.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro import perf_flags
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.data.pipeline import DataConfig, batches
+from repro.models import build_model
+from repro.optim.adamw import AdamWConfig
+from repro.runtime.fault import FailureInjector
+from repro.runtime.train_loop import Trainer, TrainerConfig
+from repro.sharding.specs import Topology, make_topology
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--mesh", choices=["none", "production"], default="none")
+    ap.add_argument("--fail-at", type=int, nargs="*", default=[],
+                    help="inject simulated failures at these steps")
+    ap.add_argument("--opt", default="", help="perf flags k=v,...")
+    args = ap.parse_args()
+    perf_flags.parse_opt_string(args.opt)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    api = build_model(cfg)
+    if args.mesh == "production":
+        from repro.launch.mesh import make_production_mesh
+        topo = make_topology(make_production_mesh())
+    else:
+        topo = Topology(mesh=None)
+
+    shape = ShapeConfig("cli", args.seq, args.batch, "train")
+    data = batches(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq,
+        global_batch=args.batch,
+    ))
+    tr = Trainer(
+        api, topo, shape, data,
+        TrainerConfig(ckpt_dir=args.ckpt_dir, ckpt_every=25),
+        AdamWConfig(lr=args.lr, warmup_steps=10, total_steps=args.steps),
+        injector=FailureInjector(fail_at=tuple(args.fail_at)),
+    )
+    params, opt = tr.init_state()
+    start, params, opt = tr.maybe_restore(params, opt)
+    if start:
+        print(f"resumed from checkpoint at step {start}")
+    params, opt, hist = tr.run(params, opt, args.steps, start_step=start)
+    for h in hist[:: max(1, len(hist) // 12)]:
+        print(f"step {h['step']:5d} loss {h['loss']:.4f} "
+              f"gnorm {h['grad_norm']:.2f} {h['step_time_s']*1e3:.0f}ms")
+    print(f"final loss: {hist[-1]['loss']:.4f}; "
+          f"remesh events: {len(tr.remesh_events)}; "
+          f"straggler flags: {len(tr.straggler.events)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.models.model import ModelApi, build_model, input_specs
+
+__all__ = ["ModelApi", "build_model", "input_specs"]

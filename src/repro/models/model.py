@@ -1,0 +1,116 @@
+"""Unified model API: build_model(cfg) -> ModelApi.
+
+One object per architecture exposing init / loss / prefill / decode_step /
+init_cache / input_specs, so the launcher, trainer, server, dry-run and tests
+all speak one interface regardless of family.
+
+``input_specs`` returns ShapeDtypeStructs (weak-type-correct, shardable, no
+device allocation) — the dry-run lowers against these directly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec as ED
+from repro.models import transformer as T
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    cfg: ModelConfig
+    init: Callable[[jax.Array], Params]
+    loss: Callable[[Params, Dict[str, jax.Array]], Any]
+    forward: Callable[..., Any]
+    prefill: Callable[..., Any]
+    decode_step: Callable[..., Any]
+    init_cache: Callable[[int, int], Params]
+
+    def param_shapes(self) -> Params:
+        return jax.eval_shape(self.init, jax.random.key(0))
+
+
+def build_model(cfg: ModelConfig) -> ModelApi:
+    if cfg.family == "audio":
+        return ModelApi(
+            cfg=cfg,
+            init=lambda key: ED.init_encdec(key, cfg),
+            loss=lambda p, b: ED.encdec_loss(p, b, cfg),
+            forward=lambda p, b: ED.encdec_forward(
+                p, b["tokens"], b["frames"], cfg
+            ),
+            prefill=lambda p, b: ED.encdec_prefill(
+                p, b["tokens"], b["frames"], cfg
+            ),
+            decode_step=lambda p, tok, cache, clen: ED.encdec_decode_step(
+                p, tok, cache, clen, cfg
+            ),
+            init_cache=lambda batch, seq: T.init_decode_cache(cfg, batch, seq),
+        )
+
+    return ModelApi(
+        cfg=cfg,
+        init=lambda key: T.init_lm(key, cfg),
+        loss=lambda p, b: T.lm_loss(p, b, cfg),
+        forward=lambda p, b: T.lm_forward(
+            p,
+            b["tokens"],
+            cfg,
+            vision_embeds=b.get("vision_embeds"),
+            positions3=b.get("positions3"),
+        ),
+        prefill=lambda p, b: T.lm_prefill(
+            p,
+            b["tokens"],
+            cfg,
+            vision_embeds=b.get("vision_embeds"),
+            positions3=b.get("positions3"),
+        ),
+        decode_step=lambda p, tok, cache, clen: T.lm_decode_step(
+            p, tok, cache, clen, cfg
+        ),
+        init_cache=lambda batch, seq: T.init_decode_cache(cfg, batch, seq),
+    )
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of a given shape.
+
+    train/prefill: token batches (+ stub frontend embeddings for audio/vlm).
+    decode: one new token + the full decode cache + cache_len scalar.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    act_dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    i32 = jnp.int32
+    d = cfg.d_model
+
+    if shape.kind in ("train", "prefill"):
+        batch: Dict[str, Any] = {"tokens": _sds((B, S), i32)}
+        if shape.kind == "train":
+            batch["labels"] = _sds((B, S), i32)
+        if cfg.family == "audio":
+            batch["frames"] = _sds((B, cfg.encoder_frames, d), act_dt)
+        if cfg.family == "vlm":
+            batch["vision_embeds"] = _sds((B, cfg.vision_patches, d), act_dt)
+            batch["positions3"] = _sds((B, S, 3), i32)
+        return batch
+
+    # decode: cache laid out for context length S
+    api = build_model(cfg)
+    cache = jax.eval_shape(lambda: api.init_cache(B, S))
+    return {
+        "token": _sds((B, 1), i32),
+        "cache": cache,
+        "cache_len": _sds((), i32),
+    }

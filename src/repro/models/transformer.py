@@ -1,0 +1,472 @@
+"""Decoder-only LM assembly: dense / MoE / SSM / hybrid / VLM families.
+
+Layer stacks lower as ``lax.scan`` over stacked params (compile-tractable at
+62 layers on a 1-core container; identical HLO shape on TPU). Heterogeneous
+patterns are handled without breaking the scan:
+  * gemma3's 5:1 local:global attention — a per-layer scanned flag array
+    selects the sliding-window width inside the layer body;
+  * jamba's 1-attention-per-8 + MoE-every-2 — the scan runs over *periods*
+    whose 8 sublayers are unrolled with distinct param subtrees.
+
+Every layer body is rematerialized (jax.checkpoint) for training.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro import perf_flags
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import moe as MOE
+from repro.sharding import current_topology, shard
+
+Params = Dict[str, Any]
+
+
+def _remat(fn):
+    """Layer remat honoring the perf flag: save_block_outputs keeps the
+    post-TP-collective tensors (named 'block_out') so backward does not
+    re-run forward all-reduces."""
+    if perf_flags.FLAGS.remat_policy == "save_block_outputs":
+        policy = jax.checkpoint_policies.save_only_these_names("block_out")
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def _name_out(x):
+    if perf_flags.FLAGS.remat_policy == "save_block_outputs":
+        from jax.ad_checkpoint import checkpoint_name
+        return checkpoint_name(x, "block_out")
+    return x
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key, cfg, kind: str, use_moe: bool, dtype) -> Params:
+    """kind: 'attn' | 'mamba'."""
+    k1, k2 = jax.random.split(key)
+    p: Params = {"norm1": L.init_norm(cfg.d_model, cfg.norm, dtype)}
+    if kind == "attn":
+        p["attn"] = L.init_attention(k1, cfg, dtype)
+    else:
+        p["mamba"] = M.init_mamba(k1, cfg, dtype)
+    if use_moe:
+        p["norm2"] = L.init_norm(cfg.d_model, cfg.norm, dtype)
+        p["moe"] = MOE.init_moe(k2, cfg, dtype)
+    elif cfg.d_ff > 0:
+        p["norm2"] = L.init_norm(cfg.d_model, cfg.norm, dtype)
+        p["mlp"] = L.init_mlp(k2, cfg.d_model, cfg.d_ff, dtype, cfg.gated_mlp)
+    return p
+
+
+def init_lm(key, cfg) -> Params:
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    Vp, d = cfg.padded_vocab, cfg.d_model
+    kE, kB, kH, kO = jax.random.split(key, 4)
+    params: Params = {
+        "embed": jax.random.normal(kE, (Vp, d), dtype) * 0.02,
+        "final_norm": L.init_norm(d, cfg.norm, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.random.normal(kH, (d, Vp), dtype) / math.sqrt(d)
+
+    Lnum = cfg.num_layers
+    if cfg.family == "hybrid":
+        period = cfg.attn_every or 8
+        n_periods = Lnum // period
+        keys = jax.random.split(kB, n_periods)
+
+        def init_period(k):
+            ks = jax.random.split(k, period)
+            sub = {}
+            for i in range(period):
+                kind = "attn" if i == 0 else "mamba"
+                use_moe = cfg.moe_num_experts > 0 and (i % cfg.moe_every == 1)
+                sub[f"sub_{i}"] = _init_block(ks[i], cfg, kind, use_moe, dtype)
+            return sub
+
+        params["periods"] = jax.vmap(init_period)(keys)
+        return params
+
+    kind = "mamba" if cfg.family == "ssm" else "attn"
+    use_moe = cfg.moe_num_experts > 0 and cfg.family in ("moe",)
+    keys = jax.random.split(kB, Lnum)
+    params["blocks"] = jax.vmap(
+        lambda k: _init_block(k, cfg, kind, use_moe, dtype)
+    )(keys)
+    return params
+
+
+def _layer_flags(cfg) -> jnp.ndarray:
+    """Per-layer is_global flags (gemma3's r local : 1 global pattern).
+
+    Derived from config, NOT stored in params (non-trainable ints would
+    break grad and the optimizer)."""
+    if cfg.local_global_ratio:
+        r = cfg.local_global_ratio
+        return jnp.array(
+            [1 if (i % (r + 1)) == r else 0 for i in range(cfg.num_layers)],
+            jnp.int32,
+        )
+    return jnp.zeros((cfg.num_layers,), jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# blocks (forward)
+# ---------------------------------------------------------------------------
+
+
+def _ffn(p: Params, x: jax.Array, cfg):
+    if "moe" in p:
+        y, aux = MOE.moe_block(p["moe"], x, cfg, act=cfg.act)
+        return y, aux["load_balance"], aux["router_z"]
+    return L.mlp_block(p["mlp"], x, cfg.act), jnp.zeros(()), jnp.zeros(())
+
+
+def _maybe_ffn(p: Params, x: jax.Array, cfg):
+    """Norm + FFN residual, skipped entirely for FFN-less blocks (mamba2)."""
+    if "moe" not in p and "mlp" not in p:
+        return x, jnp.zeros(()), jnp.zeros(())
+    h = L.norm(p["norm2"], x, cfg.norm)
+    f, lb, z = _ffn(p, h, cfg)
+    return x + _name_out(f), lb, z
+
+
+def _attn_block_fwd(
+    p, x, positions, cfg, window, positions3=None, causal=True, collect=False
+):
+    h = L.norm(p["norm1"], x, cfg.norm)
+    a = L.attention_block(
+        p["attn"], h, positions, cfg,
+        causal=causal, window=window, positions3=positions3,
+        return_kv=collect,
+    )
+    kv = None
+    if collect:
+        a, kv = a
+    x = x + _name_out(a)
+    x, lb, z = _maybe_ffn(p, x, cfg)
+    return x, lb, z, kv
+
+
+def _mamba_block_fwd(p, x, cfg, seq_parallel):
+    h = L.norm(p["norm1"], x, cfg.norm)
+    a, cache = M.mamba_mixer(p["mamba"], h, cfg, seq_parallel=seq_parallel)
+    x = x + _name_out(a)
+    x, lb, z = _maybe_ffn(p, x, cfg)
+    return x, lb, z, cache
+
+
+# ---------------------------------------------------------------------------
+# full forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _window_for(cfg, is_global):
+    if cfg.local_global_ratio:
+        return jnp.where(is_global > 0, 0, cfg.sliding_window)
+    return cfg.sliding_window
+
+
+def lm_forward(
+    params: Params,
+    tokens: jax.Array,
+    cfg,
+    *,
+    vision_embeds: Optional[jax.Array] = None,
+    positions3: Optional[jax.Array] = None,
+    collect_cache: bool = False,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """tokens (B, S) -> logits (B, S, Vp). Returns (logits, aux)."""
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    x = shard(x, "batch", None, None)
+    if vision_embeds is not None:
+        nv = vision_embeds.shape[1]
+        x = lax.dynamic_update_slice(
+            x, vision_embeds.astype(x.dtype), (0, 0, 0)
+        )
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    lb_sum = jnp.zeros(())
+    z_sum = jnp.zeros(())
+
+    seq_par = cfg.family == "ssm"  # mamba2: sequence-parallel SSD
+
+    caches = None
+    if cfg.family == "hybrid":
+        period = cfg.attn_every or 8
+        sub_keys = sorted(
+            params["periods"].keys(), key=lambda s: int(s.split("_")[1])
+        )
+
+        def period_fwd_inner(x, pp):
+            lbs = jnp.zeros(())
+            zs = jnp.zeros(())
+            kv = None
+            mcaches = []
+            for i, sk in enumerate(sub_keys):
+                p = pp[sk]
+                if i == 0:
+                    x, lb, z, kv = _attn_block_fwd(
+                        p, x, positions, cfg, cfg.sliding_window,
+                        collect=collect_cache,
+                    )
+                else:
+                    x, lb, z, mc = _mamba_block_fwd(p, x, cfg, False)
+                    mcaches.append(mc)
+                lbs, zs = lbs + lb, zs + z
+            cache = None
+            if collect_cache:
+                cache = {
+                    "k": kv[0],
+                    "v": kv[1],
+                    "mamba": jax.tree.map(lambda *a: jnp.stack(a, 0), *mcaches),
+                }
+            return x, (lbs, zs), cache
+
+        period_fwd = _remat(period_fwd_inner)
+
+        def scan_body(carry, pp):
+            x, lbs, zs = carry
+            x, (lb, z), cache = period_fwd(x, pp)
+            return (x, lbs + lb, zs + z), cache
+
+        (x, lb_sum, z_sum), caches = lax.scan(
+            scan_body, (x, lb_sum, z_sum), params["periods"]
+        )
+    else:
+        blocks = params["blocks"]
+        flags = _layer_flags(cfg)
+
+        if cfg.family == "ssm":
+
+            def layer_fwd_inner(x, p, flag):
+                x, lb, z, mc = _mamba_block_fwd(p, x, cfg, seq_par)
+                return x, lb, z, ({"mamba": mc} if collect_cache else None)
+        else:
+
+            def layer_fwd_inner(x, p, flag):
+                window = _window_for(cfg, flag)
+                x, lb, z, kv = _attn_block_fwd(
+                    p, x, positions, cfg, window, positions3=positions3,
+                    collect=collect_cache,
+                )
+                return x, lb, z, ({"k": kv[0], "v": kv[1]} if collect_cache else None)
+
+        layer_fwd = _remat(layer_fwd_inner)
+
+        def scan_body(carry, inp):
+            x, lbs, zs = carry
+            p, flag = inp
+            x, lb, z, cache = layer_fwd(x, p, flag)
+            return (x, lbs + lb, zs + z), cache
+
+        (x, lb_sum, z_sum), caches = lax.scan(
+            scan_body, (x, lb_sum, z_sum), (blocks, flags)
+        )
+
+    x = L.norm(params["final_norm"], x, cfg.norm)
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    logits = shard(logits, "batch", None, "vocab")
+    aux = {"load_balance": lb_sum, "router_z": z_sum}
+    if collect_cache:
+        return logits, aux, caches
+    return logits, aux
+
+
+def lm_loss(params, batch, cfg) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """batch: {tokens (B,S), labels (B,S), [vision_embeds, positions3]}."""
+    logits, aux = lm_forward(
+        params,
+        batch["tokens"],
+        cfg,
+        vision_embeds=batch.get("vision_embeds"),
+        positions3=batch.get("positions3"),
+    )
+    labels = batch["labels"]
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(
+        logits.astype(jnp.float32), labels[..., None], axis=-1
+    )[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    xent = jnp.sum((lse - ll) * mask) / jnp.maximum(mask.sum(), 1.0)
+    loss = xent + 0.01 * aux["load_balance"] + 0.001 * aux["router_z"]
+    metrics = {"xent": xent, **aux}
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# decode (serve_step)
+# ---------------------------------------------------------------------------
+
+
+def init_decode_cache(cfg, batch: int, seq_len: int, topo=None) -> Params:
+    """KV / SSM caches for one-token decode against a seq_len context."""
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    hd = cfg.resolved_head_dim
+    if cfg.family == "ssm":
+        state = M.init_mamba_state(cfg, batch)
+        return {"mamba": jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.num_layers,) + a.shape), state
+        )}
+    if cfg.family == "hybrid":
+        period = cfg.attn_every or 8
+        n_p = cfg.num_layers // period
+        state = M.init_mamba_state(cfg, batch)
+        return {
+            "k": jnp.zeros((n_p, batch, seq_len, cfg.num_kv_heads, hd), dt),
+            "v": jnp.zeros((n_p, batch, seq_len, cfg.num_kv_heads, hd), dt),
+            "mamba": jax.tree.map(
+                lambda a: jnp.broadcast_to(
+                    a, (n_p, period - 1) + a.shape
+                ),
+                state,
+            ),
+        }
+    Lnum = cfg.num_layers
+    cache = {
+        "k": jnp.zeros((Lnum, batch, seq_len, cfg.num_kv_heads, hd), dt),
+        "v": jnp.zeros((Lnum, batch, seq_len, cfg.num_kv_heads, hd), dt),
+    }
+    if cfg.encoder_layers:
+        cache["xk"] = jnp.zeros(
+            (Lnum, batch, cfg.encoder_frames, cfg.num_kv_heads, hd), dt
+        )
+        cache["xv"] = jnp.zeros(
+            (Lnum, batch, cfg.encoder_frames, cfg.num_kv_heads, hd), dt
+        )
+    return cache
+
+
+def lm_decode_step(
+    params: Params,
+    token: jax.Array,          # (B, 1) int32
+    cache: Params,
+    cache_len: jax.Array,      # scalar int32: current context length
+    cfg,
+) -> Tuple[jax.Array, Params]:
+    """One greedy decode step. Returns (next_token (B,1), new_cache)."""
+    kv_mode = L.decode_kv_mode(cfg)
+    B = token.shape[0]
+    x = params["embed"][token]
+
+    if cfg.family == "ssm":
+
+        def body(x, pm):
+            p, st = pm
+            h = L.norm(p["norm1"], x, cfg.norm)
+            a, st = M.mamba_decode(p["mamba"], h, st, cfg)
+            x = x + a
+            x, _, _ = _maybe_ffn(p, x, cfg)
+            return x, st
+
+        def scan_body(x, pm):
+            x, st = body(x, pm)
+            return x, st
+
+        x, new_states = lax.scan(
+            scan_body, x, (params["blocks"], cache["mamba"])
+        )
+        new_cache = {"mamba": new_states}
+    elif cfg.family == "hybrid":
+        period = cfg.attn_every or 8
+        sub_keys = sorted(
+            params["periods"].keys(), key=lambda s: int(s.split("_")[1])
+        )
+
+        def period_step(x, inp):
+            pp, kc, vc, mstates = inp
+            new_m = []
+            for i, sk in enumerate(sub_keys):
+                p = pp[sk]
+                h = L.norm(p["norm1"], x, cfg.norm)
+                if i == 0:
+                    a, kc, vc = L.cached_attention(
+                        p["attn"], h, kc, vc, cache_len, cfg, kv_mode=kv_mode
+                    )
+                    x = x + a
+                else:
+                    st = jax.tree.map(lambda a, i=i: a[i - 1], mstates)
+                    a, st = M.mamba_decode(p["mamba"], h, st, cfg)
+                    new_m.append(st)
+                    x = x + a
+                x, _, _ = _maybe_ffn(p, x, cfg)
+            stacked_m = jax.tree.map(
+                lambda *xs: jnp.stack(xs, 0), *new_m
+            )
+            return x, (kc, vc, stacked_m)
+
+        def scan_body(x, inp):
+            x, out = period_step(x, inp)
+            return x, out
+
+        x, (nk, nv, nm) = lax.scan(
+            scan_body,
+            x,
+            (params["periods"], cache["k"], cache["v"], cache["mamba"]),
+        )
+        new_cache = {"k": nk, "v": nv, "mamba": nm}
+    else:
+        flags = _layer_flags(cfg)
+
+        def scan_body(x, inp):
+            p, kc, vc, flag = inp
+            h = L.norm(p["norm1"], x, cfg.norm)
+            window = _window_for(cfg, flag)
+            # window must be a static python int for decode masks; use the
+            # traced flag to select between two static computations
+            a, kc, vc = L.cached_attention(
+                p["attn"], h, kc, vc, cache_len, cfg,
+                window=window, kv_mode=kv_mode,
+            )
+            x = x + a
+            x, _, _ = _maybe_ffn(p, x, cfg)
+            return x, (kc, vc)
+
+        x, (nk, nv) = lax.scan(
+            scan_body, x, (params["blocks"], cache["k"], cache["v"], flags)
+        )
+        new_cache = {"k": nk, "v": nv}
+
+    x = L.norm(params["final_norm"], x, cfg.norm)
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    next_tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    return next_tok, new_cache
+
+
+def lm_prefill(
+    params: Params,
+    tokens: jax.Array,
+    cfg,
+    *,
+    vision_embeds: Optional[jax.Array] = None,
+    positions3: Optional[jax.Array] = None,
+):
+    """Prefill: full forward collecting decode-ready caches.
+
+    Returns (last_logits (B,1,Vp), caches). Cache layout matches
+    init_decode_cache so the serving engine can continue decoding.
+    """
+    logits, _aux, caches = lm_forward(
+        params, tokens, cfg,
+        vision_embeds=vision_embeds, positions3=positions3,
+        collect_cache=True,
+    )
+    return logits[:, -1:], caches

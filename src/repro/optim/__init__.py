@@ -1,0 +1,7 @@
+from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state, lr_at
+from repro.optim.compression import (
+    compress_with_feedback,
+    compressed_allreduce_mean,
+    dequantize_int8,
+    quantize_int8,
+)

@@ -1,0 +1,2 @@
+from repro.roofline import hlo_cost  # submodule (keep name unshadowed)
+from repro.roofline.analysis import Roofline, analyze_hlo, model_flops

@@ -1,0 +1,218 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds per step:
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+    memory     = HLO_bytes_per_device / HBM_bw
+    collective = collective_bytes_per_device / link_bw
+
+HLO_FLOPs/bytes come from ``compiled.cost_analysis()`` (per-device SPMD
+module). Collective bytes are NOT in cost_analysis: we parse the optimized
+HLO text and apply a per-kind wire-cost model (ring algorithms):
+
+    all-reduce        2 * bytes * (g-1)/g
+    all-gather        bytes_out * (g-1)/g
+    reduce-scatter    bytes_in * (g-1)/g
+    all-to-all        bytes * (g-1)/g
+    collective-permute bytes
+
+where g is the replica-group size parsed from the op.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Tuple
+
+# TPU v5e constants (assignment-specified)
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s
+LINK_BW = 50e9               # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+    "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# matches e.g. "f32[256,1024]{1,0}" or "bf16[8]"
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    # replica_groups={{0,1,2,...},{...}} -> size of first group
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    # iota format: replica_groups=[8,32]<=[256] -> groups of 32
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    wire_bytes: Dict[str, float]   # cost-model bytes on the wire per device
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(self.wire_bytes.values())
+
+
+def parse_collectives(hlo_text: str, default_group: int) -> CollectiveStats:
+    counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    wire: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # result-type = before ' = ', op after
+        m = re.match(r"%?[\w.\-]+ = (.+?) (\w[\w\-]*)\(", stripped)
+        if not m:
+            continue
+        result_type, op = m.group(1), m.group(2)
+        kind = None
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-"):  # e.g. all-reduce-start
+                kind = c
+                break
+        if kind is None:
+            continue
+        if op.endswith("-done"):
+            continue  # counted at -start
+        nbytes = _shape_bytes(result_type)
+        g = _group_size(stripped, default_group)
+        if g <= 1:
+            continue
+        frac = (g - 1) / g
+        if kind == "all-reduce":
+            cost = 2.0 * nbytes * frac
+        elif kind == "collective-permute":
+            cost = float(nbytes)
+        else:
+            cost = nbytes * frac
+        counts[kind] += 1
+        wire[kind] += cost
+    return CollectiveStats(counts=counts, wire_bytes=wire)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes: float
+    n_chips: int
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def as_dict(self) -> Dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "n_chips": self.n_chips,
+        }
+
+
+def model_flops(cfg, shape, kind: str) -> float:
+    """MODEL_FLOPS = 6*N_active*D (train) / 2*N_active*D (inference)."""
+    n_active = cfg.active_param_count()
+    if kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def analyze(
+    cost: Dict[str, float],
+    hlo_text: str,
+    n_chips: int,
+    default_group: int,
+) -> Tuple[Roofline, CollectiveStats]:
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    stats = parse_collectives(hlo_text, default_group)
+    return (
+        Roofline(
+            flops_per_device=flops,
+            bytes_per_device=nbytes,
+            collective_bytes=stats.total_wire_bytes,
+            n_chips=n_chips,
+        ),
+        stats,
+    )
+
+
+def analyze_hlo(hlo_text: str, n_chips: int, default_group: int):
+    """Trip-count-aware analysis (the authoritative path; see hlo_cost.py).
+
+    cost_analysis() counts while bodies once, so scanned-layer programs would
+    be undercounted by the layer count — hlo_cost re-derives FLOPs, HBM bytes
+    and collective wire bytes with loop trip multipliers.
+    """
+    from repro.roofline.hlo_cost import hlo_cost
+
+    c = hlo_cost(hlo_text, default_group)
+    roof = Roofline(
+        flops_per_device=c.flops,
+        bytes_per_device=c.bytes,
+        collective_bytes=c.total_coll_bytes,
+        n_chips=n_chips,
+    )
+    return roof, c

@@ -1,0 +1,457 @@
+"""Trip-count-aware HLO cost model.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE — with layer stacks
+lowered as ``lax.scan`` that undercounts FLOPs/bytes/collectives by the trip
+count (62x for gemma3). This parser walks the optimized HLO text instead:
+
+  * dot ops: 2 x out_elems x contraction_size
+  * arithmetic elementwise / reduce: 1 flop per element
+  * fusion/call: cost of the called computation
+  * while: (body + cond) x trip count, parsed from the condition's s32
+    constant bound (lax.scan lowers to `compare(i, constant(T)), LT`)
+  * HBM traffic: operand + result bytes of computation-scope ops (ops inside
+    fusion computations stream through registers/VMEM and are not counted)
+  * collective wire bytes: ring cost model x trip count
+      all-reduce 2B(g-1)/g | all-gather/reduce-scatter/all-to-all B(g-1)/g |
+      collective-permute B
+
+Validated against closed-form expectations in tests/test_hlo_cost.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+    "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+_ARITH_1FLOP = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "compare", "select", "and", "or", "xor", "not", "clamp",
+    "floor", "ceil", "round-nearest-afz", "sign", "remainder", "atan2",
+    "power", "shift-left", "shift-right-logical", "shift-right-arithmetic",
+}
+_TRANSCENDENTAL = {"exponential", "tanh", "log", "rsqrt", "sqrt", "logistic",
+                   "cosine", "sine", "expm1", "log1p", "cbrt", "erf"}
+_ZERO_COST = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "reshape", "transpose", "broadcast", "copy", "convert", "iota", "slice",
+    "dynamic-slice", "dynamic-update-slice", "concatenate", "pad", "reverse",
+    "gather", "scatter", "rng", "rng-bit-generator", "after-all", "custom-call",
+    "copy-start", "copy-done", "partition-id", "replica-id", "domain",
+    "optimization-barrier", "infeed", "outfeed", "reduce-precision",
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_elems(shape_str: str) -> Tuple[int, int]:
+    """(total_elements, total_bytes) over all array shapes in the string."""
+    elems = 0
+    nbytes = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dt]
+    return elems, nbytes
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    kind: str
+    result_type: str
+    operands: List[str]
+    attrs: str
+    operand_str: str = ""
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+    result_types: Dict[str, str]
+    by_name: Dict[str, Op] = dataclasses.field(default_factory=dict)
+
+
+_COMP_HDR = re.compile(r"^(?:ENTRY )?%?([\w.\-]+) \(.*\)\s*->\s*.*\{")
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT )?%?([\w.\-]+) = ((?:\([^)]*\)|[\w\[\]{},]+?)) ([\w\-]+)\((.*?)\)(.*)$"
+)
+_OPERAND_REF = re.compile(r"%([\w.\-]+)")
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HDR.match(line)
+            if m:
+                cur = Computation(m.group(1), [], {})
+                if line.startswith("ENTRY"):
+                    entry = m.group(1)
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_LINE.match(line)
+        if not m:
+            continue
+        name, rtype, kind, operand_str, attrs = m.groups()
+        operands = _OPERAND_REF.findall(operand_str)
+        op = Op(name, kind, rtype, operands, attrs, operand_str)
+        cur.ops.append(op)
+        cur.result_types[name] = rtype
+        cur.by_name[name] = op
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps, entry
+
+
+def _called(attrs: str, key: str) -> Optional[str]:
+    m = re.search(key + r"=%?([\w.\-]+)", attrs)
+    return m.group(1) if m else None
+
+
+def _trip_count(cond: Computation, comps: Dict[str, Computation]) -> int:
+    """Largest s32 constant reachable in the condition computation."""
+    best = 1
+
+    def scan(c: Computation, depth=0):
+        nonlocal best
+        if depth > 3:
+            return
+        for op in c.ops:
+            if op.kind == "constant" and op.result_type.startswith("s32"):
+                m = re.match(r"\s*(-?\d+)\s*$", op.operand_str)
+                if m:
+                    best = max(best, int(m.group(1)))
+            for key in ("calls", "condition", "body", "to_apply"):
+                sub = _called(op.attrs, key)
+                if sub and sub in comps:
+                    scan(comps[sub], depth + 1)
+
+    scan(cond)
+    return best
+
+
+def _collective_payload_bytes(op: Op, comp: Computation,
+                              comps: Dict[str, Computation]) -> int:
+    """Wire payload of a collective, billed at its SEMANTIC dtype.
+
+    The CPU backend's float-normalization pass rewrites bf16 reductions as
+    convert(bf16->f32) -> all-reduce(f32) -> convert(->bf16); a TPU executes
+    that all-reduce natively in bf16. When a collective operand is produced
+    by a pure widening convert (bare, or wrapped in a layout-pure kLoop
+    fusion of converts/bitcasts/copies), bill the convert's SOURCE dtype —
+    that is what a TPU would put on the wire. f32 payloads produced by real
+    f32 computation are not downgraded.
+    """
+
+    _LAYOUT_PURE = {"convert", "bitcast", "copy", "reshape", "transpose",
+                    "parameter", "tuple", "get-tuple-element", "add",
+                    "bitcast-convert"}
+
+    def src_bytes(name: str, depth: int = 0) -> int:
+        t = comp.result_types.get(name)
+        if t is None:
+            return 0
+        elems, b = _shape_elems(t)
+        if depth >= 3:
+            return b
+        prod = comp.by_name.get(name)
+        if prod is None:
+            return b
+        cands = []
+        if prod.kind == "convert" and prod.operands:
+            cands = prod.operands[:1]
+        elif prod.kind == "fusion":
+            callee_name = _called(prod.attrs, "calls")
+            callee = comps.get(callee_name) if callee_name else None
+            if callee is not None and all(
+                o.kind in _LAYOUT_PURE for o in callee.ops
+            ):
+                cands = prod.operands
+        best = b
+        for o in cands:
+            ct = comp.result_types.get(o)
+            if ct is None:
+                continue
+            celems, _cb = _shape_elems(ct)
+            if celems == elems:
+                best = min(best, src_bytes(o, depth + 1))
+        return best
+
+    if not op.operands:
+        _, b = _shape_elems(op.result_type)
+        return b
+    total = sum(src_bytes(o) for o in op.operands)
+    if total <= 0:
+        _, total = _shape_elems(op.result_type)
+    return total
+
+
+def _group_size(attrs: str, default: int) -> int:
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", attrs)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", attrs)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    out_elems, _ = _shape_elems(op.result_type)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.attrs)
+    if not m or not op.operands:
+        return 2.0 * out_elems
+    lhs_type = comp.result_types.get(op.operands[0], "")
+    sm = _SHAPE_RE.search(lhs_type)
+    if not sm:
+        return 2.0 * out_elems
+    dims = [int(d) for d in sm.group(2).split(",")] if sm.group(2) else []
+    contract = 1
+    for idx in (int(i) for i in m.group(1).split(",") if i):
+        if idx < len(dims):
+            contract *= dims[idx]
+    return 2.0 * out_elems * contract
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES}
+    )
+    coll_counts: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES}
+    )
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k in _COLLECTIVES:
+            self.coll_bytes[k] += other.coll_bytes[k] * mult
+            self.coll_counts[k] += other.coll_counts[k] * mult
+
+    @property
+    def total_coll_bytes(self) -> float:
+        return sum(self.coll_bytes.values())
+
+
+def _op_bytes(op: Op, comp: Computation) -> float:
+    """HBM traffic of a computation-scope op: operands + result."""
+    _, out_b = _shape_elems(op.result_type)
+    in_b = 0
+    for o in op.operands:
+        t = comp.result_types.get(o)
+        if t is None:
+            continue
+        _, b = _shape_elems(t)
+        in_b += b
+    return float(in_b + out_b)
+
+
+# Ops whose operands genuinely stream from HBM on TPU (fusion anchors).
+_ANCHOR_KINDS = {
+    "dot", "convolution", "reduce", "reduce-window", "sort", "gather",
+    "scatter", "dynamic-slice", "dynamic-update-slice", "concatenate",
+    "pad", "copy", "cholesky", "triangular-solve", "fft",
+}
+_ELEMENTWISE_FUSIBLE = _ARITH_1FLOP | _TRANSCENDENTAL | {
+    "convert", "broadcast", "reshape", "transpose", "slice", "iota",
+    "bitcast", "reverse", "reduce-precision", "map", "exponential-minus-one",
+}
+
+
+def _fusion_is_elementwise(callee: Computation) -> bool:
+    """True if a fused computation contains no anchor op (TPU would fuse the
+    whole thing into its consumers/producers)."""
+    for op in callee.ops:
+        if op.kind in _ANCHOR_KINDS:
+            return False
+        if op.kind in ("fusion", "call", "while", "conditional"):
+            return False
+    return True
+
+
+def _traffic_bytes(op: Op, comp: Computation, comps: Dict[str, Computation]) -> float:
+    """TPU-fusion-adjusted HBM traffic model.
+
+    The CPU backend wraps every elementwise op in its own kLoop fusion, so
+    counting operands+result for all of them wildly overstates what a TPU
+    (which fuses elementwise chains into matmul neighbours) would move.
+    Model: anchor ops (dot/reduce/scatter/cache-update/...) pay operands +
+    result; elementwise(-only fusions) pay result bytes only — every
+    intermediate is counted once, as its producer's output.
+    """
+    kind = op.kind
+    if kind in ("parameter", "constant", "tuple", "get-tuple-element",
+                "bitcast", "after-all", "while", "conditional"):
+        return 0.0
+    # In-place / sparse-touch ops: TPU (with donation/aliasing) moves only
+    # the touched slice, not the whole buffer.
+    if kind == "dynamic-update-slice":
+        # read + write of the update slice (operand 1)
+        if len(op.operands) > 1:
+            t = comp.result_types.get(op.operands[1])
+            if t:
+                _, b = _shape_elems(t)
+                return 2.0 * b
+        return 0.0
+    if kind in ("dynamic-slice", "gather", "slice"):
+        _, out_b = _shape_elems(op.result_type)
+        return 2.0 * out_b
+    if kind == "copy":
+        # loop-carry copies alias away under donation; count one write
+        _, out_b = _shape_elems(op.result_type)
+        return float(out_b)
+    if kind in ("fusion", "call"):
+        callee = _called(op.attrs, "calls") or _called(op.attrs, "to_apply")
+        if callee and callee in comps:
+            cc = comps[callee]
+            if _fusion_is_elementwise(cc):
+                _, out_b = _shape_elems(op.result_type)
+                return float(out_b)
+            # fusion whose anchors are all in-place/sparse-touch ops: bill
+            # the slice rules plus elementwise outputs, not the buffers
+            anchors = [o for o in cc.ops if o.kind in _ANCHOR_KINDS]
+            inplace = ("dynamic-update-slice", "dynamic-slice", "gather",
+                       "slice", "copy")
+            if anchors and all(a.kind in inplace for a in anchors):
+                return float(sum(_traffic_bytes(a, cc, comps) for a in anchors))
+        return _op_bytes(op, comp)
+    if kind in _ANCHOR_KINDS:
+        return _op_bytes(op, comp)
+    # bare elementwise at computation scope
+    _, out_b = _shape_elems(op.result_type)
+    return float(out_b)
+
+
+def comp_cost(
+    comp: Computation,
+    comps: Dict[str, Computation],
+    default_group: int,
+    _memo: Dict[str, Cost],
+    *,
+    fused: bool = False,
+) -> Cost:
+    key = comp.name + ("#f" if fused else "")
+    if key in _memo:
+        return _memo[key]
+    total = Cost()
+    for op in comp.ops:
+        kind = op.kind
+        # --- collectives ---
+        is_coll = None
+        for c in _COLLECTIVES:
+            if kind == c or kind == c + "-start":
+                is_coll = c
+                break
+        if is_coll:
+            nbytes = _collective_payload_bytes(op, comp, comps)
+            g = _group_size(op.attrs, default_group)
+            if g > 1:
+                frac = (g - 1) / g
+                if is_coll == "all-reduce":
+                    wire = 2.0 * nbytes * frac
+                elif is_coll == "collective-permute":
+                    wire = float(nbytes)
+                else:
+                    wire = nbytes * frac
+                total.coll_bytes[is_coll] += wire
+                total.coll_counts[is_coll] += 1
+            if not fused:
+                total.bytes += _op_bytes(op, comp)
+            continue
+        if kind == "while":
+            body = _called(op.attrs, "body")
+            cond = _called(op.attrs, "condition")
+            trip = _trip_count(comps[cond], comps) if cond in comps else 1
+            sub = Cost()
+            if body in comps:
+                sub.add(comp_cost(comps[body], comps, default_group, _memo))
+            if cond in comps:
+                sub.add(comp_cost(comps[cond], comps, default_group, _memo))
+            total.add(sub, mult=trip)
+            continue
+        if kind in ("fusion", "call", "async-start"):
+            callee = _called(op.attrs, "calls") or _called(op.attrs, "to_apply")
+            if callee and callee in comps:
+                sub = comp_cost(comps[callee], comps, default_group, _memo, fused=True)
+                # fused interior: flops count, interior bytes don't
+                total.flops += sub.flops
+                for k in _COLLECTIVES:
+                    total.coll_bytes[k] += sub.coll_bytes[k]
+                    total.coll_counts[k] += sub.coll_counts[k]
+            if not fused:
+                total.bytes += _traffic_bytes(op, comp, comps)
+            continue
+        if kind == "conditional":
+            branches = re.findall(r"branch_computations=\{([^}]*)\}", op.attrs)
+            names = []
+            if branches:
+                names = _OPERAND_REF.findall(branches[0]) or [
+                    b.strip().lstrip("%") for b in branches[0].split(",")
+                ]
+            best = Cost()
+            for n in names:
+                if n in comps:
+                    c = comp_cost(comps[n], comps, default_group, _memo)
+                    if c.flops >= best.flops:
+                        best = c
+            total.add(best)
+            if not fused:
+                total.bytes += _op_bytes(op, comp)
+            continue
+        # --- plain ops ---
+        if kind == "dot" or kind == "convolution":
+            total.flops += _dot_flops(op, comp)
+        elif kind in ("reduce", "reduce-window"):
+            in_elems = 0
+            for o in op.operands:
+                t = comp.result_types.get(o)
+                if t:
+                    e, _ = _shape_elems(t)
+                    in_elems += e
+            total.flops += in_elems
+        elif kind in _ARITH_1FLOP or kind in _TRANSCENDENTAL:
+            e, _ = _shape_elems(op.result_type)
+            total.flops += e
+        elif kind in _ZERO_COST or kind.endswith("-done"):
+            pass
+        # bytes: only at computation scope (not inside fusions),
+        # TPU-fusion-adjusted
+        if not fused:
+            total.bytes += _traffic_bytes(op, comp, comps)
+    _memo[key] = total
+    return total
+
+
+def hlo_cost(text: str, default_group: int) -> Cost:
+    comps, entry = parse_module(text)
+    if entry is None:
+        return Cost()
+    return comp_cost(comps[entry], comps, default_group, {})

@@ -1,0 +1,3 @@
+from repro.runtime.fault import FailureInjector, SimulatedFailure, plan_remesh, rescale_batch
+from repro.runtime.straggler import StragglerDetector
+from repro.runtime.train_loop import Trainer, TrainerConfig

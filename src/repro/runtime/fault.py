@@ -1,0 +1,62 @@
+"""Failure injection, detection, and elastic re-mesh planning.
+
+Real clusters lose hosts; the contract here is:
+  * any step may raise (SimulatedFailure stands in for a dead host / ICI
+    timeout / preemption);
+  * the trainer catches, consults ``plan_remesh`` for a degraded-but-valid
+    mesh (shrink the data axis — TP degree is fixed by the model's layout),
+  * rebuilds jitted steps on the new topology and restores the latest
+    checkpoint with the NEW shardings (CheckpointManager.restore handles the
+    re-layout), then continues.
+
+Straggler mitigation lives in runtime/straggler.py; here we only decide
+membership.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+
+class SimulatedFailure(RuntimeError):
+    """Stands in for a lost host / hung collective."""
+
+
+@dataclasses.dataclass
+class FailureInjector:
+    """Raises at configured step numbers (once each)."""
+
+    fail_at: Tuple[int, ...] = ()
+    _fired: set = dataclasses.field(default_factory=set)
+
+    def check(self, step: int) -> None:
+        if step in self.fail_at and step not in self._fired:
+            self._fired.add(step)
+            raise SimulatedFailure(f"injected failure at step {step}")
+
+
+def plan_remesh(
+    data_axis: int, model_axis: int, lost_hosts: int, hosts_per_slice: int = 1
+) -> Optional[Tuple[int, int]]:
+    """New (data, model) axis sizes after losing hosts.
+
+    The model axis is load-bearing (parameter layout); we only shrink the
+    data axis, to the largest power-of-two that the surviving hosts support.
+    Returns None when no valid mesh remains.
+    """
+    surviving = data_axis - lost_hosts * hosts_per_slice
+    if surviving < 1:
+        return None
+    new_data = 1 << (surviving.bit_length() - 1)  # floor pow2
+    return (new_data, model_axis)
+
+
+def rescale_batch(global_batch: int, old_data: int, new_data: int) -> int:
+    """Keep per-replica batch fixed; the global batch shrinks with the mesh.
+
+    (Alternative — fixed global batch with more grad accumulation — is a
+    config flag in the trainer.)
+    """
+    per = global_batch // old_data
+    return per * new_data

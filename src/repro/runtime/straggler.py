@@ -1,0 +1,47 @@
+"""Straggler detection: per-step wall-time EWMA with deviation triggers.
+
+On a real pod a straggling host shows up as a slow step for EVERYONE (SPMD
+collectives synchronize), so detection is local: track the step-time EWMA and
+flag steps beyond ``threshold`` x the running mean. The trainer's response
+policy, in order: log -> skip non-critical work (eval/checkpoint deferral) ->
+after ``evict_after`` consecutive flags, report the host for eviction (which
+triggers the elastic re-mesh path in fault.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+
+@dataclasses.dataclass
+class StragglerDetector:
+    alpha: float = 0.1          # EWMA weight
+    threshold: float = 2.5      # x mean -> flagged
+    evict_after: int = 5        # consecutive flags -> evict recommendation
+    warmup: int = 3             # ignore first steps (compile, cache warm)
+
+    _ewma: Optional[float] = None
+    _seen: int = 0
+    _consecutive: int = 0
+    events: List[dict] = dataclasses.field(default_factory=list)
+
+    def observe(self, step: int, dt: float) -> dict:
+        """Feed one step duration; returns {flagged, evict, ewma}."""
+        self._seen += 1
+        if self._seen <= self.warmup:
+            return {"flagged": False, "evict": False, "ewma": dt}
+        if self._ewma is None:
+            self._ewma = dt
+        flagged = dt > self.threshold * self._ewma
+        if flagged:
+            self._consecutive += 1
+            self.events.append({"step": step, "dt": dt, "ewma": self._ewma})
+        else:
+            self._consecutive = 0
+            self._ewma = (1 - self.alpha) * self._ewma + self.alpha * dt
+        return {
+            "flagged": flagged,
+            "evict": self._consecutive >= self.evict_after,
+            "ewma": self._ewma,
+        }

@@ -1,0 +1,138 @@
+"""Batched serving engine: continuous-batching decode over prefilled caches.
+
+One fixed-capacity decode batch; requests occupy slots. prefill() computes a
+prompt's cache (via the model's collect-cache forward) and splices it into
+the slot's rows of the batched decode cache; step() advances every active
+slot one token (greedy). Finished slots (EOS / max_len) free up for the
+queue. This is the serving analogue of the paper's offload: ONE compiled
+decode program serves the whole batch per step, with all schedule work
+(attention over sharded caches, SSM state updates) inside it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import ModelApi
+from repro.sharding.specs import Topology, use_topology
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # (prompt_len,)
+    max_new_tokens: int = 32
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        api: ModelApi,
+        params,
+        topo: Topology,
+        *,
+        batch_size: int = 4,
+        max_len: int = 256,
+        eos_id: int = 1,
+    ):
+        self.api = api
+        self.params = params
+        self.topo = topo
+        self.B = batch_size
+        self.max_len = max_len
+        self.eos_id = eos_id
+        with use_topology(topo):
+            self.cache = api.init_cache(batch_size, max_len)
+        self.slots: List[Optional[Request]] = [None] * batch_size
+        self.lengths = np.zeros(batch_size, dtype=np.int32)
+        self.cur_tokens = np.zeros((batch_size, 1), dtype=np.int32)
+        self.queue: List[Request] = []
+        self._decode = None
+
+    # -------------------------------------------------------------- intake
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for slot in range(self.B):
+            if self.slots[slot] is None and self.queue:
+                req = self.queue.pop(0)
+                self._prefill_into(slot, req)
+                self.slots[slot] = req
+
+    def _prefill_into(self, slot: int, req: Request) -> None:
+        """Run prompt prefill batch-of-1 and splice cache rows into the slot."""
+        plen = len(req.prompt)
+        tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        with use_topology(self.topo):
+            last_logits, pcache = self.api.prefill(
+                self.params, {"tokens": tokens}
+            )
+
+        def splice(big, small):
+            # big: (L, B, S_max, ...) or mamba states; small: (L, 1, plen,...)
+            if big.ndim >= 3 and small.shape[2] != big.shape[2] and small.ndim == big.ndim:
+                pad = [(0, 0)] * small.ndim
+                pad[2] = (0, big.shape[2] - small.shape[2])
+                small = jnp.pad(small.astype(big.dtype), pad)
+            return jax.lax.dynamic_update_index_in_dim(
+                big, small[:, 0].astype(big.dtype), slot, axis=1
+            )
+
+        self.cache = jax.tree.map(splice, self.cache, pcache)
+        first = np.asarray(jnp.argmax(last_logits[:, -1], -1)).astype(np.int32)
+        self.cur_tokens[slot, 0] = int(first[0])
+        self.lengths[slot] = plen
+        req.generated.append(int(first[0]))
+
+    # ---------------------------------------------------------------- step
+    def step(self) -> Dict[int, int]:
+        """Advance every active slot one token. Returns {rid: token}."""
+        self._admit()
+        active = [s for s in range(self.B) if self.slots[s] is not None]
+        if not active:
+            return {}
+        # one shared cache_len per compiled step: use the max; per-slot
+        # correctness comes from each slot's own written region (padding
+        # regions score ~0 after the causal mask)
+        clen = int(self.lengths.max())
+        with use_topology(self.topo):
+            if self._decode is None:
+                self._decode = jax.jit(self.api.decode_step)
+            nxt, self.cache = self._decode(
+                self.params,
+                jnp.asarray(self.cur_tokens),
+                self.cache,
+                jnp.asarray(clen, jnp.int32),
+            )
+        nxt = np.asarray(nxt)
+        out: Dict[int, int] = {}
+        for s in active:
+            req = self.slots[s]
+            tok = int(nxt[s, 0])
+            req.generated.append(tok)
+            out[req.rid] = tok
+            self.lengths[s] += 1
+            if (
+                tok == self.eos_id
+                or len(req.generated) >= req.max_new_tokens
+                or self.lengths[s] >= self.max_len - 1
+            ):
+                req.done = True
+                self.slots[s] = None
+            else:
+                self.cur_tokens[s, 0] = tok
+        return out
+
+    def run_until_drained(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if not self.queue and all(s is None for s in self.slots):
+                return
+            self.step()

@@ -1,0 +1,8 @@
+from repro.sharding.specs import (
+    Topology,
+    current_topology,
+    shard,
+    use_topology,
+)
+
+__all__ = ["Topology", "current_topology", "shard", "use_topology"]

@@ -1,0 +1,196 @@
+"""Parameter & input PartitionSpec rules per architecture family.
+
+Rules are name+shape based, applied over the param pytree with key paths.
+The same rules produce:
+  * param specs (TP layout over the 'model' axis),
+  * ZeRO-1 optimizer-state specs (param spec + an extra 'data' sharding on
+    the first divisible unsharded dim),
+  * batch input specs.
+
+Non-divisible dims (whisper's 20 heads on a 16-way axis, ...) degrade to
+replicated for that dim — the model code made the same fallback in its
+activation annotations, so layouts agree.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.sharding.specs import Topology
+
+
+def _div(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+def _leaf_spec(path: str, shape: tuple, cfg, msize: int) -> P:
+    """TP spec for one (unstacked: trailing dims) param leaf."""
+    nd = len(shape)
+
+    def pad(*tail):
+        return P(*([None] * (nd - len(tail)) + list(tail)))
+
+    d = cfg.d_model
+    if "embed" in path or "lm_head" in path:
+        # (V, d) table / (d, V) head: shard the vocab dim
+        if shape[-1] == cfg.padded_vocab and _div(cfg.padded_vocab, msize):
+            return pad(None, "model")
+        if nd >= 2 and shape[-2] == cfg.padded_vocab and _div(cfg.padded_vocab, msize):
+            return pad("model", None)
+        return P(*([None] * nd))
+    if "attn" in path or "cross" in path:
+        from repro import perf_flags
+        if perf_flags.FLAGS.attn_seq_over_tp:
+            return P(*([None] * nd))  # replicated projections (seq-sharded attn)
+        if path.endswith("wq"):
+            return pad(None, "model", None) if _div(cfg.num_heads, msize) else P(*([None] * nd))
+        if path.endswith("wk") or path.endswith("wv"):
+            return pad(None, "model", None) if _div(cfg.num_kv_heads, msize) else P(*([None] * nd))
+        if path.endswith("wo"):
+            return pad("model", None, None) if _div(cfg.num_heads, msize) else P(*([None] * nd))
+        if path.endswith("bq"):
+            return pad("model", None) if _div(cfg.num_heads, msize) else P(*([None] * nd))
+        if path.endswith("bk") or path.endswith("bv"):
+            return pad("model", None) if _div(cfg.num_kv_heads, msize) else P(*([None] * nd))
+    if "moe" in path and ("w_in" in path or "w_gate" in path or "w_out" in path) and "shared" not in path:
+        # expert-parallel: experts over 'model'
+        return pad("model", None, None) if _div(cfg.moe_num_experts, msize) else P(*([None] * nd))
+    if "router" in path:
+        return P(*([None] * nd))
+    if path.endswith("w_in") or path.endswith("w_gate"):
+        return pad(None, "model") if _div(shape[-1], msize) else P(*([None] * nd))
+    if path.endswith("w_out") and nd >= 2 and shape[-2] != cfg.ssm_d_inner:
+        return pad("model", None) if _div(shape[-2], msize) else P(*([None] * nd))
+    # --- mamba ---
+    if "mamba" in path:
+        if cfg.family == "ssm":
+            return P(*([None] * nd))  # SP mode: weights replicated
+        di, H = cfg.ssm_d_inner, cfg.ssm_num_heads
+        if path.endswith("w_z") or path.endswith("w_x"):
+            return pad(None, "model") if _div(di, msize) else P(*([None] * nd))
+        if path.endswith("w_dt"):
+            return pad(None, "model") if _div(H, msize) else P(*([None] * nd))
+        if path.endswith("conv_w_x"):
+            return pad(None, "model") if _div(di, msize) else P(*([None] * nd))
+        if path.endswith("conv_b_x") or path.endswith("norm_scale"):
+            return pad("model") if _div(di, msize) else P(*([None] * nd))
+        if path.endswith("A_log") or path.endswith("D") or path.endswith("dt_bias"):
+            return pad("model") if _div(H, msize) else P(*([None] * nd))
+        if path.endswith("w_out"):
+            return pad("model", None) if _div(di, msize) else P(*([None] * nd))
+        return P(*([None] * nd))
+    return P(*([None] * nd))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _stack_depth(path_s: str) -> int:
+    """Stacked layer collections carry leading scan dims the rules skip."""
+    if "periods" in path_s:
+        return 1
+    if "blocks" in path_s:
+        return 1
+    return 0
+
+
+def param_specs(param_shapes: Any, cfg, topo: Topology) -> Any:
+    """PartitionSpec pytree matching the params tree."""
+    msize = topo.model_size
+
+    def one(path, leaf):
+        path_s = _path_str(path)
+        nd_extra = _stack_depth(path_s)
+        shape = tuple(leaf.shape)
+        spec = _leaf_spec(path_s, shape[nd_extra:], cfg, msize)
+        return P(*([None] * nd_extra + list(spec)))
+
+    return jax.tree_util.tree_map_with_path(one, param_shapes)
+
+
+def zero1_specs(param_specs_tree: Any, param_shapes: Any, topo: Topology) -> Any:
+    """Optimizer-state specs: param spec + extra 'data' sharding (ZeRO-1).
+
+    The first dim that is unsharded and divisible by the data-axis size gets
+    the DP axes. Scalars and tiny leaves stay as-is.
+    """
+    dp = topo.batch_axes
+    dp_size = topo.dp_size
+    dp_entry = dp[0] if len(dp) == 1 else tuple(dp)
+
+    def one(spec: P, leaf) -> P:
+        shape = tuple(leaf.shape)
+        if len(shape) == 0 or int(np.prod(shape)) < 65536 or dp_size <= 1:
+            return spec
+        entries = list(spec) + [None] * (len(shape) - len(spec))
+        for i, (dim, e) in enumerate(zip(shape, entries)):
+            if e is None and dim % dp_size == 0:
+                entries[i] = dp_entry
+                return P(*entries)
+        return spec
+
+    return jax.tree.map(one, param_specs_tree, param_shapes)
+
+
+def batch_specs(batch_shapes: Dict[str, Any], topo: Topology) -> Dict[str, Any]:
+    """Batch dims over DP axes; everything else replicated."""
+    dp = topo.batch_axes
+    dp_entry = dp[0] if len(dp) == 1 else tuple(dp)
+    dp_size = topo.dp_size
+
+    def one(leaf):
+        if leaf.ndim == 0:
+            return P()
+        if leaf.shape[0] % dp_size == 0 and leaf.shape[0] > 1:
+            return P(*([dp_entry] + [None] * (leaf.ndim - 1)))
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree.map(one, batch_shapes)
+
+
+def cache_specs(cache_shapes: Any, cfg, topo: Topology) -> Any:
+    """Decode-cache specs: batch over DP; KV heads over 'model' when they
+    divide, else cache SEQUENCE over 'model' (the kv_seq decode mode)."""
+    msize = topo.model_size
+    dp = topo.batch_axes
+    dp_entry = dp[0] if len(dp) == 1 else tuple(dp)
+    dp_size = topo.dp_size
+    kv_heads_ok = _div(cfg.num_kv_heads, msize)
+
+    def one(path, leaf):
+        path_s = _path_str(path)
+        shape = tuple(leaf.shape)
+        nd = len(shape)
+        # leading dim is the stacked layer/period dim for k/v/mamba caches
+        entries: list = [None] * nd
+        # find batch dim: first dim equal to a multiple of dp that's not the
+        # layer dim — by construction caches are (L, B, S, Kh, D) or
+        # mamba (L, [7,] B, ...)
+        if path_s.startswith("k") or path_s.startswith("v") or path_s.startswith("x"):
+            # (L, B, S, Kh, D)
+            if shape[1] % dp_size == 0 and shape[1] > 1:
+                entries[1] = dp_entry
+            if kv_heads_ok:
+                entries[3] = "model"
+            elif shape[2] % msize == 0 and shape[2] > 1:
+                entries[2] = "model"
+        elif "mamba" in path_s:
+            bdim = 1 if cfg.family == "ssm" else 2
+            if nd > bdim and shape[bdim] % dp_size == 0 and shape[bdim] > 1:
+                entries[bdim] = dp_entry
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)

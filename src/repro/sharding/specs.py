@@ -1,0 +1,121 @@
+"""Topology context: logical parallelism axes -> physical mesh axes.
+
+Model code names *logical* axes ("batch", "model", "seq", "expert", "vocab");
+the topology maps them onto whatever mesh is active — single-pod
+(data, model), multi-pod (pod, data, model), a 1-device smoke mesh, or no mesh
+at all (plain CPU tests, where every annotation is a no-op).
+
+DP spans (pod, data); TP/EP/SP all live on the "model" axis (the standard
+megatron-style layout at 256 chips/pod: one fast axis for intra-layer
+parallelism, everything else data-parallel).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    mesh: Optional[Mesh]
+    batch_axes: Tuple[str, ...] = ("data",)   # DP axes (pod folded in)
+    model_axis: Optional[str] = "model"       # TP / EP / SP axis
+
+    @property
+    def dp(self):
+        return self.batch_axes if len(self.batch_axes) > 1 else self.batch_axes[0]
+
+    @property
+    def model_size(self) -> int:
+        if self.mesh is None or self.model_axis is None:
+            return 1
+        return self.mesh.shape[self.model_axis]
+
+    @property
+    def dp_size(self) -> int:
+        if self.mesh is None:
+            return 1
+        n = 1
+        for a in self.batch_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    def spec(self, *logical: Optional[str]) -> P:
+        """Translate logical axis names to a PartitionSpec."""
+        out = []
+        for name in logical:
+            if name is None:
+                out.append(None)
+            elif name == "batch":
+                out.append(self.dp)
+            elif name in ("model", "seq", "expert", "vocab", "ff", "heads"):
+                out.append(self.model_axis)
+            else:
+                raise ValueError(f"unknown logical axis {name!r}")
+        return P(*out)
+
+
+def _null_topology() -> Topology:
+    return Topology(mesh=None, batch_axes=("data",), model_axis=None)
+
+
+_current: contextvars.ContextVar[Topology] = contextvars.ContextVar(
+    "repro_topology", default=_null_topology()
+)
+
+
+def current_topology() -> Topology:
+    return _current.get()
+
+
+@contextlib.contextmanager
+def use_topology(topo: Topology):
+    token = _current.set(topo)
+    try:
+        if topo.mesh is not None:
+            with topo.mesh:
+                yield topo
+        else:
+            yield topo
+    finally:
+        _current.reset(token)
+
+
+def make_topology(mesh: Optional[Mesh]) -> Topology:
+    if mesh is None:
+        return _null_topology()
+    names = mesh.axis_names
+    if "pod" in names:
+        return Topology(mesh=mesh, batch_axes=("pod", "data"), model_axis="model")
+    if "model" in names:
+        return Topology(mesh=mesh, batch_axes=("data",), model_axis="model")
+    return Topology(mesh=mesh, batch_axes=tuple(names), model_axis=None)
+
+
+def shard(x, *logical: Optional[str]):
+    """with_sharding_constraint in logical axes; no-op without a mesh.
+
+    Axis names that don't divide the corresponding dim (e.g. 20 whisper heads
+    on a 16-way model axis) fall back to unsharded for that dim.
+    """
+    topo = current_topology()
+    if topo.mesh is None:
+        return x
+    fixed = []
+    for dim, name in enumerate(logical):
+        if name is None or name == "batch":
+            fixed.append(name)
+            continue
+        size = topo.model_size
+        if size and x.shape[dim] % size != 0:
+            fixed.append(None)
+        else:
+            fixed.append(name)
+    spec = topo.spec(*fixed)
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,8 @@
+"""Subprocess-entry checks that need a multi-device (forced host) platform.
+
+The container has one physical CPU device and jax locks the device count at
+first init, so anything needing a real mesh runs as ``python -m
+repro.testing.<module>`` in a fresh subprocess that sets
+``xla_force_host_platform_device_count`` before importing jax. Never set that
+flag globally — smoke tests and benchmarks must see 1 device.
+"""

@@ -1,0 +1,10 @@
+"""Real-ppermute validation of the offloaded scan (8/16 forced host devices,
+fresh subprocess because jax locks the device count at first init)."""
+
+import pytest
+
+
+@pytest.mark.parametrize("ndev", [8, 16])
+def test_spmd_all_algorithms(subprocess_runner, ndev):
+    out = subprocess_runner("repro.testing.spmd_check", str(ndev))
+    assert "FAIL" not in out

@@ -1,0 +1,19 @@
+"""Multi-device layer equivalence (subprocess: forced 8-device host platform).
+
+These are the paper-technique correctness gates:
+  * EP MoE (scan-offset dispatch + all_to_all) == dense dropless reference
+  * sequence-parallel Mamba2 (dist_exscan state hand-off) == unsharded mixer
+  * int8+error-feedback compressed DP == f32 DP convergence parity
+"""
+
+
+def test_moe_ep_equivalence(subprocess_runner):
+    subprocess_runner("repro.testing.moe_check")
+
+
+def test_mamba_sequence_parallel_equivalence(subprocess_runner):
+    subprocess_runner("repro.testing.mamba_sp_check")
+
+
+def test_compressed_dp_convergence(subprocess_runner):
+    subprocess_runner("repro.testing.compressed_dp_check")

@@ -1,0 +1,86 @@
+"""Fault-tolerance integration: checkpoint/restart + failure recovery.
+
+Runs the real Trainer on a tiny model, injects failures mid-run, and asserts
+the loop recovers from the latest checkpoint and keeps making progress.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.data.pipeline import DataConfig, batches
+from repro.models import build_model
+from repro.optim.adamw import AdamWConfig
+from repro.runtime.fault import FailureInjector
+from repro.runtime.train_loop import Trainer, TrainerConfig
+from repro.sharding.specs import Topology
+
+
+def _make_trainer(tmp_path, fail_at=(), steps_shape=(4, 32)):
+    cfg = get_config("smollm_360m").reduced()
+    api = build_model(cfg)
+    B, S = steps_shape
+    shape = ShapeConfig("tiny", S, B, "train")
+    data = batches(DataConfig(vocab_size=cfg.vocab_size, seq_len=S, global_batch=B, seed=1))
+    topo = Topology(mesh=None)
+    tcfg = TrainerConfig(
+        ckpt_dir=str(tmp_path), ckpt_every=5, keep_ckpts=2,
+        async_ckpt=False, max_retries=3,
+    )
+    injector = FailureInjector(fail_at=tuple(fail_at))
+    opt = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=100)
+    return Trainer(api, topo, shape, data, tcfg, opt, injector)
+
+
+def test_loss_decreases(tmp_path):
+    tr = _make_trainer(tmp_path)
+    params, opt = tr.init_state()
+    params, opt, hist = tr.run(params, opt, num_steps=25)
+    first = np.mean([h["loss"] for h in hist[:5]])
+    last = np.mean([h["loss"] for h in hist[-5:]])
+    assert last < first, (first, last)
+
+
+def test_recovery_from_injected_failure(tmp_path):
+    tr = _make_trainer(tmp_path, fail_at=(12,))
+    params, opt = tr.init_state()
+    params, opt, hist = tr.run(params, opt, num_steps=20)
+    steps = [h["step"] for h in hist]
+    # failure at 12 -> restored from ckpt at 10 -> steps 10,11 re-run
+    assert steps.count(11) >= 2 or steps.count(10) >= 2
+    assert max(steps) == 19
+    assert len(tr.remesh_events) == 1
+    # training still progressed
+    assert np.mean([h["loss"] for h in hist[-3:]]) < np.mean(
+        [h["loss"] for h in hist[:3]]
+    )
+
+
+def test_resume_from_checkpoint(tmp_path):
+    tr = _make_trainer(tmp_path)
+    params, opt = tr.init_state()
+    params, opt, _ = tr.run(params, opt, num_steps=10)
+    # new trainer instance = process restart; resumes at step 10
+    tr2 = _make_trainer(tmp_path)
+    p2, o2 = tr2.init_state(seed=99)  # different init; must be overwritten
+    start, p2, o2 = tr2.maybe_restore(
+        jax.tree.map(np.asarray, p2), jax.tree.map(np.asarray, o2)
+    )
+    assert start == 10
+    np.testing.assert_allclose(
+        np.asarray(jax.tree.leaves(p2)[0], np.float32),
+        np.asarray(jax.tree.leaves(params)[0], np.float32),
+        atol=1e-6,
+    )
+
+
+def test_multiple_failures_exhaust_retries(tmp_path):
+    tr = _make_trainer(tmp_path, fail_at=(3, 4, 5, 6, 7, 8, 9))
+    params, opt = tr.init_state()
+    # every retry fails again at the next step; must eventually raise
+    with pytest.raises(Exception):
+        tr.run(params, opt, num_steps=20)

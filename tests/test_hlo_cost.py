@@ -1,0 +1,69 @@
+"""Closed-form validation of the trip-count-aware HLO cost parser."""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.roofline.hlo_cost import hlo_cost, parse_module
+
+
+def _compile_text(fn, *shapes):
+    return jax.jit(fn).lower(*shapes).compile().as_text()
+
+
+def test_single_matmul_flops_and_bytes():
+    x = jax.ShapeDtypeStruct((256, 512), jnp.float32)
+    w = jax.ShapeDtypeStruct((512, 128), jnp.float32)
+    txt = _compile_text(lambda a, b: a @ b, x, w)
+    c = hlo_cost(txt, 1)
+    assert abs(c.flops - 2 * 256 * 512 * 128) / c.flops < 0.01
+    expect_bytes = (256 * 512 + 512 * 128 + 256 * 128) * 4
+    assert 0.5 < c.bytes / expect_bytes < 2.5
+
+
+def test_scan_trip_count_multiplies():
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        out, _ = lax.scan(body, x, None, length=7)
+        return out
+
+    s = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    txt = _compile_text(f, s, s)
+    c = hlo_cost(txt, 1)
+    expect = 7 * (2 * 128**3)
+    assert 0.95 < c.flops / expect < 1.15
+
+
+def test_nested_scan():
+    def g(x, w):
+        def outer(c, _):
+            def inner(c2, _):
+                return c2 @ w, None
+            c2, _ = lax.scan(inner, c, None, length=3)
+            return c2, None
+        out, _ = lax.scan(outer, x, None, length=5)
+        return out
+
+    s = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    txt = _compile_text(g, s, s)
+    c = hlo_cost(txt, 1)
+    assert 0.95 < c.flops / (15 * 2 * 128**3) < 1.15
+
+
+def test_gqa_einsum_flops():
+    def f(q, k):
+        return jnp.einsum("bqhgd,bkhd->bhgqk", q, k)
+
+    q = jax.ShapeDtypeStruct((2, 64, 4, 2, 32), jnp.float32)
+    k = jax.ShapeDtypeStruct((2, 128, 4, 32), jnp.float32)
+    txt = _compile_text(f, q, k)
+    c = hlo_cost(txt, 1)
+    expect = 2 * (2 * 4 * 2 * 64 * 128) * 32
+    assert 0.95 < c.flops / expect < 1.1
+
+
+def test_parse_module_finds_entry():
+    txt = _compile_text(lambda a: a + 1.0, jax.ShapeDtypeStruct((8,), jnp.float32))
+    comps, entry = parse_module(txt)
+    assert entry is not None and entry in comps

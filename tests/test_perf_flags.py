@@ -1,0 +1,81 @@
+"""Perf-flag variants must preserve model semantics (same loss/logits)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import perf_flags
+from repro.configs import get_config
+from repro.models import build_model
+
+
+@pytest.fixture(autouse=True)
+def _restore_flags():
+    saved = dataclasses.asdict(perf_flags.FLAGS)
+    yield
+    perf_flags.set_flags(**saved)
+
+
+def _loss(arch, **flags):
+    perf_flags.set_flags(**flags)
+    cfg = get_config(arch).reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.key(0))
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 32)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 32)), jnp.int32),
+    }
+    loss, _ = api.loss(params, batch)
+    return float(loss)
+
+
+def test_attention_flags_same_loss():
+    base = _loss("qwen25_14b")
+    for flags in (
+        dict(attn_probs_bf16=True),
+        dict(attn_kv_block=2048),
+        dict(seq_shard_attn=True),  # no mesh: falls back, must still work
+    ):
+        assert abs(_loss("qwen25_14b", **flags) - base) < 5e-2, flags
+
+
+def test_scan_algorithm_flags_same_loss():
+    base = _loss("mamba2_130m")
+    for algo in ("hillis_steele", "sklansky", "sequential_pipelined"):
+        got = _loss("mamba2_130m", scan_algorithm=algo)
+        assert abs(got - base) < 1e-3, algo
+
+
+def test_remat_policy_same_loss_and_grads():
+    cfg = get_config("smollm_360m").reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.key(0))
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 32)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 32)), jnp.int32),
+    }
+    (l0, _), g0 = jax.value_and_grad(api.loss, has_aux=True)(params, batch)
+    perf_flags.set_flags(remat_policy="save_block_outputs")
+    (l1, _), g1 = jax.value_and_grad(api.loss, has_aux=True)(params, batch)
+    assert abs(float(l0) - float(l1)) < 1e-5
+    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            atol=1e-4, rtol=1e-3,
+        )
+
+
+def test_parse_opt_string():
+    perf_flags.parse_opt_string(
+        "seq_shard_attn=1,remat_policy=save_block_outputs,attn_kv_block=2048,"
+        "scan_algorithm=sklansky,ssm_chunk=128"
+    )
+    f = perf_flags.FLAGS
+    assert f.seq_shard_attn and f.remat_policy == "save_block_outputs"
+    assert f.attn_kv_block == 2048 and f.scan_algorithm == "sklansky"
+    assert f.ssm_chunk == 128

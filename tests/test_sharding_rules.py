@@ -1,0 +1,120 @@
+"""Partition-spec rules: TP layouts, divisibility fallbacks, ZeRO-1 specs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.sharding.rules import param_specs, zero1_specs, batch_specs, cache_specs
+from repro.sharding.specs import Topology
+
+
+class FakeMesh:
+    """Shape-only stand-in so spec rules can be tested without 256 devices."""
+
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+    @property
+    def devices(self):  # pragma: no cover
+        raise NotImplementedError
+
+
+def _topo(data=16, model=16):
+    return Topology(mesh=FakeMesh({"data": data, "model": model}),
+                    batch_axes=("data",), model_axis="model")
+
+
+def _leaf_by_path(tree, *frags):
+    found = {}
+
+    def visit(path, leaf):
+        s = jax.tree_util.keystr(path)
+        if all(f in s for f in frags):
+            found[s] = leaf
+
+    jax.tree_util.tree_map_with_path(visit, tree)
+    return found
+
+
+@pytest.mark.parametrize("arch", ["granite_20b", "gemma3_27b", "qwen25_14b"])
+def test_attention_tp_specs(arch):
+    cfg = get_config(arch)
+    api = build_model(cfg)
+    shapes = api.param_shapes()
+    specs = param_specs(shapes, cfg, _topo())
+    wq = list(_leaf_by_path(specs, "attn", "wq").values())[0]
+    if cfg.num_heads % 16 == 0:
+        assert "model" in wq
+    else:
+        assert "model" not in wq
+    wk = list(_leaf_by_path(specs, "attn", "wk").values())[0]
+    if cfg.num_kv_heads % 16 == 0:
+        assert "model" in wk
+    else:
+        assert "model" not in wk  # MQA (granite kv=1) -> replicated KV proj
+
+
+def test_moe_expert_parallel_specs():
+    cfg = get_config("deepseek_moe_16b")
+    api = build_model(cfg)
+    specs = param_specs(api.param_shapes(), cfg, _topo())
+    w_in = list(_leaf_by_path(specs, "moe", "w_in").values())
+    # experts sharded over model: stacked leaf (L, E, d, ff) -> (None, model, None, None)
+    routed = [s for s in w_in if len(s) == 4]
+    assert routed and all(s[1] == "model" for s in routed)
+    router = list(_leaf_by_path(specs, "router").values())[0]
+    assert all(e is None for e in router)
+
+
+def test_mamba_sp_vs_tp_specs():
+    ssm = get_config("mamba2_130m")
+    specs = param_specs(build_model(ssm).param_shapes(), ssm, _topo())
+    # mixer weights replicated (SP mode); embed/lm_head stay vocab-sharded
+    for path, s in _leaf_by_path(specs, "mamba").items():
+        assert "model" not in tuple(s), (path, "SP mamba weights replicated")
+
+    hyb = get_config("jamba_v01_52b")
+    specs = param_specs(build_model(hyb).param_shapes(), hyb, _topo())
+    wz = list(_leaf_by_path(specs, "mamba", "w_z").values())[0]
+    assert "model" in tuple(wz), "jamba TP mamba shards d_inner"
+
+
+def test_zero1_adds_data_axis():
+    cfg = get_config("smollm_360m")
+    api = build_model(cfg)
+    shapes = api.param_shapes()
+    pspec = param_specs(shapes, cfg, _topo())
+    ospec = zero1_specs(pspec, shapes, _topo())
+    # embedding (V, d): vocab-sharded on model; zero1 shards d over data
+    emb_p = list(_leaf_by_path(pspec, "embed").values())[0]
+    emb_o = list(_leaf_by_path(ospec, "embed").values())[0]
+    assert tuple(emb_p) != tuple(emb_o)
+    assert "data" in tuple(emb_o)
+
+
+def test_batch_and_cache_specs():
+    cfg = get_config("granite_20b")
+    api = build_model(cfg)
+    topo = _topo()
+    bshapes = {
+        "tokens": jax.ShapeDtypeStruct((256, 4096), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((256, 4096), jnp.int32),
+    }
+    bs = batch_specs(bshapes, topo)
+    assert bs["tokens"][0] == "data"
+    cache = jax.eval_shape(lambda: api.init_cache(128, 32768))
+    cs = cache_specs(cache, cfg, topo)
+    kspec = cs["k"]
+    # granite kv=1 cannot shard heads -> sequence sharded over model
+    assert kspec[2] == "model" and kspec[1] == "data"
+
+    g3 = get_config("gemma3_27b")
+    api3 = build_model(g3)
+    cache3 = jax.eval_shape(lambda: api3.init_cache(128, 32768))
+    cs3 = cache_specs(cache3, g3, topo)
+    assert cs3["k"][3] == "model"  # kv=16 shards heads

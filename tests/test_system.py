@@ -1,0 +1,87 @@
+"""End-to-end system behaviour: train a small LM for real steps, serve it.
+
+This is deliverable (b)'s guarantee in test form: the full stack (data
+pipeline -> sharded step -> optimizer -> checkpointing -> serving engine)
+works together, losses go down, generations are deterministic.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.data.pipeline import DataConfig, batches
+from repro.models import build_model
+from repro.optim.adamw import AdamWConfig
+from repro.runtime.train_loop import Trainer, TrainerConfig
+from repro.serving.engine import Request, ServeEngine
+from repro.sharding.specs import Topology
+
+
+def test_train_then_serve(tmp_path):
+    cfg = get_config("smollm_360m").reduced()
+    api = build_model(cfg)
+    B, S = 4, 32
+    shape = ShapeConfig("tiny", S, B, "train")
+    data = batches(
+        DataConfig(vocab_size=cfg.vocab_size, seq_len=S, global_batch=B, seed=3)
+    )
+    topo = Topology(mesh=None)
+    tr = Trainer(
+        api, topo, shape, data,
+        TrainerConfig(ckpt_dir=str(tmp_path), ckpt_every=10, async_ckpt=False),
+        AdamWConfig(lr=3e-3, warmup_steps=3, total_steps=60),
+    )
+    params, opt = tr.init_state()
+    params, opt, hist = tr.run(params, opt, num_steps=30)
+    losses = [h["loss"] for h in hist]
+    assert np.mean(losses[-5:]) < np.mean(losses[:5])
+    assert all(np.isfinite(l) for l in losses)
+
+    # ---- serve the trained params with continuous batching
+    eng = ServeEngine(api, params, topo, batch_size=2, max_len=64)
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(rid=i, prompt=rng.integers(2, cfg.vocab_size, size=8).astype(np.int32),
+                max_new_tokens=6)
+        for i in range(3)
+    ]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_drained(max_steps=200)
+    for r in reqs:
+        assert r.done and 1 <= len(r.generated) <= 6
+        assert all(0 <= t < cfg.padded_vocab for t in r.generated)
+
+    # determinism: same prompt through a fresh engine gives same tokens
+    eng2 = ServeEngine(api, params, topo, batch_size=2, max_len=64)
+    r2 = Request(rid=9, prompt=reqs[0].prompt, max_new_tokens=6)
+    eng2.submit(r2)
+    eng2.run_until_drained(max_steps=200)
+    assert r2.generated == reqs[0].generated
+
+
+def test_mamba_system_train():
+    """The SSM family end-to-end (scan collective in the loss path)."""
+    cfg = get_config("mamba2_130m").reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.key(0))
+    from repro.optim.adamw import adamw_update, init_opt_state
+    opt = init_opt_state(params)
+    ocfg = AdamWConfig(lr=3e-3, warmup_steps=2, total_steps=50)
+    data = batches(DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=4, seed=5))
+
+    @jax.jit
+    def step(params, opt, batch):
+        (loss, _), g = jax.value_and_grad(api.loss, has_aux=True)(params, batch)
+        p2, o2, _ = adamw_update(g, opt, params, ocfg)
+        return p2, o2, loss
+
+    losses = []
+    for i in range(20):
+        b = next(data)
+        params, opt, loss = step(params, opt, {k: jnp.asarray(v) for k, v in b.items()})
+        losses.append(float(loss))
+    assert losses[-1] < losses[0]
+    assert all(np.isfinite(l) for l in losses)
