@@ -3,10 +3,14 @@
   fig4/fig5 (scan_latency)      -- host-visible SW vs offloaded scan latency
   fig6/fig7 (offloaded_latency) -- in-network latency per algorithm + the
                                    derived ICI model + selector crossovers
+  tuned_vs_static               -- autotuner crossover report + engine smoke
   roofline (report)             -- dry-run derived roofline tables
 
 Prints ``name,...,derived`` CSV sections. Run:
-  PYTHONPATH=src python -m benchmarks.run [--quick]
+  PYTHONPATH=src python -m benchmarks.run [--quick | --smoke]
+
+``--smoke`` runs only the ~10 s offload-engine smoke (budgeted tuning grid +
+descriptor-cache proof) — the CI regression gate for the offload subsystem.
 """
 
 import argparse
@@ -15,14 +19,30 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
-from benchmarks import offloaded_latency, report, scan_latency  # noqa: E402
+from benchmarks import (  # noqa: E402
+    offloaded_latency,
+    report,
+    scan_latency,
+    tuned_vs_static,
+)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="fewer timing iters")
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="offload-engine smoke benchmark only (~10 s)",
+    )
     args = ap.parse_args()
     iters = 8 if args.quick else 30
+
+    if args.smoke:
+        print("# === Offload engine smoke: tuned-vs-static + cache proof ===")
+        for row in tuned_vs_static.smoke():
+            print(row)
+        return
 
     print("# === Paper Fig. 4/5: host-visible scan latency (8 ranks) ===")
     print("figure,algo,variant,msg_bytes,us_per_call")
@@ -37,6 +57,19 @@ def main() -> None:
     for row in offloaded_latency.run():
         print(row)
     for row in offloaded_latency.selector_crossover():
+        print(row)
+
+    print()
+    print("# === Tuned-vs-static selection crossovers (autotuner) ===")
+    print(
+        "section,coll,p,msg_bytes,static_algo,tuned_algo,"
+        "static_meas_us,tuned_meas_us,changed"
+    )
+    for row in tuned_vs_static.run(
+        iters=max(3, iters // 6), time_budget_s=120.0
+    ):
+        print(row)
+    for row in tuned_vs_static.engine_smoke():
         print(row)
 
     print()

@@ -1,0 +1,123 @@
+"""Tuned-vs-static selection crossover report + offload-engine smoke.
+
+The static selector prices schedules with TPU v5e ICI constants; the autotuner
+re-fits the model from latencies measured on the backend actually running.
+This benchmark runs a budgeted tuning pass, then emits one CSV row per grid
+point comparing the two selections (and the measured latency of each choice),
+plus an engine-dispatch section proving the descriptor cache: five CollTypes
+through ``OffloadEngine.offload`` twice each, hit/miss telemetry printed.
+
+CSV sections:
+  tuned_vs_static,coll,p,msg_bytes,static_algo,tuned_algo,static_meas_us,tuned_meas_us,changed
+  engine_smoke,coll,dispatch,cache,latency_us
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import SUM, CollType, select_algorithm
+from repro.core.selector import get_active_tuning, set_active_tuning
+from repro.offload import OffloadEngine, TuningCache, autotune
+
+SMOKE_PS = (2, 4, 8)
+SMOKE_PAYLOADS = (1024, 65536)
+FULL_PS = (2, 4, 8, 16)
+FULL_PAYLOADS = (1024, 65536, 1 << 20)
+
+
+def _measured(
+    cache: TuningCache, coll: str, p: int, msg: int, algo: str
+) -> Optional[float]:
+    best: Dict[Tuple[str, str, int, int], float] = {}
+    for m in cache.measurements:
+        key = (m.coll, m.algo, m.p, m.payload_bytes)
+        if key not in best or m.seconds < best[key]:
+            best[key] = m.seconds
+    return best.get((coll, algo, p, msg))
+
+
+def run(
+    *,
+    ps=FULL_PS,
+    payloads=FULL_PAYLOADS,
+    iters: int = 5,
+    time_budget_s: Optional[float] = None,
+) -> List[str]:
+    """Tune over the grid, then compare selections point by point."""
+    rows: List[str] = []
+    prior = get_active_tuning()
+    cache = autotune(
+        ps=ps, payloads=payloads, iters=iters, time_budget_s=time_budget_s
+    )
+    changed = 0
+    try:
+        for coll in ("scan", "exscan"):
+            for p in ps:
+                for msg in payloads:
+                    set_active_tuning(None)
+                    static = select_algorithm(p, msg, SUM, coll=coll)
+                    cache.activate()
+                    tuned = select_algorithm(p, msg, SUM, coll=coll)
+                    s_us = _measured(cache, coll, p, msg, static)
+                    t_us = _measured(cache, coll, p, msg, tuned)
+                    diff = tuned != static
+                    changed += int(diff)
+                    rows.append(
+                        f"tuned_vs_static,{coll},{p},{msg},{static},{tuned},"
+                        f"{'' if s_us is None else f'{s_us*1e6:.1f}'},"
+                        f"{'' if t_us is None else f'{t_us*1e6:.1f}'},"
+                        f"{int(diff)}"
+                    )
+    finally:
+        set_active_tuning(prior)
+    fitted = cache.fitted_model()
+    if fitted is not None:
+        rows.append(
+            f"fitted_model,alpha_s,{fitted.alpha:.3e},beta_s_per_byte,"
+            f"{fitted.beta:.3e},gamma_s,{fitted.gamma:.3e}"
+        )
+    rows.append(f"tuned_vs_static_summary,changed_points,{changed}")
+    return rows
+
+
+def engine_smoke(p: int = 8, n: int = 64) -> List[str]:
+    """All five CollTypes through the descriptor path, twice: the second
+    dispatch of each must be a schedule-cache hit."""
+    rows: List[str] = []
+    eng = OffloadEngine()
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(p, n)).astype(np.float32))
+    for coll in CollType:
+        desc = eng.make_descriptor(
+            coll.name, p=p, payload_bytes=n * 4, op="sum"
+        )
+        for dispatch in ("miss", "hit"):
+            before = eng.telemetry.hits
+            eng.offload(desc.encode(), x)
+            cache = "hit" if eng.telemetry.hits > before else "miss"
+            rows.append(
+                f"engine_smoke,{coll.name.lower()},{dispatch},{cache},"
+                f"{eng.telemetry.last_latency_s*1e6:.1f}"
+            )
+    snap = eng.telemetry.snapshot()
+    rows.append(
+        f"engine_smoke_summary,hits,{snap['hits']},misses,{snap['misses']},"
+        f"hit_rate,{snap['hit_rate']:.2f}"
+    )
+    return rows
+
+
+def smoke(time_budget_s: float = 8.0) -> List[str]:
+    """The ~10 s CI entry: budgeted tuning grid + engine dispatch proof."""
+    rows = run(
+        ps=SMOKE_PS,
+        payloads=SMOKE_PAYLOADS,
+        iters=3,
+        time_budget_s=time_budget_s,
+    )
+    rows += engine_smoke()
+    return rows

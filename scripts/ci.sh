@@ -1,0 +1,22 @@
+#!/usr/bin/env bash
+# One-entry-point CI gate: tier-1 test suite + offload-engine smoke benchmark.
+#
+#   bash scripts/ci.sh           # full tier-1 + ~10 s offload smoke
+#
+# The smoke benchmark (benchmarks.run --smoke) runs a budgeted autotuning grid
+# and proves the descriptor schedule cache (hit/miss telemetry), so regressions
+# in the offload subsystem fail CI even when no unit test covers them yet.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "=== tier-1: pytest ==="
+python -m pytest -x -q
+
+echo
+echo "=== offload-engine smoke benchmark ==="
+python -m benchmarks.run --smoke
+
+echo
+echo "CI OK"

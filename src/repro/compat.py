@@ -1,0 +1,59 @@
+"""Version-compat shims for the jax API surface this repo depends on.
+
+``jax.shard_map`` was promoted out of ``jax.experimental`` only in newer jax
+releases; on 0.4.x the top-level attribute raises ``AttributeError`` through
+the deprecation machinery. Every call site imports :data:`shard_map` from here
+so the repo runs on either side of the promotion.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def _resolve_shard_map():
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm
+    from jax.experimental.shard_map import shard_map as exp_sm  # jax <= 0.4.x
+
+    import functools
+    import inspect
+
+    accepted = set(inspect.signature(exp_sm).parameters)
+
+    @functools.wraps(exp_sm)
+    def sm(f, **kwargs):
+        # Newer jax renamed check_rep -> check_vma; translate (or drop) so
+        # call sites can use the modern spelling everywhere.
+        if "check_vma" in kwargs and "check_vma" not in accepted:
+            val = kwargs.pop("check_vma")
+            if "check_rep" in accepted:
+                kwargs["check_rep"] = val
+        return exp_sm(f, **kwargs)
+
+    return sm
+
+
+def axis_size(axis_name) -> int:
+    """Static size of a named mesh axis, from inside an SPMD context.
+
+    ``jax.lax.axis_size`` appeared after 0.4.x; the fallback reads the axis
+    frame that shard_map pushes (its ``size`` is a Python int at trace time).
+    """
+    size_fn = getattr(jax.lax, "axis_size", None)
+    if size_fn is not None:
+        return int(size_fn(axis_name))
+    import jax.core as _core  # jax <= 0.4.x
+
+    frame = _core.axis_frame(axis_name)  # returns a frame or the bare size
+    return int(getattr(frame, "size", frame))
+
+
+try:
+    shard_map = _resolve_shard_map()
+except ImportError:  # pragma: no cover - neither location present
+    raise ImportError(
+        "no shard_map found in jax or jax.experimental.shard_map; "
+        f"jax=={jax.__version__} is unsupported"
+    ) from None

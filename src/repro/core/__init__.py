@@ -33,7 +33,17 @@ from repro.core.operators import (
     register_operator,
     segmented_operator,
 )
-from repro.core.reduce_ops import dist_allreduce, dist_barrier, dist_reduce
+from repro.core.reduce_ops import (
+    allreduce_schedule,
+    barrier_schedule,
+    dist_allreduce,
+    dist_barrier,
+    dist_reduce,
+    reduce_schedule,
+    sim_allreduce,
+    sim_barrier,
+    sim_reduce,
+)
 from repro.core.packet import (
     AlgoType,
     CollType,
@@ -52,9 +62,12 @@ from repro.core.scan_collective import (
 from repro.core.selector import (
     TPU_V5E,
     LinkModel,
+    cost_features,
     cost_table,
     estimate_cost,
+    get_active_tuning,
     select_algorithm,
+    set_active_tuning,
 )
 
 __all__ = [
@@ -77,21 +90,30 @@ __all__ = [
     "WireDType",
     "WireOp",
     "algorithm_step_count",
+    "allreduce_schedule",
+    "barrier_schedule",
+    "cost_features",
     "cost_table",
     "dist_exscan",
     "dist_scan",
     "dist_scan_pair",
     "estimate_cost",
+    "get_active_tuning",
     "get_operator",
     "host_scan",
     "make_flash_op",
     "register_operator",
+    "reduce_schedule",
     "schedule_trace",
     "segmented_operator",
     "select_algorithm",
+    "set_active_tuning",
     "dist_allreduce",
     "dist_barrier",
     "dist_reduce",
+    "sim_allreduce",
+    "sim_barrier",
+    "sim_reduce",
     "sim_scan",
     "time_host_scan",
     "time_offloaded_scan",

@@ -3,6 +3,12 @@ MPI_Reduce / MPI_Allreduce / MPI_Barrier (the paper's companion collectives,
 refs [6][7]) built from the identical backend abstraction — a reduce is a
 scan whose result is read at the root; a barrier is a zero-byte allreduce.
 
+Every schedule is written against the abstract :class:`~repro.core.algorithms.
+Backend`, so the same code runs inside ``shard_map`` (``dist_*``) and on the
+single-device simulator (``sim_*``) — which is what lets the offload engine
+dispatch *all five* descriptor CollTypes through one code path and validate
+them without a mesh.
+
 These complete the CollectiveDescriptor's CollType coverage and give the
 benchmark suite a like-for-like latency comparison across collectives.
 """
@@ -13,7 +19,6 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
 from repro.core import algorithms as alg
 from repro.core.operators import AssocOp, get_operator
@@ -21,15 +26,18 @@ from repro.core.operators import AssocOp, get_operator
 PyTree = Any
 
 
-def dist_reduce(
-    x: PyTree, op: "AssocOp | str", axis_name: str, *, root: int = 0,
+# ---------------------------------------------------------------------------
+# Backend-generic schedules
+# ---------------------------------------------------------------------------
+
+
+def reduce_schedule(
+    backend: alg.Backend, x: PyTree, op: AssocOp, *, root: int = 0,
     algorithm: str = "binomial_tree",
 ) -> PyTree:
     """MPI_Reduce: the full reduction lands on ``root``; other ranks receive
     the operator identity. Runs the scan schedule (rank p-1 holds the total)
     and ships it to root with one permute."""
-    op = get_operator(op)
-    backend = alg.SpmdBackend(axis_name)
     p = backend.p
     total = alg.get_algorithm(algorithm)(backend, x, op)
     if p == 1:
@@ -42,32 +50,103 @@ def dist_reduce(
     return alg._bwhere(rank == root, moved, ident)
 
 
+def allreduce_schedule(
+    backend: alg.Backend, x: PyTree, op: AssocOp, *,
+    algorithm: str = "recursive_doubling",
+) -> PyTree:
+    """MPI_Allreduce (every rank ends with the total).
+
+    Power-of-two sizes run the classic recursive-doubling butterfly with the
+    combine *ordered by rank block* (received block precedes ours iff the
+    partner is lower), which keeps the schedule correct for non-commutative
+    operators such as SSD. Other sizes fall back to inclusive-scan +
+    broadcast-from-last, correct for any p and operator. For ops with zero
+    identity this is bitwise-equivalent to lax.psum's ring for 'sum'; the
+    point is schedule control (the paper's [7])."""
+    p = backend.p
+    if p == 1:
+        return x
+    if p & (p - 1) == 0:
+        rank = backend.rank()
+        acc_v, acc_f = x, alg._ones_flag(backend)
+        for k in range(alg.num_steps(p)):
+            d = 1 << k
+            perm = [(j, j ^ d) for j in range(p)]
+            rv, rf = backend.permute((acc_v, acc_f), perm)
+            partner_lower = (rank & d) != 0  # partner = rank ^ d < rank
+            lo_v, lo_f = alg._combine_lr(op, rv, rf, acc_v, acc_f)
+            hi_v, hi_f = alg._combine_lr(op, acc_v, acc_f, rv, rf)
+            acc_v = alg._bwhere(partner_lower, lo_v, hi_v)
+            acc_f = jnp.where(partner_lower, lo_f, hi_f)
+        return acc_v
+    total = alg.get_algorithm(algorithm)(backend, x, op)
+    bcast = backend.permute(total, [(p - 1, j) for j in range(p - 1)])
+    rank = backend.rank()
+    return alg._bwhere(rank == p - 1, total, bcast)
+
+
+def barrier_schedule(
+    backend: alg.Backend, *, algorithm: str = "recursive_doubling"
+) -> jax.Array:
+    """MPI_Barrier (the authors' NetFPGA barrier, ref [6]): a minimal-payload
+    allreduce; returns 1.0 per rank whose data dependency fences the program."""
+    from repro.core.operators import MAX
+
+    r = backend.rank()
+    token = jnp.ones(jnp.shape(r), jnp.float32)
+    return allreduce_schedule(backend, token, MAX, algorithm=algorithm)
+
+
+# ---------------------------------------------------------------------------
+# SPMD entry points (inside shard_map)
+# ---------------------------------------------------------------------------
+
+
+def dist_reduce(
+    x: PyTree, op: "AssocOp | str", axis_name: str, *, root: int = 0,
+    algorithm: str = "binomial_tree",
+) -> PyTree:
+    op = get_operator(op)
+    backend = alg.SpmdBackend(axis_name)
+    return reduce_schedule(backend, x, op, root=root, algorithm=algorithm)
+
+
 def dist_allreduce(
     x: PyTree, op: "AssocOp | str", axis_name: str, *,
     algorithm: str = "recursive_doubling",
 ) -> PyTree:
-    """MPI_Allreduce via the butterfly (every rank ends with the total).
-
-    For ops with zero identity this is bitwise-equivalent to lax.psum's ring
-    for 'sum'; the point is schedule control (the paper's [7])."""
     op = get_operator(op)
     backend = alg.SpmdBackend(axis_name)
-    p = backend.p
-    if p == 1:
-        return x
-    acc_v, acc_f = x, alg._ones_flag(backend)
-    for k in range(alg.num_steps(p)):
-        d = 1 << k
-        perm = [(j, j ^ d) for j in range(p) if (j ^ d) < p]
-        rv, rf = backend.permute((acc_v, acc_f), perm)
-        acc_v, acc_f = alg._combine_lr(op, acc_v, acc_f, rv, rf)
-    return acc_v
+    return allreduce_schedule(backend, x, op, algorithm=algorithm)
 
 
 def dist_barrier(axis_name: str, *, algorithm: str = "recursive_doubling") -> jax.Array:
-    """MPI_Barrier (the authors' NetFPGA barrier, ref [6]): a minimal-payload
-    allreduce; returns a scalar 1.0 whose data dependency fences the program."""
-    token = jnp.ones((), jnp.float32)
-    from repro.core.operators import MAX
+    backend = alg.SpmdBackend(axis_name)
+    return barrier_schedule(backend, algorithm=algorithm)
 
-    return dist_allreduce(token, MAX, axis_name, algorithm=algorithm)
+
+# ---------------------------------------------------------------------------
+# Simulator entry points (stacked leading rank axis, single device)
+# ---------------------------------------------------------------------------
+
+
+def sim_reduce(
+    stacked: PyTree, op: "AssocOp | str", p: int, *, root: int = 0,
+    algorithm: str = "binomial_tree",
+) -> PyTree:
+    op = get_operator(op)
+    return reduce_schedule(
+        alg.SimBackend(p), stacked, op, root=root, algorithm=algorithm
+    )
+
+
+def sim_allreduce(
+    stacked: PyTree, op: "AssocOp | str", p: int, *,
+    algorithm: str = "recursive_doubling",
+) -> PyTree:
+    op = get_operator(op)
+    return allreduce_schedule(alg.SimBackend(p), stacked, op, algorithm=algorithm)
+
+
+def sim_barrier(p: int, *, algorithm: str = "recursive_doubling") -> jax.Array:
+    return barrier_schedule(alg.SimBackend(p), algorithm=algorithm)

@@ -32,7 +32,9 @@ PyTree = Any
 
 
 def _axis_size(axis_name: str) -> int:
-    return int(lax.axis_size(axis_name))
+    from repro.compat import axis_size
+
+    return axis_size(axis_name)
 
 
 def dist_scan(
@@ -84,7 +86,7 @@ def dist_exscan(
     if descriptor is not None:
         algorithm = descriptor.algo_type
     if algorithm == "auto":
-        algorithm = select_algorithm(p, _payload_bytes(x), op)
+        algorithm = select_algorithm(p, _payload_bytes(x), op, coll="exscan")
     if use_inverse is None:
         use_inverse = algorithm == "invertible_doubling" and op.inverse is not None
 
@@ -168,8 +170,18 @@ def sim_scan(
     identity = op.identity_like(stacked)
     if p == 1:
         return identity
-    shifted = backend.permute(stacked, [(i, i + 1) for i in range(p - 1)])
     rank = backend.rank()
+    if (
+        algorithm == "invertible_doubling"
+        and op.inverse is not None
+        and op.commutative
+    ):
+        # The Fig. 3 subtraction trick, mirrored from dist_exscan: recover the
+        # exclusive value locally, skipping the structural shift permute.
+        inc = alg.get_algorithm(algorithm)(backend, stacked, op)
+        ex = op.combine(inc, op.inverse(stacked))
+        return alg._bwhere(rank != 0, ex, identity)
+    shifted = backend.permute(stacked, [(i, i + 1) for i in range(p - 1)])
     if not op.zero_identity:
         shifted = alg._bwhere(rank != 0, shifted, identity)
     out = alg.get_algorithm(algorithm)(backend, shifted, op)

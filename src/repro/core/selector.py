@@ -7,16 +7,19 @@ target interconnect:
 
     T(algo) = sum over steps of [ alpha + bytes_on_wire * beta + hops * gamma ]
 
-with per-algorithm step counts and wire patterns. Constants default to TPU
-v5e ICI (the production target); the benchmark suite re-fits alpha/beta for
-the CPU-simulated mesh so the selected crossovers can be validated in software.
+with per-algorithm step counts and wire patterns. The model is linear in
+(alpha, beta, gamma), exposed explicitly via :func:`cost_features`, so the
+offload autotuner (``repro.offload.tuner``) can least-squares fit the constants
+from measured latencies on whatever backend is actually running. Constants
+default to TPU v5e ICI (the production target); when a tuning table is active
+(:func:`set_active_tuning`) the selector consults its measured per-point
+winners and fitted model before falling back to the static constants.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Dict
+from typing import Dict, Optional, Tuple
 
 from repro.core.algorithms import ALGORITHMS, algorithm_step_count, num_steps
 from repro.core.operators import AssocOp
@@ -46,42 +49,48 @@ def _hop(stride: int, p: int, ring: bool) -> int:
     return min(stride, p - stride) if ring else stride
 
 
-def estimate_cost(
-    algo: str, p: int, payload_bytes: int, model: LinkModel = TPU_V5E
-) -> float:
-    """Predicted completion latency of one scan with ``algo`` at size p."""
+def cost_features(
+    algo: str, p: int, payload_bytes: int, ring: bool = True
+) -> Tuple[float, float, float]:
+    """(steps, bytes, hops) such that the predicted latency is their dot
+    product with (alpha, beta, gamma).
+
+    This is the design matrix row the autotuner fits against measured
+    latencies; :func:`estimate_cost` is exactly ``features . constants``.
+    """
     if p <= 1:
-        return 0.0
-    m = payload_bytes
-    a, b, g = model.alpha, model.beta, model.gamma
+        return (0.0, 0.0, 0.0)
+    m = float(payload_bytes)
     lg = num_steps(p)
     if algo in ("sequential", "sequential_pipelined"):
         # p-1 dependent single-hop steps. The pipelined form has identical
         # critical path; it differs in aggregate link traffic, not latency.
-        return (p - 1) * (a + m * b + g)
-    if algo in ("hillis_steele", "invertible_doubling"):
-        return sum(
-            a + m * b + _hop(1 << k, p, model.ring) * g for k in range(lg)
-        )
-    if algo == "recursive_doubling":
+        return (float(p - 1), (p - 1) * m, float(p - 1))
+    up_hops = float(sum(_hop(1 << k, p, ring) for k in range(lg)))
+    if algo in (
+        "hillis_steele",
+        "invertible_doubling",
         # pairwise exchange: full duplex links carry both directions at once.
-        return sum(
-            a + m * b + _hop(1 << k, p, model.ring) * g for k in range(lg)
-        )
-    if algo == "binomial_tree":
-        up = sum(a + m * b + _hop(1 << k, p, model.ring) * g for k in range(lg))
-        down = sum(
-            a + m * b + _hop(1 << (k - 1), p, model.ring) * g
-            for k in range(lg, 0, -1)
-        )
-        return up + down
-    if algo == "sklansky":
+        "recursive_doubling",
         # multicast: one payload injected, fan-out handled by the fabric;
         # worst hop in step k is the half-block diameter.
-        return sum(
-            a + m * b + _hop(1 << k, p, model.ring) * g for k in range(lg)
+        "sklansky",
+    ):
+        return (float(lg), lg * m, up_hops)
+    if algo == "binomial_tree":
+        down_hops = float(
+            sum(_hop(1 << (k - 1), p, ring) for k in range(lg, 0, -1))
         )
+        return (2.0 * lg, 2 * lg * m, up_hops + down_hops)
     raise ValueError(f"unknown algo {algo!r}")
+
+
+def estimate_cost(
+    algo: str, p: int, payload_bytes: int, model: LinkModel = TPU_V5E
+) -> float:
+    """Predicted completion latency of one scan with ``algo`` at size p."""
+    steps, nbytes, hops = cost_features(algo, p, payload_bytes, model.ring)
+    return steps * model.alpha + nbytes * model.beta + hops * model.gamma
 
 
 def cost_table(
@@ -93,18 +102,63 @@ def cost_table(
     }
 
 
+# ---------------------------------------------------------------------------
+# Tuning-table hook. ``repro.offload.tuning_cache`` registers the active table
+# here (duck-typed so core never imports offload): anything with
+# ``lookup(p, payload_bytes, coll) -> Optional[str]`` and
+# ``fitted_model() -> Optional[LinkModel]``.
+# ---------------------------------------------------------------------------
+
+_ACTIVE_TUNING = None
+
+
+def set_active_tuning(table) -> None:
+    """Install (or, with None, clear) the tuning table ``select_algorithm``
+    consults before the static constants."""
+    global _ACTIVE_TUNING
+    _ACTIVE_TUNING = table
+
+
+def get_active_tuning():
+    return _ACTIVE_TUNING
+
+
+def _applicable(name: str, p: int, op: AssocOp) -> bool:
+    if name not in ALGORITHMS:
+        return False
+    if name == "invertible_doubling" and (
+        op.inverse is None or not op.commutative
+    ):
+        return False
+    return True
+
+
 def select_algorithm(
     p: int,
     payload_bytes: int,
     op: AssocOp,
-    model: LinkModel = TPU_V5E,
+    model: Optional[LinkModel] = None,
+    coll: str = "scan",
 ) -> str:
     """Pick the cheapest *applicable* schedule.
+
+    Resolution order when ``model`` is not given explicitly:
+      1. an active tuning table's measured winner at/near (p, payload, coll);
+      2. the tuning table's least-squares-fitted LinkModel;
+      3. the static ``TPU_V5E`` constants.
 
     Applicability: invertible_doubling needs op.inverse (+ commutativity for
     its exscan payoff); everything else is generic. Ties break toward fewer
     steps, then lexicographic for determinism.
     """
+    if model is None:
+        if _ACTIVE_TUNING is not None:
+            winner = _ACTIVE_TUNING.lookup(p, payload_bytes, coll)
+            if winner is not None and _applicable(winner, p, op):
+                return winner
+            model = _ACTIVE_TUNING.fitted_model()
+        if model is None:
+            model = TPU_V5E
     costs = cost_table(p, payload_bytes, model)
     if op.inverse is None or not op.commutative:
         costs.pop("invertible_doubling", None)

@@ -1,1 +1,2 @@
 from repro.launch.mesh import make_production_mesh, make_smoke_mesh, production_topology
+from repro.launch.offload_runtime import build_offload_engine, get_engine

@@ -1,0 +1,103 @@
+"""Launch-time construction of the offload engine + tuning-table plumbing.
+
+Every launcher that issues collective descriptors goes through here:
+
+  * :func:`build_offload_engine` loads (or, on request, generates) the tuning
+    table for the current backend, activates it underneath
+    ``select_algorithm``, and returns a ready :class:`OffloadEngine` — the
+    process-wide "NIC".
+  * ``python -m repro.launch.offload_runtime --tune`` is the operator-facing
+    way to produce a tuning table once and reuse it across launches via
+    ``$REPRO_TUNING_TABLE``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+from pathlib import Path
+from typing import Optional
+
+from repro.offload import (
+    TUNING_TABLE_ENV,
+    OffloadEngine,
+    TuningCache,
+    autotune,
+)
+
+DEFAULT_TABLE_PATH = Path(
+    os.environ.get("REPRO_CACHE_DIR", os.path.expanduser("~/.cache/repro"))
+) / "tuning_table.json"
+
+_ENGINE: Optional[OffloadEngine] = None
+
+
+def build_offload_engine(
+    *,
+    tuning_table: "str | Path | None" = None,
+    autotune_if_missing: bool = False,
+    tune_budget_s: float = 30.0,
+) -> OffloadEngine:
+    """Construct the launch's engine, with the tuning table resolved from
+    (in order): the explicit argument, ``$REPRO_TUNING_TABLE``, the default
+    cache path, or — when ``autotune_if_missing`` — a fresh budgeted tuning
+    run persisted to the default path for the next launch."""
+    path = tuning_table or os.environ.get(TUNING_TABLE_ENV)
+    cache: Optional[TuningCache] = None
+    if path:
+        # An explicitly named table must exist: silently falling through to
+        # a different (or no) table would tune against the wrong cost model.
+        if not Path(path).exists():
+            raise FileNotFoundError(
+                f"tuning table {path!r} (from argument or "
+                f"${TUNING_TABLE_ENV}) does not exist"
+            )
+        cache = TuningCache.load(path)
+    elif DEFAULT_TABLE_PATH.exists():
+        cache = TuningCache.load(DEFAULT_TABLE_PATH)
+    elif autotune_if_missing:
+        cache = autotune(
+            ps=(2, 4, 8),
+            payloads=(1024, 65536),
+            iters=3,
+            time_budget_s=tune_budget_s,
+        )
+        cache.save(DEFAULT_TABLE_PATH)
+    if cache is not None:
+        cache.activate()
+    return OffloadEngine()
+
+
+def get_engine() -> OffloadEngine:
+    """Process-wide engine singleton (built lazily on first use)."""
+    global _ENGINE
+    if _ENGINE is None:
+        _ENGINE = build_offload_engine()
+    return _ENGINE
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tune", action="store_true", help="run the autotuner")
+    ap.add_argument("--out", default=str(DEFAULT_TABLE_PATH))
+    ap.add_argument("--budget-s", type=float, default=60.0)
+    ap.add_argument("--iters", type=int, default=5)
+    args = ap.parse_args()
+    if not args.tune:
+        ap.error("nothing to do; pass --tune")
+    cache = autotune(
+        iters=args.iters, time_budget_s=args.budget_s, verbose=True
+    )
+    out = cache.save(args.out)
+    fitted = cache.fitted_model()
+    print(f"tuning table written to {out}")
+    if fitted is not None:
+        print(
+            f"fitted LinkModel: alpha={fitted.alpha:.3e}s "
+            f"beta={fitted.beta:.3e}s/B gamma={fitted.gamma:.3e}s"
+        )
+    print(f"export {TUNING_TABLE_ENV}={out}  # to use it in later launches")
+
+
+if __name__ == "__main__":
+    main()

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.compat import shard_map
 from repro.perf_flags import FLAGS as _DEFAULT_FLAGS
 from repro import perf_flags
 from repro.sharding import current_topology, shard
@@ -538,7 +539,7 @@ def cached_attention(p, x, kc, vc, cache_len, cfg, *, window=0, kv_mode="local")
         cspec = P(bspec, axis, None, None)
         rspec = P(bspec, None, None, None)
         win_arr = window if isinstance(window, jax.Array) else jnp.array(window)
-        o, kc, vc = jax.shard_map(
+        o, kc, vc = shard_map(
             region,
             mesh=topo.mesh,
             in_specs=(rspec, rspec, rspec, cspec, cspec, P(), P()),
@@ -602,13 +603,13 @@ def explicit_tp_mlp(p: Params, x: jax.Array, act: str, topo) -> jax.Array:
 
     xspec = P(dpspec, None, None)
     if gated:
-        fn = jax.shard_map(
+        fn = shard_map(
             region, mesh=topo.mesh,
             in_specs=(xspec, P(None, axis), P(None, axis), P(axis, None)),
             out_specs=xspec, check_vma=False,
         )
         return fn(x, p["w_in"], p["w_gate"], p["w_out"])
-    fn = jax.shard_map(
+    fn = shard_map(
         lambda x_l, wi, wo: region(x_l, wi, None, wo),
         mesh=topo.mesh,
         in_specs=(xspec, P(None, axis), P(axis, None)),
@@ -646,14 +647,14 @@ def explicit_tp_qkv(p: Params, x: jax.Array, xkv: Optional[jax.Array], topo):
     out_kv = out_h if kv_sharded else P(dpspec, None, None, None)
 
     if has_bias:
-        fn = jax.shard_map(
+        fn = shard_map(
             region, mesh=topo.mesh,
             in_specs=(xspec, xspec, hspec, kvspec, kvspec, hbspec, kvbspec, kvbspec),
             out_specs=(out_h, out_kv, out_kv), check_vma=False,
         )
         return fn(x, xkv if xkv is not None else x, p["wq"], p["wk"], p["wv"],
                   p["bq"], p["bk"], p["bv"])
-    fn = jax.shard_map(
+    fn = shard_map(
         lambda x_l, xkv_l, wq, wk, wv: region(x_l, xkv_l, wq, wk, wv, None, None, None),
         mesh=topo.mesh,
         in_specs=(xspec, xspec, hspec, kvspec, kvspec),
@@ -674,7 +675,7 @@ def explicit_tp_wo(out_heads: jax.Array, wo: jax.Array, topo) -> jax.Array:
         r = lax.optimization_barrier(r.astype(o_l.dtype))
         return lax.psum(r, axis)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         region, mesh=topo.mesh,
         in_specs=(P(dpspec, None, axis, None), P(axis, None, None)),
         out_specs=P(dpspec, None, None), check_vma=False,

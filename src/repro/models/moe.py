@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.kernels.ops import prefix_scan
 from repro.models.layers import _ACT
 from repro.sharding import current_topology
@@ -219,7 +220,7 @@ def moe_block(p: Params, x: jax.Array, cfg, *, act: str = "silu"):
 
     w_spec = P(axis, None, None)
     if gated:
-        mapped = jax.shard_map(
+        mapped = shard_map(
             region,
             mesh=topo.mesh,
             in_specs=(x_spec, P(None, None), w_spec, w_spec, w_spec),
@@ -228,7 +229,7 @@ def moe_block(p: Params, x: jax.Array, cfg, *, act: str = "silu"):
         )
         y, lb, z = mapped(x, p["router"], p["w_in"], p["w_gate"], p["w_out"])
     else:
-        mapped = jax.shard_map(
+        mapped = shard_map(
             region_plain,
             mesh=topo.mesh,
             in_specs=(x_spec, P(None, None), w_spec, w_spec),

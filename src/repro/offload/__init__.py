@@ -1,0 +1,58 @@
+"""Descriptor-driven offload engine — the software analogue of the paper's
+NIC firmware.
+
+  OffloadEngine          — one descriptor in, one result out, with a
+                           compiled-schedule cache + telemetry (engine)
+  autotune / TuningCache — measured-cost autotuner + persisted tuning table
+                           that re-fits the selector's LinkModel (tuner,
+                           tuning_cache)
+  *_hierarchical_scan    — two-level scans over 2D meshes (hierarchical)
+"""
+
+from repro.offload.engine import (
+    CompiledSchedule,
+    EngineTelemetry,
+    OffloadEngine,
+    wire_dtype,
+    wire_op_id,
+    wire_op_name,
+)
+from repro.offload.hierarchical import (
+    dist_hierarchical_scan,
+    flat_equivalent,
+    sim_hierarchical_scan,
+)
+from repro.offload.tuner import (
+    DEFAULT_PAYLOADS,
+    DEFAULT_PS,
+    autotune,
+    time_sim_collective,
+)
+from repro.offload.tuning_cache import (
+    TUNING_TABLE_ENV,
+    Measurement,
+    TuningCache,
+    deactivate,
+    load_default_table,
+)
+
+__all__ = [
+    "CompiledSchedule",
+    "DEFAULT_PAYLOADS",
+    "DEFAULT_PS",
+    "EngineTelemetry",
+    "Measurement",
+    "OffloadEngine",
+    "TUNING_TABLE_ENV",
+    "TuningCache",
+    "autotune",
+    "deactivate",
+    "dist_hierarchical_scan",
+    "flat_equivalent",
+    "load_default_table",
+    "sim_hierarchical_scan",
+    "time_sim_collective",
+    "wire_dtype",
+    "wire_op_id",
+    "wire_op_name",
+]

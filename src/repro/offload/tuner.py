@@ -1,0 +1,123 @@
+"""Measured-cost autotuner for the offload engine.
+
+``select_algorithm`` defaults to TPU v5e ICI constants — the production
+target's topology, not necessarily the backend actually running. This module
+re-derives the cost model the way the paper's host runtime would: time every
+schedule on the *actual* backend over a (p, payload) grid, record per-point
+winners, and least-squares fit the LinkModel's alpha/beta/gamma against the
+:func:`~repro.core.selector.cost_features` design matrix. The result is a
+:class:`~repro.offload.tuning_cache.TuningCache` that, once activated,
+replaces the static constants underneath every ``algorithm="auto"`` call.
+
+Both collectives the engine scans with are measured: inclusive ("scan") and
+exclusive ("exscan"), because the invertible-doubling subtraction trick only
+pays off in the exclusive form — a distinction the static model cannot see.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Iterable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.algorithms import ALGORITHMS
+from repro.core.operators import AssocOp, get_operator
+from repro.core.scan_collective import sim_scan
+from repro.offload.tuning_cache import TuningCache
+
+DEFAULT_PS: Tuple[int, ...] = (2, 4, 8, 16)
+DEFAULT_PAYLOADS: Tuple[int, ...] = (1024, 65536, 1 << 20)
+DEFAULT_COLLS: Tuple[str, ...] = ("scan", "exscan")
+
+
+def _applicable(algo: str, op: AssocOp) -> bool:
+    return algo != "invertible_doubling" or (
+        op.inverse is not None and op.commutative
+    )
+
+
+def time_sim_collective(
+    coll: str,
+    algo: str,
+    p: int,
+    payload_bytes: int,
+    op: "AssocOp | str" = "sum",
+    *,
+    iters: int = 5,
+    seed: int = 0,
+) -> float:
+    """Median wall-clock seconds of the fused (single-dispatch) schedule on
+    the simulator backend — the offloaded path the engine actually runs."""
+    op = get_operator(op)
+    n = max(1, payload_bytes // 4)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(p, n)).astype(np.float32))
+    inclusive = coll == "scan"
+    fused = jax.jit(
+        lambda s: sim_scan(s, op, p, algorithm=algo, inclusive=inclusive)
+    )
+    out = fused(x)
+    jax.tree.map(lambda a: a.block_until_ready(), out)  # warm the jit
+    times = []
+    for _ in range(max(1, iters)):
+        t0 = time.perf_counter()
+        out = fused(x)
+        jax.tree.map(lambda a: a.block_until_ready(), out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def autotune(
+    *,
+    ps: Sequence[int] = DEFAULT_PS,
+    payloads: Sequence[int] = DEFAULT_PAYLOADS,
+    colls: Sequence[str] = DEFAULT_COLLS,
+    algorithms: Optional[Iterable[str]] = None,
+    op: "AssocOp | str" = "sum",
+    iters: int = 5,
+    time_budget_s: Optional[float] = None,
+    verbose: bool = False,
+) -> TuningCache:
+    """Micro-benchmark the full (coll, algo, p, payload) grid into a cache.
+
+    ``time_budget_s`` bounds total wall clock: once exceeded, the remaining
+    grid points are skipped (winners/fit use whatever was measured) — this is
+    what keeps the CI smoke run inside its ~10 s envelope.
+    """
+    op = get_operator(op)
+    cache = TuningCache()
+    algos = list(algorithms) if algorithms is not None else sorted(ALGORITHMS)
+    t_start = time.perf_counter()
+    skipped = 0
+    for p in ps:
+        for payload in payloads:
+            for coll in colls:
+                for algo in algos:
+                    if not _applicable(algo, op):
+                        continue
+                    if (
+                        time_budget_s is not None
+                        and time.perf_counter() - t_start > time_budget_s
+                    ):
+                        skipped += 1
+                        continue
+                    t = time_sim_collective(
+                        coll, algo, p, payload, op, iters=iters
+                    )
+                    cache.record(coll, algo, p, payload, t)
+                    if verbose:
+                        print(
+                            f"tune {coll:6s} p={p:3d} bytes={payload:8d} "
+                            f"{algo:22s} {t*1e6:10.1f}us"
+                        )
+    if verbose and skipped:
+        print(f"tune: time budget hit, skipped {skipped} grid points")
+    # Materialize winners + fit eagerly so save() is cheap and callers can
+    # inspect the result right away.
+    cache.fitted_model()
+    _ = cache.winners
+    return cache

@@ -1,0 +1,230 @@
+"""Persistent tuning table: measured latencies, per-point winners, and the
+least-squares-fitted LinkModel.
+
+The NetFPGA paper leaves ``algo_type`` to the host runtime's "intelligent
+selection"; this module is where that intelligence persists. The autotuner
+(:mod:`repro.offload.tuner`) records micro-benchmark latencies for every
+(coll, algorithm, p, payload) grid point, this cache reduces them to
+
+  * ``winners`` — the measured-fastest applicable algorithm per grid point,
+    consulted first by ``select_algorithm`` (nearest grid point in log2
+    space when the query falls off-grid);
+  * ``fitted`` — alpha/beta/gamma solved from the measurements against
+    :func:`repro.core.selector.cost_features`, used for points too far from
+    any measurement;
+
+and round-trips the whole table through JSON so one tuning run serves every
+subsequent process on the same backend (`REPRO_TUNING_TABLE` env var or an
+explicit ``load``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+import platform
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.selector import (
+    LinkModel,
+    cost_features,
+    set_active_tuning,
+)
+
+SCHEMA_VERSION = 1
+
+#: env var pointing at a tuning table to auto-load at launch
+TUNING_TABLE_ENV = "REPRO_TUNING_TABLE"
+
+# Queries farther than this (in |log2| distance on p and payload combined)
+# from every measured grid point fall through to the fitted model.
+_MAX_GRID_DISTANCE = 3.0
+
+
+@dataclasses.dataclass(frozen=True)
+class Measurement:
+    """One micro-benchmark sample: median seconds for a full collective."""
+
+    coll: str            # "scan" | "exscan"
+    algo: str
+    p: int
+    payload_bytes: int
+    seconds: float
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_json(d: dict) -> "Measurement":
+        return Measurement(
+            coll=str(d["coll"]),
+            algo=str(d["algo"]),
+            p=int(d["p"]),
+            payload_bytes=int(d["payload_bytes"]),
+            seconds=float(d["seconds"]),
+        )
+
+
+class TuningCache:
+    """Measurements + winners + fitted model, with JSON persistence."""
+
+    def __init__(self, *, backend: Optional[str] = None):
+        self.backend = backend or _backend_fingerprint()
+        self.measurements: List[Measurement] = []
+        self._winners: Dict[Tuple[str, int, int], str] = {}
+        self._fitted: Optional[LinkModel] = None
+
+    # -- recording ---------------------------------------------------------
+
+    def record(
+        self, coll: str, algo: str, p: int, payload_bytes: int, seconds: float
+    ) -> None:
+        self.measurements.append(
+            Measurement(coll, algo, int(p), int(payload_bytes), float(seconds))
+        )
+        self._winners = {}  # invalidate
+        self._fitted = None
+
+    # -- reductions --------------------------------------------------------
+
+    @property
+    def winners(self) -> Dict[Tuple[str, int, int], str]:
+        if not self._winners and self.measurements:
+            best: Dict[Tuple[str, int, int], Tuple[float, str]] = {}
+            for m in self.measurements:
+                key = (m.coll, m.p, m.payload_bytes)
+                cur = best.get(key)
+                if cur is None or (m.seconds, m.algo) < cur:
+                    best[key] = (m.seconds, m.algo)
+            self._winners = {k: algo for k, (_, algo) in best.items()}
+        return self._winners
+
+    def fitted_model(self) -> Optional[LinkModel]:
+        """Least-squares (alpha, beta, gamma) over the inclusive-scan
+        measurements; None until enough samples exist."""
+        if self._fitted is None:
+            rows, targets = [], []
+            for m in self.measurements:
+                if m.coll != "scan":
+                    continue
+                try:
+                    rows.append(cost_features(m.algo, m.p, m.payload_bytes))
+                except ValueError:
+                    continue
+                targets.append(m.seconds)
+            if len(rows) >= 3:
+                coef, *_ = np.linalg.lstsq(
+                    np.asarray(rows, dtype=np.float64),
+                    np.asarray(targets, dtype=np.float64),
+                    rcond=None,
+                )
+                # a negative fitted constant means the feature is noise at
+                # this backend's scale; clamp to a tiny positive epsilon so
+                # the model stays physical (and ties still break on steps).
+                a, b, g = (max(float(c), 1e-12) for c in coef)
+                self._fitted = LinkModel(alpha=a, beta=b, gamma=g, ring=True)
+        return self._fitted
+
+    # -- selector interface ------------------------------------------------
+
+    def lookup(
+        self, p: int, payload_bytes: int, coll: str = "scan"
+    ) -> Optional[str]:
+        """Measured winner at the nearest grid point, or None when the query
+        is too far from everything measured (off-grid -> fitted model)."""
+        table = self.winners
+        best: Optional[Tuple[float, str]] = None
+        for (c, gp, gm), algo in table.items():
+            if c != coll:
+                continue
+            dist = abs(math.log2(max(p, 1)) - math.log2(max(gp, 1))) + 0.25 * abs(
+                math.log2(max(payload_bytes, 1)) - math.log2(max(gm, 1))
+            )
+            if best is None or dist < best[0]:
+                best = (dist, algo)
+        if best is None or best[0] > _MAX_GRID_DISTANCE:
+            return None
+        return best[1]
+
+    # -- persistence -------------------------------------------------------
+
+    def to_json(self) -> dict:
+        fitted = self.fitted_model()
+        return {
+            "schema_version": SCHEMA_VERSION,
+            "backend": self.backend,
+            "measurements": [m.to_json() for m in self.measurements],
+            "winners": [
+                {"coll": c, "p": p, "payload_bytes": m, "algo": algo}
+                for (c, p, m), algo in sorted(self.winners.items())
+            ],
+            "fitted": None
+            if fitted is None
+            else {
+                "alpha": fitted.alpha,
+                "beta": fitted.beta,
+                "gamma": fitted.gamma,
+                "ring": fitted.ring,
+            },
+        }
+
+    def save(self, path: "str | Path") -> Path:
+        path = Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(self.to_json(), indent=2))
+        return path
+
+    @classmethod
+    def load(cls, path: "str | Path") -> "TuningCache":
+        d = json.loads(Path(path).read_text())
+        if d.get("schema_version") != SCHEMA_VERSION:
+            raise ValueError(
+                f"tuning table {path} has schema {d.get('schema_version')}, "
+                f"expected {SCHEMA_VERSION}"
+            )
+        cache = cls(backend=d.get("backend"))
+        for m in d.get("measurements", []):
+            cache.measurements.append(Measurement.from_json(m))
+        f = d.get("fitted")
+        if f is not None:
+            cache._fitted = LinkModel(
+                alpha=float(f["alpha"]),
+                beta=float(f["beta"]),
+                gamma=float(f["gamma"]),
+                ring=bool(f.get("ring", True)),
+            )
+        return cache
+
+    # -- activation --------------------------------------------------------
+
+    def activate(self) -> "TuningCache":
+        """Make this table the one ``select_algorithm`` consults."""
+        set_active_tuning(self)
+        return self
+
+
+def deactivate() -> None:
+    set_active_tuning(None)
+
+
+def load_default_table() -> Optional[TuningCache]:
+    """Load + activate the table named by ``$REPRO_TUNING_TABLE``, if any."""
+    path = os.environ.get(TUNING_TABLE_ENV)
+    if not path or not Path(path).exists():
+        return None
+    return TuningCache.load(path).activate()
+
+
+def _backend_fingerprint() -> str:
+    try:
+        import jax
+
+        dev = jax.devices()[0]
+        return f"{dev.platform}:{dev.device_kind}:{platform.machine()}"
+    except Exception:  # pragma: no cover - jax init failure
+        return f"unknown:{platform.machine()}"

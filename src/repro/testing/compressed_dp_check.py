@@ -15,6 +15,7 @@ import sys  # noqa: E402
 from functools import partial  # noqa: E402
 
 import jax  # noqa: E402
+from repro.compat import shard_map  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 from jax.sharding import Mesh, PartitionSpec as P  # noqa: E402
@@ -44,7 +45,7 @@ def main() -> None:
                 g = jax.lax.pmean(g, "dp")
             return w - 0.1 * g, err
 
-        mapped = jax.shard_map(
+        mapped = shard_map(
             step, mesh=mesh,
             in_specs=(P(), {"w": P()}, P("dp", None, None), P("dp", None)),
             out_specs=(P(), {"w": P()}),

@@ -1,0 +1,147 @@
+"""Property-test shim: real hypothesis when installed, deterministic fallback
+when not.
+
+The test suite's property tests (`tests/test_scan_algorithms.py` etc.) were
+written against hypothesis, which is not available in offline containers.
+Importing ``given/settings/strategies`` from this module instead of from
+``hypothesis`` keeps the full shrinking/fuzzing behavior wherever hypothesis
+is installed, and otherwise degrades to a fixed, seeded sweep of examples —
+enough to keep every property exercised (and the suite green) without network
+access.
+
+Only the strategy surface the suite actually uses is implemented:
+``integers``, ``floats(width=)``, ``booleans``, ``sampled_from``, ``lists``,
+and ``data`` (interactive draws). Example count per test is
+``min(max_examples, REPRO_SHIM_MAX_EXAMPLES)`` (default 12) with a seed
+derived from the test name, so failures reproduce exactly.
+"""
+
+from __future__ import annotations
+
+import os
+import zlib
+
+try:  # pragma: no cover - exercised only where hypothesis exists
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import numpy as np
+
+    _CAP = int(os.environ.get("REPRO_SHIM_MAX_EXAMPLES", "12"))
+    _DEFAULT_EXAMPLES = 10
+
+    class _Strategy:
+        def __init__(self, draw_fn, label: str):
+            self._draw_fn = draw_fn
+            self._label = label
+
+        def draw(self, rng):
+            return self._draw_fn(rng)
+
+        def __repr__(self) -> str:
+            return self._label
+
+    class _DataStrategy:
+        """Marker for hypothesis' interactive ``st.data()``."""
+
+    class _DataObject:
+        def __init__(self, rng):
+            self._rng = rng
+
+        def draw(self, strategy, label=None):
+            return strategy.draw(self._rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)),
+                f"integers({min_value}, {max_value})",
+            )
+
+        @staticmethod
+        def floats(min_value, max_value, width=64, **_ignored):
+            def draw(rng):
+                v = float(rng.uniform(min_value, max_value))
+                if width == 32:
+                    v = float(np.float32(v))
+                return v
+
+            return _Strategy(draw, f"floats({min_value}, {max_value})")
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)), "booleans()")
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+
+            def draw(rng):
+                return seq[int(rng.integers(len(seq)))]
+
+            return _Strategy(draw, f"sampled_from({seq!r})")
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=None):
+            def draw(rng):
+                hi = max_size if max_size is not None else min_size + 10
+                n = int(rng.integers(min_size, hi + 1))
+                return [elements.draw(rng) for _ in range(n)]
+
+            return _Strategy(draw, f"lists(..., {min_size}, {max_size})")
+
+        @staticmethod
+        def data():
+            return _DataStrategy()
+
+    strategies = _Strategies()
+
+    def settings(max_examples=None, deadline=None, **_ignored):
+        # Applied *outside* @given in the suite, so it decorates the runner
+        # wrapper; the wrapper reads the attribute at call time.
+        def deco(fn):
+            if max_examples is not None:
+                fn._shim_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strategy_kwargs):
+        def deco(fn):
+            def wrapper():
+                requested = getattr(
+                    wrapper, "_shim_max_examples", _DEFAULT_EXAMPLES
+                )
+                n = max(1, min(requested, _CAP))
+                base = zlib.crc32(fn.__qualname__.encode("utf-8"))
+                for i in range(n):
+                    rng = np.random.default_rng((base + i) % (2**32))
+                    kwargs = {}
+                    for name, strat in strategy_kwargs.items():
+                        if isinstance(strat, _DataStrategy):
+                            kwargs[name] = _DataObject(rng)
+                        else:
+                            kwargs[name] = strat.draw(rng)
+                    try:
+                        fn(**kwargs)
+                    except Exception as e:
+                        shown = {
+                            k: v
+                            for k, v in kwargs.items()
+                            if not isinstance(v, _DataObject)
+                        }
+                        raise AssertionError(
+                            f"{fn.__qualname__} falsified on deterministic "
+                            f"example {i}/{n}: {shown!r}"
+                        ) from e
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+
+        return deco

@@ -12,6 +12,7 @@ os.environ["XLA_FLAGS"] = (
 import sys  # noqa: E402
 
 import jax  # noqa: E402
+from repro.compat import shard_map  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 from jax.sharding import Mesh, PartitionSpec as P  # noqa: E402
@@ -31,7 +32,7 @@ def main() -> None:
         return dist_reduce(xs, "sum", "r", root=2)
 
     got = np.asarray(
-        jax.jit(jax.shard_map(red, mesh=mesh, in_specs=P("r"), out_specs=P("r")))(
+        jax.jit(shard_map(red, mesh=mesh, in_specs=P("r"), out_specs=P("r")))(
             jnp.asarray(x)
         )
     )
@@ -47,7 +48,7 @@ def main() -> None:
         return dist_allreduce(xs, "sum", "r")
 
     got = np.asarray(
-        jax.jit(jax.shard_map(ar, mesh=mesh, in_specs=P("r"), out_specs=P("r")))(
+        jax.jit(shard_map(ar, mesh=mesh, in_specs=P("r"), out_specs=P("r")))(
             jnp.asarray(x)
         )
     )
@@ -60,7 +61,7 @@ def main() -> None:
         return dist_allreduce(xs, "max", "r")
 
     got = np.asarray(
-        jax.jit(jax.shard_map(arm, mesh=mesh, in_specs=P("r"), out_specs=P("r")))(
+        jax.jit(shard_map(arm, mesh=mesh, in_specs=P("r"), out_specs=P("r")))(
             jnp.asarray(x)
         )
     )
@@ -74,7 +75,7 @@ def main() -> None:
         return xs * t
 
     got = np.asarray(
-        jax.jit(jax.shard_map(bar, mesh=mesh, in_specs=P("r"), out_specs=P("r")))(
+        jax.jit(shard_map(bar, mesh=mesh, in_specs=P("r"), out_specs=P("r")))(
             jnp.asarray(x)
         )
     )

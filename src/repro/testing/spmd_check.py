@@ -15,6 +15,7 @@ os.environ["XLA_FLAGS"] = (
 )
 
 import jax  # noqa: E402
+from repro.compat import shard_map  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 from jax.sharding import Mesh, PartitionSpec as P  # noqa: E402
@@ -41,7 +42,7 @@ def main() -> None:
             f = dist_scan if inclusive else dist_exscan
             return f(xs, op, "r", algorithm=algorithm)
 
-        m = jax.shard_map(body, mesh=mesh, in_specs=P("r"), out_specs=P("r"))
+        m = shard_map(body, mesh=mesh, in_specs=P("r"), out_specs=P("r"))
         return np.asarray(jax.jit(m)(x))
 
     # sum / max over a (p, n) payload sharded one row per rank
@@ -84,7 +85,7 @@ def main() -> None:
         def body(xs):
             return dist_scan(xs, SSD, "r", algorithm=algorithm)
 
-        m = jax.shard_map(
+        m = shard_map(
             body, mesh=mesh, in_specs=((P("r"), P("r")),), out_specs=P("r")
         )
         ga, gb = jax.jit(m)((jnp.asarray(a), jnp.asarray(b)))
@@ -100,7 +101,7 @@ def main() -> None:
     def body(xs):
         return dist_scan_pair(xs, "sum", "r", algorithm="auto")
 
-    m = jax.shard_map(body, mesh=mesh, in_specs=P("r"), out_specs=P("r"))
+    m = shard_map(body, mesh=mesh, in_specs=P("r"), out_specs=P("r"))
     ex, inc = jax.jit(m)(jnp.asarray(x))
     winc = np.cumsum(x, axis=0)
     wex = np.concatenate([np.zeros((1, 32), np.float32), winc[:-1]])

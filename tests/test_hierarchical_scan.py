@@ -1,0 +1,101 @@
+"""Two-level (2D-mesh) hierarchical scans vs the flat single-axis reference.
+
+The acceptance bar: bitwise equality with the flat scan for sum/max on the
+sim backend, plus the SPMD realization on a real 2D device mesh (subprocess,
+so the device count is set before jax initializes)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import SSD, sim_scan
+from repro.offload import flat_equivalent, sim_hierarchical_scan
+
+SHAPES = [(2, 4), (4, 4), (3, 5), (4, 2), (2, 8)]
+
+
+def _stacked(po, pi, n=8, seed=0, integer=True):
+    rng = np.random.default_rng(seed)
+    if integer:
+        x = rng.integers(-6, 7, size=(po, pi, n)).astype(np.float32)
+    else:
+        x = rng.normal(size=(po, pi, n)).astype(np.float32)
+    return jnp.asarray(x)
+
+
+@pytest.mark.parametrize("po,pi", SHAPES)
+@pytest.mark.parametrize("opname", ["sum", "max"])
+def test_hierarchical_matches_flat_bitwise(po, pi, opname):
+    x = _stacked(po, pi, integer=(opname == "sum"), seed=po * 31 + pi)
+    got = sim_hierarchical_scan(x, opname, po, pi)
+    want = sim_scan(
+        flat_equivalent(x, po, pi), opname, po * pi,
+        algorithm="hillis_steele",
+    )
+    np.testing.assert_array_equal(
+        np.asarray(got).reshape(po * pi, -1), np.asarray(want)
+    )
+
+
+@pytest.mark.parametrize("po,pi", [(2, 4), (3, 3)])
+def test_hierarchical_exclusive_matches_flat_bitwise(po, pi):
+    x = _stacked(po, pi, seed=5)
+    got = sim_hierarchical_scan(x, "sum", po, pi, inclusive=False)
+    want = sim_scan(
+        flat_equivalent(x, po, pi), "sum", po * pi,
+        algorithm="hillis_steele", inclusive=False,
+    )
+    np.testing.assert_array_equal(
+        np.asarray(got).reshape(po * pi, -1), np.asarray(want)
+    )
+
+
+def test_hierarchical_int32_exact():
+    po, pi, n = 4, 4, 6
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.integers(-100, 100, size=(po, pi, n)).astype(np.int32))
+    got = sim_hierarchical_scan(x, "sum", po, pi)
+    want = np.cumsum(np.asarray(x).reshape(po * pi, n), axis=0)
+    np.testing.assert_array_equal(
+        np.asarray(got).reshape(po * pi, n), want
+    )
+
+
+def test_hierarchical_ssd_non_commutative():
+    """The SSD (decay, state) recurrence must respect rank order across the
+    outer/inner split."""
+    po, pi, n = 2, 4, 8
+    ptotal = po * pi
+    rng = np.random.default_rng(11)
+    a = rng.uniform(0.5, 1.0, size=(po, pi, n)).astype(np.float32)
+    b = rng.normal(size=(po, pi, n)).astype(np.float32)
+    ga, gb = sim_hierarchical_scan(
+        (jnp.asarray(a), jnp.asarray(b)), SSD, po, pi
+    )
+    af, bf = a.reshape(ptotal, n), b.reshape(ptotal, n)
+    A = np.empty_like(af)
+    B = np.empty_like(bf)
+    A[0], B[0] = af[0], bf[0]
+    for j in range(1, ptotal):
+        A[j] = af[j] * A[j - 1]
+        B[j] = af[j] * B[j - 1] + bf[j]
+    np.testing.assert_allclose(np.asarray(ga).reshape(ptotal, n), A, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gb).reshape(ptotal, n), B, atol=1e-5)
+
+
+@pytest.mark.parametrize("algo", ["sequential", "binomial_tree", "sklansky"])
+def test_hierarchical_any_inner_outer_algorithm(algo):
+    po, pi = 4, 4
+    x = _stacked(po, pi, seed=9)
+    got = sim_hierarchical_scan(
+        x, "sum", po, pi, inner_algorithm=algo, outer_algorithm=algo
+    )
+    want = np.cumsum(np.asarray(x).reshape(po * pi, -1), axis=0)
+    np.testing.assert_array_equal(
+        np.asarray(got).reshape(po * pi, -1), want
+    )
+
+
+def test_hierarchical_spmd_2d_mesh(subprocess_runner):
+    """dist_hierarchical_scan on a real 2x4 host-device mesh."""
+    subprocess_runner("repro.testing.hierarchical_check", "2", "4")

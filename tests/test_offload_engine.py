@@ -1,0 +1,262 @@
+"""Offload-engine tests: descriptor dispatch for all five CollTypes, the
+compiled-schedule cache (telemetry-proven), and the measured-cost tuning
+table changing auto-selection vs the static TPU constants."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    MAX,
+    SUM,
+    TPU_V5E,
+    CollType,
+    CollectiveDescriptor,
+    select_algorithm,
+)
+from repro.core.selector import set_active_tuning
+from repro.offload import OffloadEngine, TuningCache, autotune
+
+P = 8
+N = 16
+
+
+@pytest.fixture(autouse=True)
+def _no_active_tuning():
+    set_active_tuning(None)
+    yield
+    set_active_tuning(None)
+
+
+def _payload(seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(-5, 6, size=(P, N)).astype(np.float32))
+
+
+def _descriptor(eng, coll, **kw):
+    kw.setdefault("p", P)
+    kw.setdefault("payload_bytes", N * 4)
+    kw.setdefault("op", "sum")
+    return eng.make_descriptor(coll, **kw)
+
+
+# ------------------------------------------------------------------ dispatch
+
+
+@pytest.mark.parametrize("coll", [c.name for c in CollType])
+def test_all_colltypes_roundtrip_through_encoded_descriptor(coll):
+    """encode() -> decode() -> correct sim-backend result, for every coll."""
+    eng = OffloadEngine()
+    x = _payload()
+    xn = np.asarray(x)
+    desc = _descriptor(eng, coll, root=3)
+    words = desc.encode()
+    assert CollectiveDescriptor.decode(words) == desc
+    out = np.asarray(eng.offload(words, x))
+
+    if coll == "SCAN":
+        np.testing.assert_array_equal(out, np.cumsum(xn, axis=0))
+    elif coll == "EXSCAN":
+        want = np.concatenate([np.zeros((1, N), np.float32),
+                               np.cumsum(xn, axis=0)[:-1]])
+        np.testing.assert_array_equal(out, want)
+    elif coll == "REDUCE":
+        want = np.zeros_like(xn)
+        want[3] = xn.sum(axis=0)
+        np.testing.assert_allclose(out, want, atol=1e-5)
+    elif coll == "ALLREDUCE":
+        want = np.broadcast_to(xn.sum(axis=0), xn.shape)
+        np.testing.assert_allclose(out, want, atol=1e-5)
+    else:  # BARRIER
+        np.testing.assert_array_equal(out, np.ones(P, np.float32))
+
+
+def test_reduce_allreduce_other_ops_and_roots():
+    eng = OffloadEngine()
+    x = _payload(1)
+    xn = np.asarray(x)
+    out = np.asarray(
+        eng.offload(_descriptor(eng, "REDUCE", op="max", root=P - 1), x)
+    )
+    assert np.array_equal(out[P - 1], xn.max(axis=0))
+    out = np.asarray(eng.offload(_descriptor(eng, "ALLREDUCE", op="max"), x))
+    np.testing.assert_array_equal(
+        out, np.broadcast_to(xn.max(axis=0), xn.shape)
+    )
+    out = np.asarray(eng.offload(_descriptor(eng, "ALLREDUCE", op="min"), x))
+    np.testing.assert_array_equal(
+        out, np.broadcast_to(xn.min(axis=0), xn.shape)
+    )
+
+
+def test_nonpow2_allreduce_dispatch():
+    eng = OffloadEngine()
+    p = 6
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(p, 4)).astype(np.float32))
+    desc = eng.make_descriptor("ALLREDUCE", p=p, payload_bytes=16, op="sum")
+    out = np.asarray(eng.offload(desc, x))
+    np.testing.assert_allclose(
+        out, np.broadcast_to(np.asarray(x).sum(axis=0), (p, 4)), atol=1e-5
+    )
+
+
+# ------------------------------------------------------------------- caching
+
+
+def test_schedule_cache_hits_on_repeat_offloads():
+    eng = OffloadEngine()
+    x = _payload()
+    desc = _descriptor(eng, "SCAN", algorithm="hillis_steele")
+    eng.offload(desc, x)
+    assert (eng.telemetry.hits, eng.telemetry.misses) == (0, 1)
+    for _ in range(4):
+        eng.offload(desc, x)
+    assert (eng.telemetry.hits, eng.telemetry.misses) == (4, 1)
+    assert eng.telemetry.compiles == 1
+    assert eng.cache_size() == 1
+    assert eng.telemetry.hit_rate == pytest.approx(0.8)
+    # latency telemetry is recorded in host-dispatch (sim) mode
+    assert eng.telemetry.timed_dispatches == 5
+    assert eng.telemetry.mean_latency_s > 0
+
+
+def test_cache_key_ignores_rank_and_msg_type_but_not_schedule_fields():
+    import dataclasses
+
+    eng = OffloadEngine()
+    x = _payload()
+    base = _descriptor(eng, "SCAN", algorithm="hillis_steele")
+    eng.offload(base, x)
+    # other ranks of the same communicator share the compiled schedule
+    eng.offload(dataclasses.replace(base, rank=5), x)
+    assert (eng.telemetry.hits, eng.telemetry.misses) == (1, 1)
+    # a different algorithm is a different schedule
+    eng.offload(dataclasses.replace(base, algo_type="binomial_tree"), x)
+    assert (eng.telemetry.hits, eng.telemetry.misses) == (1, 2)
+    # as is a different coll_type
+    eng.offload(dataclasses.replace(base, coll_type=CollType.ALLREDUCE), x)
+    assert (eng.telemetry.hits, eng.telemetry.misses) == (1, 3)
+    assert eng.cache_size() == 3
+
+
+def test_per_coll_telemetry_counters():
+    eng = OffloadEngine()
+    x = _payload()
+    for coll in ("SCAN", "SCAN", "EXSCAN", "BARRIER"):
+        eng.offload(_descriptor(eng, coll), x)
+    assert eng.telemetry.calls_by_coll == {
+        "scan": 2, "exscan": 1, "barrier": 1,
+    }
+
+
+def test_sim_payload_validation():
+    eng = OffloadEngine()
+    desc = _descriptor(eng, "SCAN")
+    bad = jnp.zeros((P + 1, N), jnp.float32)
+    with pytest.raises(ValueError, match="leading rank axis"):
+        eng.offload(desc, bad)
+    with pytest.raises(ValueError, match="requires a payload"):
+        eng.offload(desc, None)
+
+
+# -------------------------------------------------------------- auto tuning
+
+
+def _synthetic_cache() -> TuningCache:
+    """A tuning table whose measurements say sequential_pipelined wins at
+    (p=4, 1 KiB) — which the static TPU model never selects there."""
+    cache = TuningCache(backend="synthetic")
+    grid = [(2, 1024), (4, 1024), (8, 1024), (4, 65536)]
+    for p, msg in grid:
+        for algo, t in [
+            ("hillis_steele", 50e-6),
+            ("sequential_pipelined", 10e-6 if (p, msg) == (4, 1024) else 90e-6),
+            ("recursive_doubling", 70e-6),
+            ("binomial_tree", 80e-6),
+        ]:
+            cache.record("scan", algo, p, msg, t)
+    return cache
+
+
+def test_tuned_table_changes_selection_vs_static():
+    static = select_algorithm(4, 1024, SUM)
+    assert static == "hillis_steele"
+    cache = _synthetic_cache()
+    cache.activate()
+    assert select_algorithm(4, 1024, SUM) == "sequential_pipelined"
+    # off-grid-but-near queries snap to the nearest measured winner
+    assert select_algorithm(4, 2048, SUM) == "sequential_pipelined"
+    # elsewhere on the grid the measured winner rules
+    assert select_algorithm(8, 1024, SUM) == "hillis_steele"
+    set_active_tuning(None)
+    assert select_algorithm(4, 1024, SUM) == static
+
+
+def test_tuned_winner_must_be_applicable_to_op():
+    cache = TuningCache(backend="synthetic")
+    cache.record("scan", "invertible_doubling", 8, 1024, 1e-6)
+    cache.record("scan", "hillis_steele", 8, 1024, 5e-6)
+    cache.activate()
+    # MAX has no inverse: the invertible winner is skipped, static fallback
+    assert select_algorithm(8, 1024, MAX) != "invertible_doubling"
+    # SUM may use it
+    assert select_algorithm(8, 1024, SUM) == "invertible_doubling"
+
+
+def test_tuning_cache_json_roundtrip(tmp_path):
+    cache = _synthetic_cache()
+    fitted = cache.fitted_model()
+    assert fitted is not None and fitted.alpha > 0
+    path = cache.save(tmp_path / "table.json")
+    loaded = TuningCache.load(path)
+    assert loaded.winners == cache.winners
+    assert loaded.lookup(4, 1024, "scan") == "sequential_pipelined"
+    lf = loaded.fitted_model()
+    assert lf is not None
+    assert lf.alpha == pytest.approx(fitted.alpha)
+    assert lf.beta == pytest.approx(fitted.beta)
+
+
+def test_live_autotune_produces_winners_and_fit():
+    cache = autotune(
+        ps=(2, 4), payloads=(256,), colls=("scan",), iters=2
+    )
+    assert len(cache.measurements) >= 8
+    assert cache.winners  # every grid point has a measured winner
+    assert cache.fitted_model() is not None
+    assert cache.lookup(4, 256, "scan") in {
+        "sequential", "sequential_pipelined", "hillis_steele",
+        "recursive_doubling", "binomial_tree", "sklansky",
+        "invertible_doubling",
+    }
+
+
+def test_live_tuned_selection_diverges_from_static_somewhere():
+    """The acceptance check: measured costs on this backend change at least
+    one grid-point selection vs the static TPU constants."""
+    cache = autotune(
+        ps=(2, 4, 8), payloads=(1024, 16384), colls=("scan", "exscan"),
+        iters=3,
+    )
+    cache.activate()
+    changed = 0
+    for coll in ("scan", "exscan"):
+        for p in (2, 4, 8):
+            for msg in (1024, 16384):
+                tuned = select_algorithm(p, msg, SUM, coll=coll)
+                static = select_algorithm(p, msg, SUM, model=TPU_V5E, coll=coll)
+                changed += int(tuned != static)
+    assert changed >= 1
+
+
+# ----------------------------------------------------------------- descriptor
+
+
+def test_make_descriptor_auto_resolves_algorithm():
+    eng = OffloadEngine()
+    desc = eng.make_descriptor("SCAN", p=16, payload_bytes=1024, op="sum")
+    assert desc.algo_type != "auto"
+    assert desc.comm_size == 16
+    # and the resolved descriptor still round-trips the wire format
+    assert CollectiveDescriptor.decode(desc.encode()) == desc
