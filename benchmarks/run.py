@@ -4,13 +4,18 @@
   fig6/fig7 (offloaded_latency) -- in-network latency per algorithm + the
                                    derived ICI model + selector crossovers
   tuned_vs_static               -- autotuner crossover report + engine smoke
+                                   + planned-collective sections: tuned vs
+                                   fixed axis splits and the 3D planner
+                                   cache-hit proof
   roofline (report)             -- dry-run derived roofline tables
 
 Prints ``name,...,derived`` CSV sections. Run:
   PYTHONPATH=src python -m benchmarks.run [--quick | --smoke]
 
-``--smoke`` runs only the ~10 s offload-engine smoke (budgeted tuning grid +
-descriptor-cache proof) — the CI regression gate for the offload subsystem.
+``--smoke`` runs only the offload-engine smoke (budgeted tuning grid +
+descriptor-cache proof + one 3D planned collective end-to-end with an
+asserted schedule-cache hit rate) — the CI regression gate for the offload
+subsystem.
 """
 
 import argparse
@@ -39,7 +44,10 @@ def main() -> None:
     iters = 8 if args.quick else 30
 
     if args.smoke:
-        print("# === Offload engine smoke: tuned-vs-static + cache proof ===")
+        print(
+            "# === Offload engine smoke: tuned-vs-static + planned-3D "
+            "cache proof ==="
+        )
         for row in tuned_vs_static.smoke():
             print(row)
         return
@@ -70,6 +78,23 @@ def main() -> None:
     ):
         print(row)
     for row in tuned_vs_static.engine_smoke():
+        print(row)
+
+    print()
+    print("# === Planned collectives: tuned vs fixed axis split + 3D ===")
+    print(
+        "section,coll,sizes,msg_bytes,fixed_order,fixed_us,tuned_order,"
+        "tuned_us,speedup"
+    )
+    for row in tuned_vs_static.split_report(
+        topologies=((2, 4), (4, 2), (2, 8), (2, 2, 2), (2, 2, 4)),
+        payloads=(1024, 65536),
+        colls=("scan", "allreduce"),
+        iters=max(3, iters // 6),
+        time_budget_s=120.0,
+    ):
+        print(row)
+    for row in tuned_vs_static.planned_smoke():
         print(row)
 
     print()

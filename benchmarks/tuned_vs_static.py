@@ -7,21 +7,31 @@ point comparing the two selections (and the measured latency of each choice),
 plus an engine-dispatch section proving the descriptor cache: five CollTypes
 through ``OffloadEngine.offload`` twice each, hit/miss telemetry printed.
 
+Two planner sections ride along: ``planned_split`` measures every logical
+axis order of each mesh shape and compares the tuned split (the measured
+winner the planner would adopt) against the fixed physical (outer, inner)
+order — by construction the tuned split is never slower than the fixed one
+on the sim backend; ``planned_smoke`` drives one 3D planned collective
+end-to-end through the engine twice per CollType and *asserts* the repeat
+dispatch hits the schedule cache (CI gate).
+
 CSV sections:
   tuned_vs_static,coll,p,msg_bytes,static_algo,tuned_algo,static_meas_us,tuned_meas_us,changed
+  planned_split,coll,sizes,msg_bytes,fixed_order,fixed_us,tuned_order,tuned_us,speedup
   engine_smoke,coll,dispatch,cache,latency_us
+  planned_smoke,coll,dispatch,cache,latency_us
 """
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 import jax.numpy as jnp
 
 from repro.core import SUM, CollType, select_algorithm
 from repro.core.selector import get_active_tuning, set_active_tuning
-from repro.offload import OffloadEngine, TuningCache, autotune
+from repro.offload import OffloadEngine, TuningCache, autotune, tune_splits
 
 SMOKE_PS = (2, 4, 8)
 SMOKE_PAYLOADS = (1024, 65536)
@@ -111,8 +121,104 @@ def engine_smoke(p: int = 8, n: int = 64) -> List[str]:
     return rows
 
 
+def split_report(
+    *,
+    topologies: Sequence[Tuple[int, ...]] = ((2, 4), (4, 2), (2, 2, 2)),
+    payloads: Sequence[int] = (1024, 65536),
+    colls: Sequence[str] = ("scan", "allreduce"),
+    iters: int = 3,
+    time_budget_s: Optional[float] = None,
+) -> List[str]:
+    """Tuned-vs-fixed axis split: one row per (coll, mesh shape, payload).
+
+    The tuned order is the measured winner ``tune_splits`` records (what
+    ``plan_axis_order`` adopts once the table is active), so
+    ``tuned_us <= fixed_us`` holds by construction wherever the fixed order
+    was measured at all.
+    """
+    rows: List[str] = []
+    cache = tune_splits(
+        topologies=topologies,
+        payloads=payloads,
+        colls=colls,
+        iters=iters,
+        time_budget_s=time_budget_s,
+    )
+    measured: Dict[Tuple[str, Tuple[int, ...], int, Tuple[int, ...]], float] = {}
+    for m in cache.split_measurements:
+        key = (m.coll, m.sizes, m.payload_bytes, m.order)
+        if key not in measured or m.seconds < measured[key]:
+            measured[key] = m.seconds
+    never_slower = True
+    for sizes in topologies:
+        sizes = tuple(sizes)
+        fixed = tuple(range(len(sizes)))
+        for payload in payloads:
+            for coll in colls:
+                tuned = cache.split_winner(coll, sizes, payload)
+                if tuned is None:
+                    continue  # budget cut this shape
+                f_us = measured.get((coll, sizes, payload, fixed))
+                t_us = measured.get((coll, sizes, payload, tuned))
+                if f_us is None or t_us is None:
+                    continue
+                never_slower &= t_us <= f_us
+                shape = "x".join(map(str, sizes))
+                rows.append(
+                    f"planned_split,{coll},{shape},{payload},"
+                    f"{''.join(map(str, fixed))},{f_us*1e6:.1f},"
+                    f"{''.join(map(str, tuned))},{t_us*1e6:.1f},"
+                    f"{f_us/t_us:.3f}"
+                )
+    rows.append(
+        f"planned_split_summary,tuned_never_slower,{int(never_slower)}"
+    )
+    return rows
+
+
+def planned_smoke(axes: Tuple[int, ...] = (2, 2, 2), n: int = 64) -> List[str]:
+    """One 3D planned collective per CollType through the descriptor path,
+    twice each; asserts the repeat dispatch hits the plan cache and that the
+    telemetry exposes cache_size + per-coll latency (the CI regression
+    gate for the planner subsystem)."""
+    rows: List[str] = []
+    eng = OffloadEngine()
+    p = int(np.prod(axes))
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(p, n)).astype(np.float32))
+    for coll in CollType:
+        desc = eng.make_descriptor(
+            coll.name, axes=axes, payload_bytes=n * 4, op="sum"
+        )
+        for dispatch in ("miss", "hit"):
+            before = eng.telemetry.hits
+            eng.offload(
+                desc.encode(), None if coll == CollType.BARRIER else x
+            )
+            cache = "hit" if eng.telemetry.hits > before else "miss"
+            assert cache == dispatch, (
+                f"planned {coll.name} repeat dispatch must {dispatch} the "
+                f"schedule cache (got {cache})"
+            )
+            rows.append(
+                f"planned_smoke,{coll.name.lower()},{dispatch},{cache},"
+                f"{eng.telemetry.last_latency_s*1e6:.1f}"
+            )
+    snap = eng.telemetry.snapshot()
+    assert snap["hit_rate"] == 0.5, snap
+    assert snap["cache_size"] == len(CollType), snap
+    assert set(snap["latency_by_coll_us"]) == {
+        c.name.lower() for c in CollType
+    }
+    rows.append(
+        f"planned_smoke_summary,hits,{snap['hits']},misses,{snap['misses']},"
+        f"hit_rate,{snap['hit_rate']:.2f},cache_size,{snap['cache_size']}"
+    )
+    return rows
+
+
 def smoke(time_budget_s: float = 8.0) -> List[str]:
-    """The ~10 s CI entry: budgeted tuning grid + engine dispatch proof."""
+    """The CI entry: budgeted tuning grid + engine + planner dispatch proof."""
     rows = run(
         ps=SMOKE_PS,
         payloads=SMOKE_PAYLOADS,
@@ -120,4 +226,12 @@ def smoke(time_budget_s: float = 8.0) -> List[str]:
         time_budget_s=time_budget_s,
     )
     rows += engine_smoke()
+    rows += planned_smoke()
+    rows += split_report(
+        topologies=((2, 4), (4, 2)),
+        payloads=(1024,),
+        colls=("scan",),
+        iters=2,
+        time_budget_s=time_budget_s,
+    )
     return rows

@@ -1,11 +1,14 @@
 #!/usr/bin/env bash
 # One-entry-point CI gate: tier-1 test suite + offload-engine smoke benchmark.
 #
-#   bash scripts/ci.sh           # full tier-1 + ~10 s offload smoke
+#   bash scripts/ci.sh           # full tier-1 + offload/planner smoke
 #
-# The smoke benchmark (benchmarks.run --smoke) runs a budgeted autotuning grid
-# and proves the descriptor schedule cache (hit/miss telemetry), so regressions
-# in the offload subsystem fail CI even when no unit test covers them yet.
+# The smoke benchmark (benchmarks.run --smoke) runs a budgeted autotuning grid,
+# proves the descriptor schedule cache (hit/miss telemetry), executes one 3D
+# planned collective end-to-end per CollType — asserting the repeat dispatch
+# hits the plan cache and that telemetry exposes cache_size + per-coll
+# latency — and reports the tuned-vs-fixed axis split. Regressions in the
+# offload/planner subsystem fail CI even when no unit test covers them yet.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -15,8 +18,12 @@ echo "=== tier-1: pytest ==="
 python -m pytest -x -q
 
 echo
-echo "=== offload-engine smoke benchmark ==="
-python -m benchmarks.run --smoke
+echo "=== offload-engine + planner smoke benchmark ==="
+SMOKE_OUT="$(mktemp -t repro_smoke.XXXXXX.csv)"
+trap 'rm -f "$SMOKE_OUT"' EXIT
+python -m benchmarks.run --smoke | tee "$SMOKE_OUT"
+grep -q "^planned_smoke_summary," "$SMOKE_OUT" \
+  || { echo "CI FAIL: planned 3D smoke section missing"; exit 1; }
 
 echo
 echo "CI OK"

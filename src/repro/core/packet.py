@@ -9,12 +9,24 @@ encode/decode round-trip keeps the format "self-describing" as the paper
 intends. ``node_type`` is derived from (rank, comm_size) inside the SPMD
 program — the hardware-side derivation the paper lists as future work is
 trivial in software, so we do it.
+
+Beyond the paper's single 8-host ring, the descriptor carries a topology
+encoding: ``axes`` (per-mesh-axis sizes, outermost first, up to
+:data:`MAX_AXES`) and ``split`` (the planner's chosen logical axis order, a
+permutation of the axis indices). A multi-axis descriptor names a *planned*
+hierarchical collective — the phase structure is derived from (coll_type,
+axes, split) by ``repro.offload.planner`` — while keeping the wire contract:
+the whole request, topology included, round-trips through ``encode``/
+``decode`` and cache-keys the compiled schedule. Legacy 10-word descriptors
+(no topology) decode as single-axis requests.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import enum
+import itertools
+import math
 
 import numpy as np
 
@@ -67,6 +79,37 @@ class WireDType(enum.IntEnum):
     INT8 = 4
 
 
+#: most mesh axes a descriptor can encode (inner, outer, pod)
+MAX_AXES = 3
+
+#: encoded word counts: legacy single-axis vs topology-carrying
+_LEGACY_WORDS = 10
+_TOPO_WORDS = _LEGACY_WORDS + MAX_AXES + 2  # n_axes + sizes + split index
+
+
+def split_index(order: "tuple[int, ...]") -> int:
+    """Lexicographic rank of an axis-order permutation (wire encoding)."""
+    n = len(order)
+    perms = list(itertools.permutations(range(n)))
+    try:
+        return perms.index(tuple(order))
+    except ValueError:
+        raise ValueError(
+            f"split {order!r} is not a permutation of range({n})"
+        ) from None
+
+
+def split_from_index(idx: int, n_axes: int) -> "tuple[int, ...]":
+    """Inverse of :func:`split_index`."""
+    perms = list(itertools.permutations(range(n_axes)))
+    if not 0 <= idx < len(perms):
+        raise ValueError(
+            f"split index {idx} out of range for {n_axes} axes "
+            f"({math.factorial(n_axes)} permutations)"
+        )
+    return perms[idx]
+
+
 _ALGO_NAMES = {
     AlgoType.SEQUENTIAL: "sequential",
     AlgoType.SEQUENTIAL_PIPELINED: "sequential_pipelined",
@@ -81,7 +124,14 @@ _ALGO_IDS = {v: k for k, v in _ALGO_NAMES.items()}
 
 @dataclasses.dataclass(frozen=True)
 class CollectiveDescriptor:
-    """Fig. 1 descriptor fields (transport framing dropped)."""
+    """Fig. 1 descriptor fields (transport framing dropped) + topology.
+
+    ``axes`` is empty for single-axis (legacy) requests. When set, it holds
+    the physical mesh-axis sizes outermost-first; ``prod(axes)`` must equal
+    ``comm_size`` and ``split`` — a permutation of ``range(len(axes))`` —
+    records which physical axis the planner placed at each logical level
+    (level 0 outermost in global rank order, last level innermost).
+    """
 
     comm_id: int = 0
     comm_size: int = 1
@@ -93,6 +143,29 @@ class CollectiveDescriptor:
     data_type: WireDType = WireDType.FLOAT32
     count: int = 1
     msg_type: MsgType = MsgType.OFFLOAD_REQUEST
+    axes: "tuple[int, ...]" = ()
+    split: "tuple[int, ...]" = ()
+
+    def __post_init__(self):
+        if self.axes:
+            if len(self.axes) > MAX_AXES:
+                raise ValueError(
+                    f"at most {MAX_AXES} mesh axes encodable; got {self.axes}"
+                )
+            if math.prod(self.axes) != self.comm_size:
+                raise ValueError(
+                    f"axes {self.axes} do not factor comm_size="
+                    f"{self.comm_size}"
+                )
+            split = self.split or tuple(range(len(self.axes)))
+            if sorted(split) != list(range(len(self.axes))):
+                raise ValueError(
+                    f"split {split!r} is not a permutation of the "
+                    f"{len(self.axes)} axes"
+                )
+            object.__setattr__(self, "split", tuple(split))
+        elif self.split:
+            raise ValueError("split given without axes")
 
     @property
     def node_type(self) -> NodeType:
@@ -106,7 +179,13 @@ class CollectiveDescriptor:
         return NodeType.LEAF if (j & 1) == 0 else NodeType.INTERNAL
 
     def encode(self) -> np.ndarray:
-        """Pack to a uint32 word vector (round-trippable, logged by launch)."""
+        """Pack to a uint32 word vector (round-trippable, logged by launch).
+
+        Layout: the 10 legacy descriptor words, then [n_axes, size_0,
+        size_1, size_2, split_index] (zero-padded past n_axes).
+        """
+        sizes = list(self.axes) + [0] * (MAX_AXES - len(self.axes))
+        split = split_index(self.split) if self.axes else 0
         return np.asarray(
             [
                 self.comm_id,
@@ -119,6 +198,9 @@ class CollectiveDescriptor:
                 int(self.data_type),
                 self.count,
                 int(self.msg_type),
+                len(self.axes),
+                *sizes,
+                split,
             ],
             dtype=np.uint32,
         )
@@ -126,6 +208,17 @@ class CollectiveDescriptor:
     @staticmethod
     def decode(words: np.ndarray) -> "CollectiveDescriptor":
         w = [int(v) for v in np.asarray(words, dtype=np.uint32)]
+        if len(w) not in (_LEGACY_WORDS, _TOPO_WORDS):
+            raise ValueError(
+                f"descriptor must be {_LEGACY_WORDS} (legacy) or "
+                f"{_TOPO_WORDS} words; got {len(w)}"
+            )
+        axes: "tuple[int, ...]" = ()
+        split: "tuple[int, ...]" = ()
+        if len(w) == _TOPO_WORDS and w[_LEGACY_WORDS]:
+            n = w[_LEGACY_WORDS]
+            axes = tuple(w[_LEGACY_WORDS + 1 : _LEGACY_WORDS + 1 + n])
+            split = split_from_index(w[_LEGACY_WORDS + 1 + MAX_AXES], n)
         return CollectiveDescriptor(
             comm_id=w[0],
             comm_size=w[1],
@@ -137,4 +230,6 @@ class CollectiveDescriptor:
             data_type=WireDType(w[7]),
             count=w[8],
             msg_type=MsgType(w[9]),
+            axes=axes,
+            split=split,
         )

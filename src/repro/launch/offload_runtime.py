@@ -5,9 +5,19 @@ Every launcher that issues collective descriptors goes through here:
   * :func:`build_offload_engine` loads (or, on request, generates) the tuning
     table for the current backend, activates it underneath
     ``select_algorithm``, and returns a ready :class:`OffloadEngine` — the
-    process-wide "NIC".
+    process-wide "NIC". Ambient tables (``$REPRO_TUNING_TABLE`` or the
+    default cache path) are backend-fingerprint-checked and ignored with a
+    warning on mismatch; an explicitly passed path is trusted verbatim.
+  * The engine is wired to ``runtime.fault``: when a shrunken mesh is
+    *adopted* (the trainer's recovery path fires ``fault.notify_remesh``),
+    the registered listener clears the engine's compiled-plan cache (plans
+    key on axis sizes) and runs a budgeted re-tune
+    (``autotune(time_budget_s=...)``) on the surviving topology, hot-swapping
+    the active tuning table. Disable with ``retune_on_remesh=False``; detach
+    a built engine's hook with :func:`detach_remesh_hook`.
   * ``python -m repro.launch.offload_runtime --tune`` is the operator-facing
-    way to produce a tuning table once and reuse it across launches via
+    way to produce a tuning table once (including the planner's axis-split
+    winners via ``--splits``) and reuse it across launches via
     ``$REPRO_TUNING_TABLE``.
 """
 
@@ -15,15 +25,18 @@ from __future__ import annotations
 
 import argparse
 import os
+import weakref
 from pathlib import Path
-from typing import Optional
+from typing import List, Optional, Tuple
 
 from repro.offload import (
     TUNING_TABLE_ENV,
     OffloadEngine,
     TuningCache,
     autotune,
+    tune_splits,
 )
+from repro.runtime import fault
 
 DEFAULT_TABLE_PATH = Path(
     os.environ.get("REPRO_CACHE_DIR", os.path.expanduser("~/.cache/repro"))
@@ -32,30 +45,109 @@ DEFAULT_TABLE_PATH = Path(
 _ENGINE: Optional[OffloadEngine] = None
 
 
+def _remesh_ps(new_axes: Tuple[int, ...]) -> Tuple[int, ...]:
+    """The (p) grid worth re-measuring after a re-mesh: every surviving axis
+    size plus the flat total, doubles included up to the total."""
+    total = 1
+    for s in new_axes:
+        total *= max(1, int(s))
+    ps = {int(s) for s in new_axes if int(s) > 1}
+    p = 2
+    while p <= total:
+        ps.add(p)
+        p *= 2
+    if total > 1:
+        ps.add(total)
+    return tuple(sorted(ps)) or (2,)
+
+
+# One module-level listener serves every engine: a re-mesh clears each live
+# engine's plan cache but runs the budgeted re-tune exactly once (the tuning
+# table is process-global state), under the largest budget any live engine
+# asked for. Engines are held by weakref so subscribing never extends their
+# lifetime.
+_HOOKED_ENGINES: List[Tuple["weakref.ref[OffloadEngine]", float]] = []
+
+
+def _on_remesh(old_axes, new_axes):
+    alive = []
+    for ref, budget_s in _HOOKED_ENGINES:
+        engine = ref()
+        if engine is not None:
+            # stale on two levels: compiled plans key on the old axis sizes,
+            # and the active table was measured on the old (p, payload) grid
+            engine.clear()
+            alive.append((ref, budget_s))
+    _HOOKED_ENGINES[:] = alive
+    if not alive:
+        fault.unregister_remesh_listener(_on_remesh)
+        return
+    cache = autotune(
+        ps=_remesh_ps(tuple(new_axes)),
+        payloads=(1024, 65536),
+        iters=2,
+        time_budget_s=max(b for _, b in alive),
+    )
+    cache.activate()
+
+
+def _attach_remesh_hook(
+    engine: OffloadEngine, tune_budget_s: float
+) -> OffloadEngine:
+    if not _HOOKED_ENGINES:
+        fault.register_remesh_listener(_on_remesh)
+    else:  # drop entries for engines that were garbage-collected
+        _HOOKED_ENGINES[:] = [
+            (ref, b) for ref, b in _HOOKED_ENGINES if ref() is not None
+        ]
+    _HOOKED_ENGINES.append((weakref.ref(engine), float(tune_budget_s)))
+    return engine
+
+
+def detach_remesh_hook(engine: OffloadEngine) -> None:
+    """Unsubscribe an engine built with ``retune_on_remesh=True``."""
+    _HOOKED_ENGINES[:] = [
+        (ref, b) for ref, b in _HOOKED_ENGINES
+        if ref() is not None and ref() is not engine
+    ]
+    if not _HOOKED_ENGINES:
+        fault.unregister_remesh_listener(_on_remesh)
+
+
 def build_offload_engine(
     *,
     tuning_table: "str | Path | None" = None,
     autotune_if_missing: bool = False,
     tune_budget_s: float = 30.0,
+    retune_on_remesh: bool = True,
+    remesh_tune_budget_s: float = 5.0,
 ) -> OffloadEngine:
     """Construct the launch's engine, with the tuning table resolved from
     (in order): the explicit argument, ``$REPRO_TUNING_TABLE``, the default
     cache path, or — when ``autotune_if_missing`` — a fresh budgeted tuning
     run persisted to the default path for the next launch."""
-    path = tuning_table or os.environ.get(TUNING_TABLE_ENV)
     cache: Optional[TuningCache] = None
-    if path:
+    if tuning_table:
         # An explicitly named table must exist: silently falling through to
         # a different (or no) table would tune against the wrong cost model.
-        if not Path(path).exists():
+        if not Path(tuning_table).exists():
             raise FileNotFoundError(
-                f"tuning table {path!r} (from argument or "
-                f"${TUNING_TABLE_ENV}) does not exist"
+                f"tuning table {str(tuning_table)!r} does not exist"
             )
-        cache = TuningCache.load(path)
+        cache = TuningCache.load(tuning_table)
+    elif os.environ.get(TUNING_TABLE_ENV):
+        env_path = os.environ[TUNING_TABLE_ENV]
+        if not Path(env_path).exists():
+            raise FileNotFoundError(
+                f"tuning table {env_path!r} (from ${TUNING_TABLE_ENV}) "
+                "does not exist"
+            )
+        cache = TuningCache.load_compatible(env_path)
     elif DEFAULT_TABLE_PATH.exists():
-        cache = TuningCache.load(DEFAULT_TABLE_PATH)
-    elif autotune_if_missing:
+        cache = TuningCache.load_compatible(DEFAULT_TABLE_PATH)
+    if cache is None and autotune_if_missing:
+        # also the recovery path for an ambient table the fingerprint check
+        # rejected: the caller asked for a usable table, so measure one
         cache = autotune(
             ps=(2, 4, 8),
             payloads=(1024, 65536),
@@ -65,7 +157,10 @@ def build_offload_engine(
         cache.save(DEFAULT_TABLE_PATH)
     if cache is not None:
         cache.activate()
-    return OffloadEngine()
+    engine = OffloadEngine()
+    if retune_on_remesh:
+        _attach_remesh_hook(engine, remesh_tune_budget_s)
+    return engine
 
 
 def get_engine() -> OffloadEngine:
@@ -79,6 +174,11 @@ def get_engine() -> OffloadEngine:
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--tune", action="store_true", help="run the autotuner")
+    ap.add_argument(
+        "--splits",
+        action="store_true",
+        help="also measure planner axis-split winners per mesh shape",
+    )
     ap.add_argument("--out", default=str(DEFAULT_TABLE_PATH))
     ap.add_argument("--budget-s", type=float, default=60.0)
     ap.add_argument("--iters", type=int, default=5)
@@ -88,6 +188,13 @@ def main() -> None:
     cache = autotune(
         iters=args.iters, time_budget_s=args.budget_s, verbose=True
     )
+    if args.splits:
+        tune_splits(
+            iters=args.iters,
+            time_budget_s=args.budget_s,
+            cache=cache,
+            verbose=True,
+        )
     out = cache.save(args.out)
     fitted = cache.fitted_model()
     print(f"tuning table written to {out}")
@@ -96,6 +203,8 @@ def main() -> None:
             f"fitted LinkModel: alpha={fitted.alpha:.3e}s "
             f"beta={fitted.beta:.3e}s/B gamma={fitted.gamma:.3e}s"
         )
+    if cache.split_winners:
+        print(f"axis-split winners: {len(cache.split_winners)} shapes")
     print(f"export {TUNING_TABLE_ENV}={out}  # to use it in later launches")
 
 

@@ -3,13 +3,18 @@ NIC firmware.
 
   OffloadEngine          — one descriptor in, one result out, with a
                            compiled-schedule cache + telemetry (engine)
+  planner                — topology-aware collective planner: CollectivePlan
+                           IR, N-level decomposition for every CollType,
+                           tuned axis splits, sim + spmd lowering (planner)
   autotune / TuningCache — measured-cost autotuner + persisted tuning table
-                           that re-fits the selector's LinkModel (tuner,
-                           tuning_cache)
-  *_hierarchical_scan    — two-level scans over 2D meshes (hierarchical)
+                           that re-fits the selector's LinkModel and records
+                           axis-split winners (tuner, tuning_cache)
+  *_hierarchical_scan    — legacy two-level 2D entry points, now thin
+                           wrappers over the planner (hierarchical)
 """
 
 from repro.offload.engine import (
+    COLL_KIND,
     CompiledSchedule,
     EngineTelemetry,
     OffloadEngine,
@@ -22,36 +27,63 @@ from repro.offload.hierarchical import (
     flat_equivalent,
     sim_hierarchical_scan,
 )
+from repro.offload.planner import (
+    CollectivePlan,
+    PhaseKind,
+    PlanPhase,
+    build_plan,
+    lower_sim,
+    lower_spmd,
+    plan_axis_order,
+    plan_cost,
+)
 from repro.offload.tuner import (
     DEFAULT_PAYLOADS,
     DEFAULT_PS,
+    DEFAULT_TOPOLOGIES,
     autotune,
+    time_planned_collective,
     time_sim_collective,
+    tune_splits,
 )
 from repro.offload.tuning_cache import (
     TUNING_TABLE_ENV,
     Measurement,
+    SplitMeasurement,
     TuningCache,
     deactivate,
     load_default_table,
 )
 
 __all__ = [
+    "COLL_KIND",
+    "CollectivePlan",
     "CompiledSchedule",
     "DEFAULT_PAYLOADS",
     "DEFAULT_PS",
+    "DEFAULT_TOPOLOGIES",
     "EngineTelemetry",
     "Measurement",
     "OffloadEngine",
+    "PhaseKind",
+    "PlanPhase",
+    "SplitMeasurement",
     "TUNING_TABLE_ENV",
     "TuningCache",
     "autotune",
+    "build_plan",
     "deactivate",
     "dist_hierarchical_scan",
     "flat_equivalent",
     "load_default_table",
+    "lower_sim",
+    "lower_spmd",
+    "plan_axis_order",
+    "plan_cost",
     "sim_hierarchical_scan",
+    "time_planned_collective",
     "time_sim_collective",
+    "tune_splits",
     "wire_dtype",
     "wire_op_id",
     "wire_op_name",

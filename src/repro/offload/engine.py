@@ -20,14 +20,20 @@ Two execution modes, mirroring the repo's two backends:
     timing to the profiler.
 
 All five descriptor CollTypes dispatch through the same path: SCAN, EXSCAN,
-REDUCE, ALLREDUCE, BARRIER.
+REDUCE, ALLREDUCE, BARRIER. Descriptors carrying a multi-axis topology
+(``axes`` + ``split``) compile through the collective planner
+(:mod:`repro.offload.planner`) instead of a flat single-axis schedule: the
+plan's phase list is derived from the descriptor, lowered through the same
+sim/spmd backend pair, and cached under the encoded words like every other
+request — in spmd mode ``axis_name`` is then a tuple naming the physical mesh
+axes in descriptor order.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -49,8 +55,20 @@ from repro.core.reduce_ops import (
 )
 from repro.core.scan_collective import dist_exscan, dist_scan, sim_scan
 from repro.core.selector import select_algorithm
+from repro.offload import planner
 
 PyTree = Any
+AxisSpec = Union[str, Sequence[str], None]
+
+#: the coll kind each CollType tunes/selects against (the measured tables are
+#: keyed by these names — never price a reduce with the scan table)
+COLL_KIND = {
+    CollType.SCAN: "scan",
+    CollType.EXSCAN: "exscan",
+    CollType.REDUCE: "reduce",
+    CollType.ALLREDUCE: "allreduce",
+    CollType.BARRIER: "barrier",
+}
 
 _WIRE_OP_NAMES = {
     WireOp.SUM: "sum",
@@ -102,6 +120,10 @@ class EngineTelemetry:
     total_latency_s: float = 0.0
     last_latency_s: float = 0.0
     timed_dispatches: int = 0
+    cache_size: int = 0
+    latency_by_coll: Dict[str, Tuple[float, int]] = dataclasses.field(
+        default_factory=dict
+    )
 
     def record_dispatch(self, coll: str, latency_s: Optional[float]) -> None:
         self.dispatches += 1
@@ -110,6 +132,8 @@ class EngineTelemetry:
             self.timed_dispatches += 1
             self.total_latency_s += latency_s
             self.last_latency_s = latency_s
+            tot, n = self.latency_by_coll.get(coll, (0.0, 0))
+            self.latency_by_coll[coll] = (tot + latency_s, n + 1)
 
     @property
     def hit_rate(self) -> float:
@@ -132,9 +156,14 @@ class EngineTelemetry:
             "dispatches": self.dispatches,
             "compiles": self.compiles,
             "errors": self.errors,
+            "cache_size": self.cache_size,
             "calls_by_coll": dict(self.calls_by_coll),
             "mean_latency_us": self.mean_latency_s * 1e6,
             "last_latency_us": self.last_latency_s * 1e6,
+            "latency_by_coll_us": {
+                coll: (tot / n) * 1e6 if n else 0.0
+                for coll, (tot, n) in self.latency_by_coll.items()
+            },
         }
 
 
@@ -174,38 +203,81 @@ class OffloadEngine:
         return CollectiveDescriptor.decode(np.asarray(descriptor))
 
     @staticmethod
-    def _cache_key(
-        desc: CollectiveDescriptor, axis_name: Optional[str]
-    ) -> bytes:
+    def _cache_key(desc: CollectiveDescriptor, axis_name: AxisSpec) -> bytes:
         normalized = dataclasses.replace(
             desc, rank=0, msg_type=MsgType.OFFLOAD_REQUEST
         )
-        mode = (axis_name or "<sim>").encode("utf-8")
-        return normalized.encode().tobytes() + b"|" + mode
+        if axis_name is None:
+            mode = "<sim>"
+        elif isinstance(axis_name, str):
+            mode = axis_name
+        else:
+            mode = "|".join(axis_name)
+        return normalized.encode().tobytes() + b"|" + mode.encode("utf-8")
 
     def make_descriptor(
         self,
         coll: "CollType | str",
         *,
-        p: int,
+        p: Optional[int] = None,
         payload_bytes: int,
         op: "AssocOp | str" = "sum",
         algorithm: str = "auto",
         comm_id: int = 0,
         root: int = 0,
         data_type: WireDType = WireDType.FLOAT32,
-        count: int = 1,
+        count: Optional[int] = None,
+        axes: Optional[Sequence[int]] = None,
+        split: "str | Sequence[int]" = "auto",
     ) -> CollectiveDescriptor:
         """Build an offload request, resolving ``algorithm="auto"`` through
         the (tuning-table-aware) selector — the host-side half of the paper's
-        'intelligent selection'."""
+        'intelligent selection'. Selection consults the cost table of the
+        *requested* coll kind (scan/exscan/reduce/allreduce/barrier), never a
+        stand-in.
+
+        With ``axes`` (2-3 mesh-axis sizes, outermost first), the request is
+        a planned hierarchical collective: ``split="auto"`` asks the planner
+        for the tuned logical axis order, and the resolved ``algo_type``
+        names the innermost intra-phase schedule (per-phase algorithms are
+        re-derived from the plan at compile time).
+        """
         if isinstance(coll, str):
             coll = CollType[coll.upper()]
         op = get_operator(op)
-        if algorithm == "auto":
-            coll_kind = "exscan" if coll == CollType.EXSCAN else "scan"
+        if axes is not None:
+            axes = tuple(int(a) for a in axes)
+            if p is None:
+                p = int(np.prod(axes))
+        if p is None:
+            raise ValueError("either p or axes is required")
+        order: "tuple[int, ...]" = ()
+        if axes is not None and len(axes) > 1:
+            order = (
+                planner.plan_axis_order(coll, axes, payload_bytes, op)
+                if split == "auto"
+                else tuple(int(i) for i in split)
+            )
+            if algorithm == "auto":
+                # the innermost intra phase's schedule, for the wire field
+                inner_p = axes[order[-1]]
+                algorithm = select_algorithm(
+                    inner_p, payload_bytes, op, coll=COLL_KIND[coll]
+                )
+        elif algorithm == "auto":
             algorithm = select_algorithm(
-                p, payload_bytes, op, coll=coll_kind
+                p, payload_bytes, op, coll=COLL_KIND[coll]
+            )
+        itemsize = jnp.dtype(wire_dtype(data_type)).itemsize
+        if count is None:
+            count = max(1, payload_bytes // itemsize)
+        elif count * itemsize != payload_bytes:
+            # plan compilation re-derives the payload from count * itemsize;
+            # a divergent explicit count would tune the phases for a
+            # different payload than the split/algo_type were selected for
+            raise ValueError(
+                f"count={count} x {itemsize}B contradicts "
+                f"payload_bytes={payload_bytes}"
             )
         return CollectiveDescriptor(
             comm_id=comm_id,
@@ -216,6 +288,8 @@ class OffloadEngine:
             operation=wire_op_id(op.name),
             data_type=data_type,
             count=count,
+            axes=axes if (axes is not None and len(axes) > 1) else (),
+            split=order,
         )
 
     # -- dispatch ----------------------------------------------------------
@@ -224,19 +298,24 @@ class OffloadEngine:
         self,
         descriptor: "CollectiveDescriptor | np.ndarray",
         x: Optional[PyTree] = None,
-        axis_name: Optional[str] = None,
+        axis_name: AxisSpec = None,
     ) -> PyTree:
         """Run the collective the descriptor describes; return its result.
 
         ``x`` is the per-rank contribution: a stacked ``(p, ...)`` pytree in
         sim mode, the local shard inside ``shard_map`` in spmd mode. BARRIER
-        ignores ``x``.
+        ignores ``x``. For a planned multi-axis descriptor, spmd mode takes
+        ``axis_name`` as the tuple of physical mesh-axis names in descriptor
+        ``axes`` order; sim mode still takes the flat ``(comm_size, ...)``
+        stack (the plan owns the reshape to the logical mesh).
         """
         try:
             desc = self._as_descriptor(descriptor)
         except Exception:
             self.telemetry.errors += 1
             raise
+        if axis_name is not None and not isinstance(axis_name, str):
+            axis_name = tuple(axis_name) or None
         key = self._cache_key(desc, axis_name)
         sched = self._cache.get(key)
         if sched is None:
@@ -248,6 +327,7 @@ class OffloadEngine:
             self._cache[key] = sched
             self.telemetry.misses += 1
             self.telemetry.compiles += 1
+            self.telemetry.cache_size = len(self._cache)
         else:
             self.telemetry.hits += 1
 
@@ -270,6 +350,7 @@ class OffloadEngine:
 
     def clear(self) -> None:
         self._cache.clear()
+        self.telemetry.cache_size = 0
 
     # -- internals ---------------------------------------------------------
 
@@ -290,7 +371,7 @@ class OffloadEngine:
         self,
         desc: CollectiveDescriptor,
         key: bytes,
-        axis_name: Optional[str],
+        axis_name: AxisSpec,
     ) -> CompiledSchedule:
         op = get_operator(wire_op_name(desc.operation))
         algo = desc.algo_type
@@ -302,7 +383,17 @@ class OffloadEngine:
                 f"REDUCE root={root} out of range for comm_size={p}"
             )
 
-        if axis_name is not None:
+        if len(desc.axes) > 1:
+            fn = self._build_planned(desc, op, axis_name)
+            algo = f"plan{desc.split}:{algo}"
+        elif axis_name is not None:
+            if not isinstance(axis_name, str):
+                if len(axis_name) != 1:
+                    raise ValueError(
+                        f"descriptor has no multi-axis topology; pass one "
+                        f"mesh axis name, not {axis_name!r}"
+                    )
+                (axis_name,) = axis_name
             fn = self._build_spmd(coll, op, algo, axis_name, root)
         else:
             fn = jax.jit(self._build_sim(coll, op, algo, p, root))
@@ -314,6 +405,30 @@ class OffloadEngine:
             p=p,
             fn=fn,
         )
+
+    @staticmethod
+    def _build_planned(
+        desc: CollectiveDescriptor, op: AssocOp, axis_name: AxisSpec
+    ) -> Callable[[PyTree], PyTree]:
+        """Lower a multi-axis descriptor through the collective planner."""
+        itemsize = jnp.dtype(wire_dtype(desc.data_type)).itemsize
+        payload_bytes = max(1, int(desc.count)) * itemsize
+        plan = planner.build_plan(
+            desc.coll_type,
+            desc.axes,
+            op,
+            payload_bytes,
+            order=desc.split,
+            root=int(desc.root),
+        )
+        if axis_name is None:
+            return jax.jit(planner.lower_sim(plan, op))
+        if isinstance(axis_name, str) or len(axis_name) != len(desc.axes):
+            raise ValueError(
+                f"planned descriptor spans axes {desc.axes}; pass one mesh "
+                f"axis name per axis (got {axis_name!r})"
+            )
+        return planner.lower_spmd(plan, axis_name, op)
 
     @staticmethod
     def _build_sim(

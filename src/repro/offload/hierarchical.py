@@ -1,26 +1,21 @@
-"""Hierarchical (two-level) scans over 2D meshes.
+"""Compatibility wrappers: two-level (2D-mesh) scans via the planner.
 
-A single ring/axis is the paper's world (8 hosts, one NetFPGA). To scale the
-offloaded scan past one axis we use the classic block-scan decomposition —
-the same idiom every work-efficient GPU scan uses across thread blocks:
+This module used to hand-roll the classic block-scan decomposition (intra-row
+scan, carry exscan along the orthogonal axis, guarded local combine) for 2D
+meshes only. That schedule is now one instance of the general collective
+planner (:mod:`repro.offload.planner`), which builds the same phase list —
+for any CollType, over 1-3 mesh axes, with tuned axis splits — as a
+:class:`~repro.offload.planner.CollectivePlan` and lowers it through both
+backends. The entry points below keep the original signatures so existing
+callers and tests keep working; new code should plan directly::
 
-  1. **intra-axis scan**: every row (the fast, inner mesh axis) runs the
-     ordinary offloaded inclusive scan;
-  2. **carry exscan**: each row's total is exclusive-scanned along the
-     orthogonal (outer) axis — the "block sums" pass;
-  3. **local combine**: every rank folds its incoming outer carry into its
-     intra-row prefix (rows on the first outer rank keep theirs as-is).
+    plan = build_plan("SCAN", (p_outer, p_inner), op, payload_bytes)
+    out = lower_sim(plan)(flat_stacked)
 
 With global rank order defined outer-major (global = outer * p_inner +
-inner), the result equals the flat single-axis scan over p_outer * p_inner
-ranks — bitwise, whenever the operator's combine order is respected (it is:
-carries always enter on the left).
-
-Both realizations of the repo's backend pair are provided:
-``dist_hierarchical_scan`` composes the SPMD collectives over two named mesh
-axes inside ``shard_map``; ``sim_hierarchical_scan`` runs the identical
-schedule on stacked ``(p_outer, p_inner, ...)`` arrays for tests and
-benchmarks.
+inner), the planned result equals the flat single-axis scan over
+p_outer * p_inner ranks — bitwise, whenever the operator's combine order is
+respected (it is: carries always enter on the left).
 """
 
 from __future__ import annotations
@@ -28,13 +23,10 @@ from __future__ import annotations
 from typing import Any
 
 import jax
-import jax.numpy as jnp
-from jax import lax
 
-from repro.core import algorithms as alg
 from repro.core.operators import AssocOp, get_operator
-from repro.core.reduce_ops import allreduce_schedule
-from repro.core.scan_collective import dist_exscan, dist_scan, sim_scan
+from repro.core.scan_collective import _payload_bytes
+from repro.offload.planner import build_plan, lower_sim, lower_spmd
 
 PyTree = Any
 
@@ -51,28 +43,24 @@ def dist_hierarchical_scan(
 ) -> PyTree:
     """Two-level scan across ``outer_axis``-major ``inner_axis``-minor order.
 
-    Call inside ``shard_map`` over a mesh with both axes active. Equivalent to
-    a flat scan over the p_outer * p_inner ranks in (outer, inner) order, but
-    each phase's schedule only ever spans one axis — which is what keeps every
-    hop on a physical ring of the 2D torus.
+    Call inside ``shard_map`` over a mesh with both axes active. Equivalent
+    to a flat scan over the p_outer * p_inner ranks in (outer, inner) order,
+    but each phase's schedule only ever spans one axis — which is what keeps
+    every hop on a physical ring of the 2D torus.
     """
+    from repro.compat import axis_size
+
     op = get_operator(op)
-    # Phase 1: intra-row prefix in whichever form the caller wants (row
-    # totals come from the allreduce below, not from the inclusive scan).
-    if inclusive:
-        y_local = dist_scan(x, op, inner_axis, algorithm=inner_algorithm)
-    else:
-        y_local = dist_exscan(x, op, inner_axis, algorithm=inner_algorithm)
-    # Phase 2: row totals everywhere (order-respecting allreduce), then the
-    # carry exscan along the orthogonal axis.
-    total = allreduce_schedule(
-        alg.SpmdBackend(inner_axis), x, op
+    sizes = (axis_size(outer_axis), axis_size(inner_axis))
+    plan = build_plan(
+        "SCAN" if inclusive else "EXSCAN",
+        sizes,
+        op,
+        _payload_bytes(x),
+        order=(0, 1),
+        level_algorithms=(outer_algorithm, inner_algorithm),
     )
-    carry = dist_exscan(total, op, outer_axis, algorithm=outer_algorithm)
-    # Phase 3: local combine; the first outer rank has no incoming carry.
-    out = op.combine(carry, y_local)
-    outer_rank = lax.axis_index(outer_axis)
-    return alg._bwhere(outer_rank == 0, y_local, out)
+    return lower_spmd(plan, (outer_axis, inner_axis), op)(x)
 
 
 def sim_hierarchical_scan(
@@ -87,35 +75,19 @@ def sim_hierarchical_scan(
 ) -> PyTree:
     """Single-device realization over stacked (p_outer, p_inner, ...) leaves."""
     op = get_operator(op)
-
-    def swap(tree: PyTree) -> PyTree:
-        return jax.tree.map(lambda a: jnp.swapaxes(a, 0, 1), tree)
-
-    # Phase 1: inner scans, outer axis riding along as payload.
-    y = swap(
-        sim_scan(swap(stacked), op, p_inner, algorithm=inner_algorithm)
+    plan = build_plan(
+        "SCAN" if inclusive else "EXSCAN",
+        (p_outer, p_inner),
+        op,
+        _payload_bytes(stacked),
+        order=(0, 1),
+        level_algorithms=(outer_algorithm, inner_algorithm),
     )
-    y_local = y
-    if not inclusive:
-        y_local = swap(
-            sim_scan(
-                swap(stacked),
-                op,
-                p_inner,
-                algorithm=inner_algorithm,
-                inclusive=False,
-            )
-        )
-    # Phase 2: row totals are the last inner column; carry-exscan them.
-    totals = jax.tree.map(lambda a: a[:, p_inner - 1], y)
-    carry = sim_scan(
-        totals, op, p_outer, algorithm=outer_algorithm, inclusive=False
+    flat = flat_equivalent(stacked, p_outer, p_inner)
+    out = lower_sim(plan, op)(flat)
+    return jax.tree.map(
+        lambda a: a.reshape((p_outer, p_inner) + a.shape[1:]), out
     )
-    carry_wide = jax.tree.map(lambda a: jnp.expand_dims(a, 1), carry)
-    # Phase 3: local combine, first outer row exempt.
-    out = op.combine(carry_wide, y_local)
-    first_outer = (jnp.arange(p_outer) == 0)[:, None]
-    return alg._bwhere(first_outer, y_local, out)
 
 
 def flat_equivalent(

@@ -1,0 +1,584 @@
+"""Topology-aware collective planner: N-level decomposition for every CollType.
+
+The paper's NetFPGA ran one collective over one 8-host ring; the host runtime
+made an "intelligent selection" of the per-ring algorithm. At pod scale the
+runtime must select the *decomposition* too: which mesh axis each phase spans,
+in which order, and which schedule runs on each axis. Following sPIN's lesson
+that offload engines generalize when the schedule is a compiled *plan* rather
+than a hardcoded pipeline, this module owns the phase structure for all five
+descriptor CollTypes over 1D, 2D, and 3D (pod-axis) meshes:
+
+  * :class:`CollectivePlan` — the IR: a tuple of :class:`PlanPhase` records
+    (intra-axis scan, carry exscan, order-respecting axis total, tree reduce,
+    barrier, guarded local combine) over *logical levels* (level 0 outermost
+    in global rank order, the last level innermost), plus the chosen mapping
+    of logical levels onto physical mesh axes (the ``split``).
+  * :func:`build_plan` — builds the phase list for any CollType x mesh shape.
+    SCAN/EXSCAN use the N-level block-scan recursion (intra scan, axis totals,
+    carry exscan over the outer levels — where Traeff's Exscan analysis says
+    naive decompositions waste rounds — and a guarded combine); REDUCE runs a
+    per-axis tree reduction to the root's coordinates; ALLREDUCE chains
+    order-respecting axis totals innermost-first (correct for non-commutative
+    operators); BARRIER fences every axis.
+  * :func:`plan_axis_order` — the tuned split: consults the active
+    :class:`~repro.offload.tuning_cache.TuningCache` (measured split winners
+    first, then the least-squares-fitted LinkModel via ``fitted_model()``)
+    and falls back to the static TPU constants; per-phase algorithms come
+    from :func:`~repro.core.selector.select_algorithm` with the *real* coll
+    kind of each phase, never a flat per-axis "auto".
+  * :func:`lower_sim` / :func:`lower_spmd` — lower one plan through both
+    backends: stacked ``(p, ...)`` arrays on one device, or named mesh axes
+    inside ``shard_map``. Both interpret the identical phase list, so the
+    sim path is a bit-accurate rehearsal of the SPMD program.
+
+Plans are wire-representable: ``OffloadEngine.make_descriptor(axes=...)``
+encodes (axes, split) into the descriptor, so multi-axis plans cache-key and
+round-trip like every other offload request.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+import math
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import algorithms as alg
+from repro.core.operators import MAX, AssocOp, get_operator
+from repro.core.packet import MAX_AXES, CollType
+from repro.core.reduce_ops import allreduce_schedule, reduce_schedule
+from repro.core.scan_collective import dist_exscan, dist_scan, sim_scan
+from repro.core.selector import (
+    TPU_V5E,
+    LinkModel,
+    estimate_cost,
+    get_active_tuning,
+    select_algorithm,
+)
+
+PyTree = Any
+
+
+class PhaseKind(enum.IntEnum):
+    """What one plan phase does. All but COMBINE span exactly one axis."""
+
+    SCAN = 0      # intra-axis prefix (inclusive or exclusive)
+    TOTAL = 1     # order-respecting allreduce along the axis (block totals)
+    REDUCE = 2    # tree reduction to a root coordinate along the axis
+    BARRIER = 3   # zero-payload fence along the axis
+    COMBINE = 4   # local fold of a carry into a prefix, guarded at level 0
+
+
+# coll kind each phase kind tunes against in the measured tables
+_PHASE_COLL = {
+    PhaseKind.TOTAL: "allreduce",
+    PhaseKind.REDUCE: "reduce",
+    PhaseKind.BARRIER: "barrier",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanPhase:
+    """One step of a CollectivePlan.
+
+    ``level`` indexes the *logical* axis the phase spans (COMBINE is local:
+    level is -1). ``src``/``dst`` name registers of the plan interpreter;
+    COMBINE reads ``src = (carry, local)`` and keeps ``local`` unchanged on
+    ranks whose coordinates are zero along every level in ``guard_levels``
+    (the ranks whose carry is empty).
+    """
+
+    kind: PhaseKind
+    level: int
+    algorithm: str = "hillis_steele"
+    inclusive: bool = True
+    root: int = 0
+    src: Tuple[str, ...] = ("x",)
+    dst: str = "y"
+    guard_levels: Tuple[int, ...] = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectivePlan:
+    """The planner IR: phases + the logical-to-physical axis mapping.
+
+    ``sizes`` are the physical mesh-axis sizes (outermost-first, as the
+    descriptor carries them); ``order[i]`` is the physical axis placed at
+    logical level ``i``. ``logical_sizes`` is therefore the shape the flat
+    rank range factors into, outermost level first.
+    """
+
+    coll: CollType
+    op_name: str
+    sizes: Tuple[int, ...]
+    order: Tuple[int, ...]
+    phases: Tuple[PlanPhase, ...]
+    result: str = "y"
+
+    @property
+    def logical_sizes(self) -> Tuple[int, ...]:
+        return tuple(self.sizes[i] for i in self.order)
+
+    @property
+    def p(self) -> int:
+        return math.prod(self.sizes)
+
+    def describe(self) -> str:
+        """One line per phase — the plan's schedule_trace analogue."""
+        lines = [
+            f"{self.coll.name} over {self.sizes} split={self.order} "
+            f"(logical {self.logical_sizes})"
+        ]
+        for ph in self.phases:
+            if ph.kind == PhaseKind.COMBINE:
+                lines.append(
+                    f"  combine {ph.src[0]} into {ph.src[1]} -> {ph.dst} "
+                    f"(guard levels {ph.guard_levels})"
+                )
+            else:
+                extra = "" if ph.inclusive else " exclusive"
+                lines.append(
+                    f"  {ph.kind.name.lower()}{extra} level {ph.level} "
+                    f"(p={self.logical_sizes[ph.level]}) "
+                    f"[{ph.algorithm}] {ph.src[0]} -> {ph.dst}"
+                )
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Plan construction
+# ---------------------------------------------------------------------------
+
+
+def _phase_algorithm(
+    kind: PhaseKind,
+    inclusive: bool,
+    p_axis: int,
+    payload_bytes: int,
+    op: AssocOp,
+    override: Optional[str],
+) -> str:
+    if override is not None and override != "auto":
+        return override
+    if kind == PhaseKind.SCAN:
+        coll = "scan" if inclusive else "exscan"
+    else:
+        coll = _PHASE_COLL[kind]
+    if kind == PhaseKind.BARRIER:
+        # the fence runs MAX on a token regardless of the request's operator,
+        # so applicability (e.g. invertible_doubling) is judged against MAX
+        op, payload_bytes = MAX, 4
+    return select_algorithm(p_axis, payload_bytes, op, coll=coll)
+
+
+def _exscan_phases(
+    levels: Sequence[int],
+    src: str,
+    out: str,
+    tag: str,
+    algo: Callable[[PhaseKind, bool, int], str],
+) -> Tuple[PlanPhase, ...]:
+    """Recursive exclusive scan of ``src`` over the flattened ``levels``
+    (outermost..innermost) into register ``out`` — the carry ladder."""
+    if len(levels) == 1:
+        lv = levels[0]
+        return (
+            PlanPhase(
+                PhaseKind.SCAN, lv, algo(PhaseKind.SCAN, False, lv),
+                inclusive=False, src=(src,), dst=out,
+            ),
+        )
+    inner = levels[-1]
+    local = f"{tag}e{inner}"
+    totals = f"{tag}t{inner}"
+    carry = f"{tag}c{inner}"
+    phases = (
+        PlanPhase(
+            PhaseKind.SCAN, inner, algo(PhaseKind.SCAN, False, inner),
+            inclusive=False, src=(src,), dst=local,
+        ),
+        PlanPhase(
+            PhaseKind.TOTAL, inner, algo(PhaseKind.TOTAL, True, inner),
+            src=(src,), dst=totals,
+        ),
+    )
+    phases += _exscan_phases(levels[:-1], totals, carry, tag + "o", algo)
+    phases += (
+        PlanPhase(
+            PhaseKind.COMBINE, -1, src=(carry, local), dst=out,
+            guard_levels=tuple(levels[:-1]),
+        ),
+    )
+    return phases
+
+
+def build_plan(
+    coll: "CollType | str",
+    sizes: Sequence[int],
+    op: "AssocOp | str",
+    payload_bytes: int,
+    *,
+    order: "str | Sequence[int]" = "auto",
+    root: int = 0,
+    inclusive: bool = True,
+    level_algorithms: Optional[Sequence[Optional[str]]] = None,
+) -> CollectivePlan:
+    """Build the N-level plan for one collective over one mesh shape.
+
+    Args:
+      coll: descriptor CollType (EXSCAN implies the exclusive scan form).
+      sizes: physical mesh-axis sizes, outermost first (1-3 axes).
+      op: operator (affects algorithm applicability, not phase structure).
+      payload_bytes: per-rank payload, priced by the per-phase selector.
+      order: "auto" for the tuned split, or an explicit permutation of
+        ``range(len(sizes))`` mapping logical levels to physical axes.
+      root: flat root rank (REDUCE only) — decomposed into per-level
+        coordinates in logical rank order.
+      level_algorithms: optional per-*logical-level* algorithm override
+        (None or "auto" entries fall back to the selector); used by the
+        legacy hierarchical wrappers.
+    """
+    if isinstance(coll, str):
+        coll = CollType[coll.upper()]
+    op = get_operator(op)
+    sizes = tuple(int(s) for s in sizes)
+    if not 1 <= len(sizes) <= MAX_AXES:
+        raise ValueError(f"need 1..{MAX_AXES} mesh axes, got {sizes}")
+    if any(s < 1 for s in sizes):
+        raise ValueError(f"axis sizes must be positive: {sizes}")
+    if order == "auto":
+        order = plan_axis_order(coll, sizes, payload_bytes, op)
+    order = tuple(int(i) for i in order)
+    if sorted(order) != list(range(len(sizes))):
+        raise ValueError(
+            f"order {order!r} is not a permutation of range({len(sizes)})"
+        )
+    logical = tuple(sizes[i] for i in order)
+    k = len(logical)
+
+    def algo(kind: PhaseKind, incl: bool, level: int) -> str:
+        override = None
+        if level_algorithms is not None:
+            override = level_algorithms[level]
+        return _phase_algorithm(
+            kind, incl, logical[level], payload_bytes, op, override
+        )
+
+    if coll == CollType.EXSCAN:
+        inclusive = False
+
+    if coll in (CollType.SCAN, CollType.EXSCAN):
+        innermost = k - 1
+        phases: Tuple[PlanPhase, ...] = (
+            PlanPhase(
+                PhaseKind.SCAN, innermost,
+                algo(PhaseKind.SCAN, inclusive, innermost),
+                inclusive=inclusive, src=("x",), dst="y",
+            ),
+        )
+        if k > 1:
+            phases += (
+                PlanPhase(
+                    PhaseKind.TOTAL, innermost,
+                    algo(PhaseKind.TOTAL, True, innermost),
+                    src=("x",), dst="t",
+                ),
+            )
+            phases += _exscan_phases(tuple(range(k - 1)), "t", "c", "", algo)
+            phases += (
+                PlanPhase(
+                    PhaseKind.COMBINE, -1, src=("c", "y"), dst="y",
+                    guard_levels=tuple(range(k - 1)),
+                ),
+            )
+        result = "y"
+    elif coll in (CollType.REDUCE, CollType.ALLREDUCE, CollType.BARRIER):
+        # one phase per level, innermost first, chained through "y" — the
+        # per-axis tree reduce / ordered total / fence all share this shape
+        kind = {
+            CollType.REDUCE: PhaseKind.REDUCE,
+            CollType.ALLREDUCE: PhaseKind.TOTAL,
+            CollType.BARRIER: PhaseKind.BARRIER,
+        }[coll]
+        coords = (0,) * k
+        if coll == CollType.REDUCE:
+            if not 0 <= root < math.prod(sizes):
+                raise ValueError(f"root={root} out of range for mesh {sizes}")
+            coords = _unflatten(root, logical)
+        phases = ()
+        src = "x"
+        for level in range(k - 1, -1, -1):
+            phases += (
+                PlanPhase(
+                    kind, level, algo(kind, True, level),
+                    root=coords[level], src=(src,), dst="y",
+                ),
+            )
+            src = "y"
+        result = "y"
+    else:
+        raise ValueError(f"unknown coll_type {coll!r}")
+
+    return CollectivePlan(
+        coll=coll,
+        op_name=op.name,
+        sizes=sizes,
+        order=order,
+        phases=phases,
+        result=result,
+    )
+
+
+def _unflatten(rank: int, logical_sizes: Sequence[int]) -> Tuple[int, ...]:
+    """Flat rank -> per-level coordinates in logical (lex) order."""
+    coords = []
+    rem = rank
+    for s in reversed(logical_sizes):
+        coords.append(rem % s)
+        rem //= s
+    return tuple(reversed(coords))
+
+
+# ---------------------------------------------------------------------------
+# Plan costing and the tuned axis split
+# ---------------------------------------------------------------------------
+
+
+def plan_cost(
+    plan: CollectivePlan,
+    payload_bytes: int,
+    model: Optional[LinkModel] = None,
+) -> float:
+    """Predicted latency: sum of the per-phase alpha-beta-gamma estimates.
+
+    COMBINE phases are local (zero network cost); a REDUCE phase pays one
+    extra root-relocation hop on top of its tree schedule.
+    """
+    if model is None:
+        tuning = get_active_tuning()
+        fitted = tuning.fitted_model() if tuning is not None else None
+        model = fitted if fitted is not None else TPU_V5E
+    logical = plan.logical_sizes
+    total = 0.0
+    for ph in plan.phases:
+        if ph.kind == PhaseKind.COMBINE:
+            continue
+        p_axis = logical[ph.level]
+        nbytes = 4 if ph.kind == PhaseKind.BARRIER else payload_bytes
+        total += estimate_cost(ph.algorithm, p_axis, nbytes, model)
+        if ph.kind == PhaseKind.REDUCE and p_axis > 1:
+            total += model.alpha + nbytes * model.beta + model.gamma
+    return total
+
+
+def plan_axis_order(
+    coll: "CollType | str",
+    sizes: Sequence[int],
+    payload_bytes: int,
+    op: "AssocOp | str" = "sum",
+) -> Tuple[int, ...]:
+    """Choose the logical axis order (the split) for one topology.
+
+    Resolution mirrors ``select_algorithm``: a measured split winner from the
+    active tuning table rules when one exists for this (coll, sizes) at a
+    nearby payload; otherwise every permutation is priced with
+    :func:`plan_cost` under the fitted-or-static LinkModel. Ties keep the
+    physical order (identity split) for stability.
+    """
+    if isinstance(coll, str):
+        coll = CollType[coll.upper()]
+    op = get_operator(op)
+    sizes = tuple(int(s) for s in sizes)
+    n = len(sizes)
+    if n == 1:
+        return (0,)
+
+    tuning = get_active_tuning()
+    if tuning is not None:
+        winner = getattr(tuning, "split_winner", lambda *a, **k: None)(
+            coll.name.lower(), sizes, payload_bytes
+        )
+        if winner is not None and sorted(winner) == list(range(n)):
+            return tuple(winner)
+
+    best: Optional[Tuple[float, int, Tuple[int, ...]]] = None
+    identity = tuple(range(n))
+    for perm in itertools.permutations(range(n)):
+        plan = build_plan(
+            coll, sizes, op, payload_bytes, order=perm,
+            root=0, inclusive=True,
+        )
+        cost = plan_cost(plan, payload_bytes)
+        key = (cost, 0 if perm == identity else 1, perm)
+        if best is None or key < best:
+            best = key
+    return best[2]
+
+
+# ---------------------------------------------------------------------------
+# Lowering: sim (stacked arrays) and SPMD (shard_map) interpreters
+# ---------------------------------------------------------------------------
+
+
+def _along_axis(tree: PyTree, axis: int, fn: Callable[[PyTree], PyTree]) -> PyTree:
+    """Run a leading-rank-axis schedule along mesh axis ``axis`` of stacked
+    leaves; the other mesh axes ride along as payload dims."""
+    moved = jax.tree.map(lambda a: jnp.moveaxis(a, axis, 0), tree)
+    out = fn(moved)
+    return jax.tree.map(lambda a: jnp.moveaxis(a, 0, axis), out)
+
+
+def _zero_coord_mask(
+    logical_sizes: Sequence[int], guard_levels: Sequence[int]
+) -> jnp.ndarray:
+    """Boolean (logical mesh)-shaped mask: True where every guarded level's
+    coordinate is zero (the ranks whose incoming carry is empty)."""
+    k = len(logical_sizes)
+    mask = jnp.ones(tuple(logical_sizes), bool)
+    for lv in guard_levels:
+        coord = jnp.arange(logical_sizes[lv]).reshape(
+            (1,) * lv + (logical_sizes[lv],) + (1,) * (k - 1 - lv)
+        )
+        mask = mask & (coord == 0)
+    return mask
+
+
+def lower_sim(plan: CollectivePlan, op: "AssocOp | str | None" = None):
+    """Compile a plan to a function over flat stacked ``(p, ...)`` leaves.
+
+    The input's leading axis is the flat rank in logical order; internally it
+    is reshaped to the logical mesh shape, phases run along single mesh axes,
+    and the output is flattened back — directly comparable (bitwise, given
+    exact arithmetic) to the flat single-axis reference collective.
+    """
+    op = get_operator(plan.op_name if op is None else op)
+    logical = plan.logical_sizes
+    k = len(logical)
+    p_total = plan.p
+
+    def to_mesh(tree: PyTree) -> PyTree:
+        return jax.tree.map(
+            lambda a: a.reshape(logical + a.shape[1:]), tree
+        )
+
+    def to_flat(tree: PyTree) -> PyTree:
+        return jax.tree.map(
+            lambda a: a.reshape((p_total,) + a.shape[k:]), tree
+        )
+
+    def run(x: Optional[PyTree]) -> PyTree:
+        regs: Dict[str, PyTree] = {}
+        if plan.coll == CollType.BARRIER:
+            regs["x"] = jnp.ones(logical, jnp.float32)
+        else:
+            regs["x"] = to_mesh(x)
+        for ph in plan.phases:
+            if ph.kind == PhaseKind.COMBINE:
+                carry, local = regs[ph.src[0]], regs[ph.src[1]]
+                mask = _zero_coord_mask(logical, ph.guard_levels)
+                regs[ph.dst] = alg._bwhere(
+                    mask, local, op.combine(carry, local)
+                )
+                continue
+            src = regs[ph.src[0]]
+            p_axis = logical[ph.level]
+            backend = alg.SimBackend(p_axis)
+            if ph.kind == PhaseKind.SCAN:
+                fn = lambda t: sim_scan(  # noqa: E731
+                    t, op, p_axis, algorithm=ph.algorithm,
+                    inclusive=ph.inclusive,
+                )
+            elif ph.kind == PhaseKind.TOTAL:
+                fn = lambda t: allreduce_schedule(  # noqa: E731
+                    backend, t, op, algorithm=ph.algorithm
+                )
+            elif ph.kind == PhaseKind.REDUCE:
+                fn = lambda t: reduce_schedule(  # noqa: E731
+                    backend, t, op, root=ph.root, algorithm=ph.algorithm
+                )
+            elif ph.kind == PhaseKind.BARRIER:
+                # not reduce_ops.barrier_schedule: that mints a fresh token
+                # per call, but a multi-axis fence must *thread* one token
+                # through the levels so each axis fence data-depends on the
+                # previous (transitive all-to-all ordering XLA can't reorder)
+                fn = lambda t: allreduce_schedule(  # noqa: E731
+                    backend, t, MAX, algorithm=ph.algorithm
+                )
+            else:  # pragma: no cover - exhaustive
+                raise ValueError(f"unknown phase kind {ph.kind!r}")
+            regs[ph.dst] = _along_axis(src, ph.level, fn)
+        return to_flat(regs[plan.result])
+
+    return run
+
+
+def lower_spmd(
+    plan: CollectivePlan,
+    axis_names: Sequence[str],
+    op: "AssocOp | str | None" = None,
+):
+    """Compile a plan to a function callable inside ``shard_map``.
+
+    ``axis_names`` name the *physical* mesh axes in the same order as
+    ``plan.sizes``; the plan's split decides which named axis each logical
+    level runs over. Global rank order is lex over the logical levels —
+    callers lay data out accordingly (outermost logical level varies
+    slowest).
+    """
+    op = get_operator(plan.op_name if op is None else op)
+    axis_names = tuple(axis_names)
+    if len(axis_names) != len(plan.sizes):
+        raise ValueError(
+            f"plan spans {len(plan.sizes)} axes; got names {axis_names}"
+        )
+    names_l = tuple(axis_names[i] for i in plan.order)
+
+    def run(x: Optional[PyTree]) -> PyTree:
+        regs: Dict[str, PyTree] = {}
+        if plan.coll == CollType.BARRIER:
+            regs["x"] = jnp.ones((), jnp.float32)
+        else:
+            regs["x"] = x
+        for ph in plan.phases:
+            if ph.kind == PhaseKind.COMBINE:
+                carry, local = regs[ph.src[0]], regs[ph.src[1]]
+                cond = None
+                for lv in ph.guard_levels:
+                    z = lax.axis_index(names_l[lv]) == 0
+                    cond = z if cond is None else (cond & z)
+                regs[ph.dst] = alg._bwhere(
+                    cond, local, op.combine(carry, local)
+                )
+                continue
+            src = regs[ph.src[0]]
+            name = names_l[ph.level]
+            backend = alg.SpmdBackend(name, plan.logical_sizes[ph.level])
+            if ph.kind == PhaseKind.SCAN:
+                if ph.inclusive:
+                    out = dist_scan(src, op, name, algorithm=ph.algorithm)
+                else:
+                    out = dist_exscan(src, op, name, algorithm=ph.algorithm)
+            elif ph.kind == PhaseKind.TOTAL:
+                out = allreduce_schedule(
+                    backend, src, op, algorithm=ph.algorithm
+                )
+            elif ph.kind == PhaseKind.REDUCE:
+                out = reduce_schedule(
+                    backend, src, op, root=ph.root, algorithm=ph.algorithm
+                )
+            elif ph.kind == PhaseKind.BARRIER:
+                # same token-threading rationale as the sim interpreter
+                out = allreduce_schedule(
+                    backend, src, MAX, algorithm=ph.algorithm
+                )
+            else:  # pragma: no cover - exhaustive
+                raise ValueError(f"unknown phase kind {ph.kind!r}")
+            regs[ph.dst] = out
+        return regs[plan.result]
+
+    return run

@@ -9,9 +9,16 @@ winners, and least-squares fit the LinkModel's alpha/beta/gamma against the
 :class:`~repro.offload.tuning_cache.TuningCache` that, once activated,
 replaces the static constants underneath every ``algorithm="auto"`` call.
 
-Both collectives the engine scans with are measured: inclusive ("scan") and
-exclusive ("exscan"), because the invertible-doubling subtraction trick only
-pays off in the exclusive form — a distinction the static model cannot see.
+All five descriptor coll kinds are measured — scan, exscan, reduce,
+allreduce, barrier — so ``algorithm="auto"`` for every CollType resolves
+against its *own* measured table, never a scan stand-in. (scan vs exscan
+matters because the invertible-doubling subtraction trick only pays off in
+the exclusive form — a distinction the static model cannot see.)
+
+:func:`tune_splits` is the topology-level pass: it times whole
+planner-lowered collectives for every logical axis order of each mesh shape
+and records the winners, which ``plan_axis_order`` consults before any
+model-predicted split.
 """
 
 from __future__ import annotations
@@ -25,18 +32,40 @@ import numpy as np
 
 from repro.core.algorithms import ALGORITHMS
 from repro.core.operators import AssocOp, get_operator
+from repro.core.reduce_ops import sim_allreduce, sim_barrier, sim_reduce
 from repro.core.scan_collective import sim_scan
 from repro.offload.tuning_cache import TuningCache
 
 DEFAULT_PS: Tuple[int, ...] = (2, 4, 8, 16)
 DEFAULT_PAYLOADS: Tuple[int, ...] = (1024, 65536, 1 << 20)
-DEFAULT_COLLS: Tuple[str, ...] = ("scan", "exscan")
+DEFAULT_COLLS: Tuple[str, ...] = (
+    "scan", "exscan", "reduce", "allreduce", "barrier",
+)
+DEFAULT_TOPOLOGIES: Tuple[Tuple[int, ...], ...] = (
+    (2, 4), (4, 2), (2, 8), (4, 4), (2, 2, 2), (2, 2, 4),
+)
 
 
 def _applicable(algo: str, op: AssocOp) -> bool:
     return algo != "invertible_doubling" or (
         op.inverse is not None and op.commutative
     )
+
+
+def _sim_collective_fn(coll: str, algo: str, p: int, op: AssocOp):
+    """The fused single-dispatch schedule for one measured coll kind."""
+    if coll in ("scan", "exscan"):
+        inclusive = coll == "scan"
+        return lambda s: sim_scan(
+            s, op, p, algorithm=algo, inclusive=inclusive
+        )
+    if coll == "reduce":
+        return lambda s: sim_reduce(s, op, p, root=0, algorithm=algo)
+    if coll == "allreduce":
+        return lambda s: sim_allreduce(s, op, p, algorithm=algo)
+    if coll == "barrier":
+        return lambda _s: sim_barrier(p, algorithm=algo)
+    raise ValueError(f"unknown coll kind {coll!r}")
 
 
 def time_sim_collective(
@@ -55,10 +84,7 @@ def time_sim_collective(
     n = max(1, payload_bytes // 4)
     rng = np.random.default_rng(seed)
     x = jnp.asarray(rng.normal(size=(p, n)).astype(np.float32))
-    inclusive = coll == "scan"
-    fused = jax.jit(
-        lambda s: sim_scan(s, op, p, algorithm=algo, inclusive=inclusive)
-    )
+    fused = jax.jit(_sim_collective_fn(coll, algo, p, op))
     out = fused(x)
     jax.tree.map(lambda a: a.block_until_ready(), out)  # warm the jit
     times = []
@@ -88,6 +114,8 @@ def autotune(
     grid points are skipped (winners/fit use whatever was measured) — this is
     what keeps the CI smoke run inside its ~10 s envelope.
     """
+    from repro.core.operators import MAX
+
     op = get_operator(op)
     cache = TuningCache()
     algos = list(algorithms) if algorithms is not None else sorted(ALGORITHMS)
@@ -96,9 +124,17 @@ def autotune(
     for p in ps:
         for payload in payloads:
             for coll in colls:
-                for algo in algos:
-                    if not _applicable(algo, op):
-                        continue
+                coll_op = MAX if coll == "barrier" else op
+                coll_algos = [a for a in algos if _applicable(a, coll_op)]
+                # allreduce (and barrier on top of it) runs the fixed
+                # recursive-doubling butterfly at power-of-two p — the
+                # algorithm argument only matters off-pow2, so measure one
+                # representative schedule instead of one per algorithm
+                if coll in ("allreduce", "barrier") and p & (p - 1) == 0:
+                    coll_algos = coll_algos[:1] if (
+                        "recursive_doubling" not in coll_algos
+                    ) else ["recursive_doubling"]
+                for algo in coll_algos:
                     if (
                         time_budget_s is not None
                         and time.perf_counter() - t_start > time_budget_s
@@ -120,4 +156,87 @@ def autotune(
     # inspect the result right away.
     cache.fitted_model()
     _ = cache.winners
+    return cache
+
+
+def time_planned_collective(
+    coll: str,
+    sizes: Sequence[int],
+    order: Sequence[int],
+    payload_bytes: int,
+    op: "AssocOp | str" = "sum",
+    *,
+    iters: int = 5,
+    seed: int = 0,
+) -> float:
+    """Median wall-clock seconds of one whole planner-lowered collective on
+    the sim backend, for a fixed logical axis order."""
+    import math
+
+    from repro.offload.planner import build_plan, lower_sim
+
+    op = get_operator(op)
+    p_total = math.prod(int(s) for s in sizes)
+    n = max(1, payload_bytes // 4)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(p_total, n)).astype(np.float32))
+    plan = build_plan(coll, sizes, op, payload_bytes, order=tuple(order))
+    fused = jax.jit(lower_sim(plan, op))
+    arg = None if coll.lower() == "barrier" else x
+    out = fused(arg)
+    jax.tree.map(lambda a: a.block_until_ready(), out)  # warm the jit
+    times = []
+    for _ in range(max(1, iters)):
+        t0 = time.perf_counter()
+        out = fused(arg)
+        jax.tree.map(lambda a: a.block_until_ready(), out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def tune_splits(
+    *,
+    topologies: Sequence[Sequence[int]] = DEFAULT_TOPOLOGIES,
+    payloads: Sequence[int] = (1024, 65536),
+    colls: Sequence[str] = ("scan", "allreduce"),
+    op: "AssocOp | str" = "sum",
+    iters: int = 3,
+    time_budget_s: Optional[float] = None,
+    cache: Optional[TuningCache] = None,
+    verbose: bool = False,
+) -> TuningCache:
+    """Measure every logical axis order of every mesh shape — the topology
+    half of the autotuner. Winners feed ``plan_axis_order``; by construction
+    the recorded winner is never slower than any fixed order measured."""
+    import itertools
+
+    op = get_operator(op)
+    cache = cache if cache is not None else TuningCache()
+    t_start = time.perf_counter()
+    skipped = 0
+    for sizes in topologies:
+        sizes = tuple(int(s) for s in sizes)
+        for payload in payloads:
+            for coll in colls:
+                for order in itertools.permutations(range(len(sizes))):
+                    if (
+                        time_budget_s is not None
+                        and time.perf_counter() - t_start > time_budget_s
+                    ):
+                        skipped += 1
+                        continue
+                    t = time_planned_collective(
+                        coll, sizes, order, payload, op, iters=iters
+                    )
+                    cache.record_split(coll, sizes, order, payload, t)
+                    if verbose:
+                        print(
+                            f"tune-split {coll:9s} {str(sizes):12s} "
+                            f"order={order} bytes={payload:8d} "
+                            f"{t*1e6:10.1f}us"
+                        )
+    if verbose and skipped:
+        print(f"tune-split: time budget hit, skipped {skipped} points")
+    _ = cache.split_winners
     return cache

@@ -12,10 +12,17 @@ selection"; this module is where that intelligence persists. The autotuner
   * ``fitted`` — alpha/beta/gamma solved from the measurements against
     :func:`repro.core.selector.cost_features`, used for points too far from
     any measurement;
+  * ``split_winners`` — the measured-fastest logical axis order per
+    (coll, mesh shape, payload) — consulted by the collective planner's
+    ``plan_axis_order`` before any model-predicted split;
 
 and round-trips the whole table through JSON so one tuning run serves every
 subsequent process on the same backend (`REPRO_TUNING_TABLE` env var or an
-explicit ``load``).
+explicit ``load``). Tables loaded from ambient paths (the env var / the
+default cache dir) are fingerprint-checked: a table fitted on a different
+backend is rejected with a warning (:meth:`TuningCache.load_compatible`)
+rather than silently mispricing every selection; an explicit ``load()``
+stays strict and raises only on schema mismatch.
 """
 
 from __future__ import annotations
@@ -25,8 +32,9 @@ import json
 import math
 import os
 import platform
+import warnings
 from pathlib import Path
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -50,7 +58,7 @@ _MAX_GRID_DISTANCE = 3.0
 class Measurement:
     """One micro-benchmark sample: median seconds for a full collective."""
 
-    coll: str            # "scan" | "exscan"
+    coll: str            # "scan" | "exscan" | "reduce" | "allreduce" | "barrier"
     algo: str
     p: int
     payload_bytes: int
@@ -70,13 +78,45 @@ class Measurement:
         )
 
 
+@dataclasses.dataclass(frozen=True)
+class SplitMeasurement:
+    """One planned-collective sample: median seconds for a whole plan run
+    with a specific logical axis order over a specific mesh shape."""
+
+    coll: str
+    sizes: Tuple[int, ...]   # physical mesh-axis sizes, outermost first
+    order: Tuple[int, ...]   # logical level -> physical axis index
+    payload_bytes: int
+    seconds: float
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["sizes"] = list(self.sizes)
+        d["order"] = list(self.order)
+        return d
+
+    @staticmethod
+    def from_json(d: dict) -> "SplitMeasurement":
+        return SplitMeasurement(
+            coll=str(d["coll"]),
+            sizes=tuple(int(v) for v in d["sizes"]),
+            order=tuple(int(v) for v in d["order"]),
+            payload_bytes=int(d["payload_bytes"]),
+            seconds=float(d["seconds"]),
+        )
+
+
 class TuningCache:
     """Measurements + winners + fitted model, with JSON persistence."""
 
     def __init__(self, *, backend: Optional[str] = None):
         self.backend = backend or _backend_fingerprint()
         self.measurements: List[Measurement] = []
+        self.split_measurements: List[SplitMeasurement] = []
         self._winners: Dict[Tuple[str, int, int], str] = {}
+        self._split_winners: Dict[
+            Tuple[str, Tuple[int, ...], int], Tuple[int, ...]
+        ] = {}
         self._fitted: Optional[LinkModel] = None
 
     # -- recording ---------------------------------------------------------
@@ -89,6 +129,25 @@ class TuningCache:
         )
         self._winners = {}  # invalidate
         self._fitted = None
+
+    def record_split(
+        self,
+        coll: str,
+        sizes: Sequence[int],
+        order: Sequence[int],
+        payload_bytes: int,
+        seconds: float,
+    ) -> None:
+        self.split_measurements.append(
+            SplitMeasurement(
+                coll,
+                tuple(int(s) for s in sizes),
+                tuple(int(i) for i in order),
+                int(payload_bytes),
+                float(seconds),
+            )
+        )
+        self._split_winners = {}  # invalidate
 
     # -- reductions --------------------------------------------------------
 
@@ -103,6 +162,25 @@ class TuningCache:
                     best[key] = (m.seconds, m.algo)
             self._winners = {k: algo for k, (_, algo) in best.items()}
         return self._winners
+
+    @property
+    def split_winners(
+        self,
+    ) -> Dict[Tuple[str, Tuple[int, ...], int], Tuple[int, ...]]:
+        if not self._split_winners and self.split_measurements:
+            best: Dict[
+                Tuple[str, Tuple[int, ...], int],
+                Tuple[float, Tuple[int, ...]],
+            ] = {}
+            for m in self.split_measurements:
+                key = (m.coll, m.sizes, m.payload_bytes)
+                cur = best.get(key)
+                if cur is None or (m.seconds, m.order) < cur:
+                    best[key] = (m.seconds, m.order)
+            self._split_winners = {
+                k: order for k, (_, order) in best.items()
+            }
+        return self._split_winners
 
     def fitted_model(self) -> Optional[LinkModel]:
         """Least-squares (alpha, beta, gamma) over the inclusive-scan
@@ -151,6 +229,27 @@ class TuningCache:
             return None
         return best[1]
 
+    def split_winner(
+        self, coll: str, sizes: Sequence[int], payload_bytes: int
+    ) -> Optional[Tuple[int, ...]]:
+        """Measured-fastest logical axis order for this exact mesh shape, at
+        the nearest measured payload (log2 distance); None when this shape
+        (or coll) was never split-tuned — the planner then falls back to the
+        fitted cost model."""
+        sizes = tuple(int(s) for s in sizes)
+        best: Optional[Tuple[float, Tuple[int, ...]]] = None
+        for (c, gs, gm), order in self.split_winners.items():
+            if c != coll or gs != sizes:
+                continue
+            dist = abs(
+                math.log2(max(payload_bytes, 1)) - math.log2(max(gm, 1))
+            )
+            if best is None or dist < best[0]:
+                best = (dist, order)
+        if best is None or best[0] > 4 * _MAX_GRID_DISTANCE:
+            return None
+        return best[1]
+
     # -- persistence -------------------------------------------------------
 
     def to_json(self) -> dict:
@@ -159,6 +258,9 @@ class TuningCache:
             "schema_version": SCHEMA_VERSION,
             "backend": self.backend,
             "measurements": [m.to_json() for m in self.measurements],
+            "split_measurements": [
+                m.to_json() for m in self.split_measurements
+            ],
             "winners": [
                 {"coll": c, "p": p, "payload_bytes": m, "algo": algo}
                 for (c, p, m), algo in sorted(self.winners.items())
@@ -190,6 +292,8 @@ class TuningCache:
         cache = cls(backend=d.get("backend"))
         for m in d.get("measurements", []):
             cache.measurements.append(Measurement.from_json(m))
+        for m in d.get("split_measurements", []):
+            cache.split_measurements.append(SplitMeasurement.from_json(m))
         f = d.get("fitted")
         if f is not None:
             cache._fitted = LinkModel(
@@ -198,6 +302,31 @@ class TuningCache:
                 gamma=float(f["gamma"]),
                 ring=bool(f.get("ring", True)),
             )
+        return cache
+
+    @classmethod
+    def load_compatible(cls, path: "str | Path") -> "Optional[TuningCache]":
+        """Load a table only if it was fitted on *this* backend.
+
+        Ambient tables (``$REPRO_TUNING_TABLE`` / the default cache path)
+        travel with home directories and container images; silently applying
+        constants measured on a different backend would mis-rank every
+        schedule. On a fingerprint mismatch this warns and returns None so
+        callers fall back to the static constants; ``load()`` keeps the
+        strict raise-on-schema-only behavior for explicitly named tables.
+        """
+        cache = cls.load(path)
+        current = _backend_fingerprint()
+        if cache.backend != current:
+            warnings.warn(
+                f"tuning table {path} was measured on backend "
+                f"{cache.backend!r} but this process runs on {current!r}; "
+                "ignoring it (static cost constants stay active). Re-run "
+                "the autotuner on this backend to regenerate it.",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+            return None
         return cache
 
     # -- activation --------------------------------------------------------
@@ -213,11 +342,16 @@ def deactivate() -> None:
 
 
 def load_default_table() -> Optional[TuningCache]:
-    """Load + activate the table named by ``$REPRO_TUNING_TABLE``, if any."""
+    """Load + activate the table named by ``$REPRO_TUNING_TABLE``, if any.
+
+    Fingerprint-checked: a table measured on another backend is ignored
+    (with a warning) rather than activated.
+    """
     path = os.environ.get(TUNING_TABLE_ENV)
     if not path or not Path(path).exists():
         return None
-    return TuningCache.load(path).activate()
+    cache = TuningCache.load_compatible(path)
+    return cache.activate() if cache is not None else None
 
 
 def _backend_fingerprint() -> str:

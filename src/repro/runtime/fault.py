@@ -9,6 +9,16 @@ Real clusters lose hosts; the contract here is:
     checkpoint with the NEW shardings (CheckpointManager.restore handles the
     re-layout), then continues.
 
+A re-mesh also invalidates everything the offload subsystem derived from the
+old topology: cached collective plans key on axis sizes, and the tuning
+table's (p, payload) grid no longer matches the surviving mesh. Interested
+parties (``launch.offload_runtime`` wires the engine + a budgeted re-tune)
+subscribe with :func:`register_remesh_listener`; whoever *adopts* a new
+topology (the trainer's recovery path) fires :func:`notify_remesh` with the
+applied axis sizes — ``plan_remesh`` itself is a pure feasibility query.
+Listeners must never block recovery — exceptions are swallowed into
+:data:`remesh_listener_errors`.
+
 Straggler mitigation lives in runtime/straggler.py; here we only decide
 membership.
 """
@@ -16,7 +26,40 @@ membership.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Tuple
+from typing import Callable, List, Optional, Tuple
+
+RemeshListener = Callable[[Tuple[int, int], Tuple[int, int]], None]
+
+_REMESH_LISTENERS: List[RemeshListener] = []
+
+#: (listener, exception) pairs from listeners that raised during notify
+remesh_listener_errors: List[Tuple[RemeshListener, Exception]] = []
+
+
+def register_remesh_listener(fn: RemeshListener) -> RemeshListener:
+    """Subscribe ``fn(old_axes, new_axes)`` to re-mesh plans; returns ``fn``
+    so it can be handed back to :func:`unregister_remesh_listener`."""
+    _REMESH_LISTENERS.append(fn)
+    return fn
+
+
+def unregister_remesh_listener(fn: RemeshListener) -> None:
+    try:
+        _REMESH_LISTENERS.remove(fn)
+    except ValueError:
+        pass
+
+
+def notify_remesh(
+    old_axes: Tuple[int, int], new_axes: Tuple[int, int]
+) -> None:
+    """Fire every registered listener; a failing listener is recorded in
+    ``remesh_listener_errors`` and never interrupts recovery."""
+    for fn in list(_REMESH_LISTENERS):
+        try:
+            fn(old_axes, new_axes)
+        except Exception as e:  # pragma: no cover - defensive
+            remesh_listener_errors.append((fn, e))
 
 
 class SimulatedFailure(RuntimeError):
@@ -43,7 +86,9 @@ def plan_remesh(
 
     The model axis is load-bearing (parameter layout); we only shrink the
     data axis, to the largest power-of-two that the surviving hosts support.
-    Returns None when no valid mesh remains.
+    Returns None when no valid mesh remains. Pure: planning is a feasibility
+    query — whoever *adopts* a plan calls :func:`notify_remesh` with the
+    applied topology (the trainer's recovery path does).
     """
     surviving = data_axis - lost_hosts * hosts_per_slice
     if surviving < 1:

@@ -30,6 +30,7 @@ from repro.configs.base import ModelConfig, ShapeConfig
 from repro.launch.steps import build_train_step
 from repro.models import ModelApi, build_model
 from repro.optim.adamw import AdamWConfig, init_opt_state
+from repro.runtime import fault as fault_mod
 from repro.runtime.fault import FailureInjector, SimulatedFailure, plan_remesh
 from repro.runtime.straggler import StragglerDetector
 from repro.sharding.specs import Topology, make_topology, use_topology
@@ -139,8 +140,13 @@ class Trainer:
             return
         sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
         old_data = sizes.get("data", 1)
-        plan = plan_remesh(old_data, sizes.get("model", 1), lost_hosts=0)
+        model = sizes.get("model", 1)
+        plan = plan_remesh(old_data, model, lost_hosts=0)
         new_data = max(1, old_data // 2) if old_data > 1 else 1
+        if new_data != old_data:
+            # the adopted topology invalidates offload plan caches and the
+            # active tuning grid — fire the fault-layer listeners
+            fault_mod.notify_remesh((old_data, model), (new_data, model))
         n_needed = new_data * sizes.get("model", 1)
         devices = np.asarray(mesh.devices).reshape(-1)[:n_needed]
         new_mesh = jax.sharding.Mesh(

@@ -99,3 +99,21 @@ def test_hierarchical_any_inner_outer_algorithm(algo):
 def test_hierarchical_spmd_2d_mesh(subprocess_runner):
     """dist_hierarchical_scan on a real 2x4 host-device mesh."""
     subprocess_runner("repro.testing.hierarchical_check", "2", "4")
+
+
+def test_wrapper_equals_direct_planner_lowering():
+    """The legacy 2D entry point is a thin wrapper: its result must equal a
+    directly built + lowered 2-level plan, bit for bit."""
+    from repro.offload import build_plan, lower_sim
+
+    po, pi = 3, 4
+    x = _stacked(po, pi, seed=21)
+    via_wrapper = sim_hierarchical_scan(x, "sum", po, pi)
+    plan = build_plan(
+        "SCAN", (po, pi), "sum", 32, order=(0, 1),
+        level_algorithms=("hillis_steele", "hillis_steele"),
+    )
+    via_plan = lower_sim(plan)(flat_equivalent(x, po, pi))
+    np.testing.assert_array_equal(
+        np.asarray(via_wrapper).reshape(po * pi, -1), np.asarray(via_plan)
+    )

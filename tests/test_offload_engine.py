@@ -260,3 +260,42 @@ def test_make_descriptor_auto_resolves_algorithm():
     assert desc.comm_size == 16
     # and the resolved descriptor still round-trips the wire format
     assert CollectiveDescriptor.decode(desc.encode()) == desc
+
+
+def test_make_descriptor_auto_uses_each_colls_own_table():
+    """REDUCE/ALLREDUCE/BARRIER auto-selection must consult their own coll
+    kind's measured winners, not the scan table."""
+    cache = TuningCache(backend="synthetic")
+    grid = {
+        "scan": "hillis_steele",
+        "exscan": "sklansky",
+        "reduce": "binomial_tree",
+        "allreduce": "recursive_doubling",
+        "barrier": "sequential_pipelined",
+    }
+    for coll, winner in grid.items():
+        cache.record(coll, winner, 8, 64, 1e-6)
+        cache.record(coll, "sequential", 8, 64, 9e-6)
+    cache.activate()
+    eng = OffloadEngine()
+    for coll, winner in grid.items():
+        desc = eng.make_descriptor(coll.upper(), p=8, payload_bytes=64)
+        assert desc.algo_type == winner, (coll, desc.algo_type)
+
+
+def test_autotune_grid_covers_all_five_colls():
+    cache = autotune(
+        ps=(2, 4),
+        payloads=(256,),
+        colls=("scan", "exscan", "reduce", "allreduce", "barrier"),
+        algorithms=("hillis_steele", "binomial_tree"),
+        iters=1,
+    )
+    colls_measured = {m.coll for m in cache.measurements}
+    assert colls_measured == {
+        "scan", "exscan", "reduce", "allreduce", "barrier",
+    }
+    for coll in colls_measured:
+        assert cache.lookup(4, 256, coll) in {
+            "hillis_steele", "binomial_tree",
+        }
