@@ -7,6 +7,9 @@
                                    + planned-collective sections: tuned vs
                                    fixed axis splits and the 3D planner
                                    cache-hit proof
+  trainer_step                  -- trainer-step offload-vs-raw comparison on
+                                   a 2x2 CPU mesh (subprocess): per-step
+                                   wall-clock + bitwise/cache-hit assertions
   roofline (report)             -- dry-run derived roofline tables
 
 Prints ``name,...,derived`` CSV sections. Run:
@@ -14,8 +17,9 @@ Prints ``name,...,derived`` CSV sections. Run:
 
 ``--smoke`` runs only the offload-engine smoke (budgeted tuning grid +
 descriptor-cache proof + one 3D planned collective end-to-end with an
-asserted schedule-cache hit rate) — the CI regression gate for the offload
-subsystem.
+asserted schedule-cache hit rate + a 2-step offloaded trainer on a 2x2 mesh
+asserted bitwise against the raw shard_map baseline) — the CI regression
+gate for the offload subsystem.
 """
 
 import argparse
@@ -28,6 +32,7 @@ from benchmarks import (  # noqa: E402
     offloaded_latency,
     report,
     scan_latency,
+    trainer_step,
     tuned_vs_static,
 )
 
@@ -49,6 +54,13 @@ def main() -> None:
             "cache proof ==="
         )
         for row in tuned_vs_static.smoke():
+            print(row)
+        print()
+        print(
+            "# === Offloaded trainer smoke: 2-step DP trainer on a 2x2 "
+            "mesh, engine vs raw (bitwise) ==="
+        )
+        for row in trainer_step.smoke():
             print(row)
         return
 
@@ -96,6 +108,15 @@ def main() -> None:
         print(row)
     for row in tuned_vs_static.planned_smoke():
         print(row)
+
+    print()
+    print("# === Trainer step: offload-engine vs raw collectives ===")
+    print("trainer_step,mode,ms_per_step")
+    try:
+        for row in trainer_step.run(bench_iters=3 if args.quick else 5):
+            print(row)
+    except Exception as e:  # subprocess needs a CPU with >= 4 threads
+        print(f"(trainer-step comparison unavailable: {e})")
 
     print()
     print("# === Roofline tables (from dry-run artifacts) ===")

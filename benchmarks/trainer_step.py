@@ -1,0 +1,72 @@
+"""Trainer-step offload-vs-raw benchmark + the offloaded-training smoke gate.
+
+Drives ``repro.testing.train_offload_check`` in a subprocess (the multi-device
+CPU mesh must be fixed before jax import) and re-emits its CSV rows:
+
+  trainer_step,<mode>,<ms_per_step>          -- raw_lax vs offload_engine
+  trainer_offload,step,<n>,misses,...        -- per-step dispatch telemetry
+  trainer_offload_summary,bitwise_equal,...  -- the CI assertions
+
+The subprocess itself *asserts* (exit status + ALL-OK marker) that the
+engine-dispatched step is bitwise equal to the raw shard_map baseline, that
+the step-2 dispatch hits the compiled-plan cache, and that recovery adopts
+``plan_remesh``'s topology — so a regression fails the benchmark run, not
+just a grep.
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+from typing import List
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _run_check(args: List[str], timeout: int = 900) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + env.get(
+        "PYTHONPATH", ""
+    )
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.testing.train_offload_check", *args],
+        capture_output=True,
+        text=True,
+        timeout=timeout,
+        env=env,
+        cwd=str(REPO),
+    )
+    if proc.returncode != 0 or "ALL-OK" not in proc.stdout:
+        raise RuntimeError(
+            f"train_offload_check failed (rc={proc.returncode})\n"
+            f"--- stdout ---\n{proc.stdout[-4000:]}\n"
+            f"--- stderr ---\n{proc.stderr[-4000:]}"
+        )
+    return proc.stdout
+
+
+def _rows(stdout: str) -> List[str]:
+    return [
+        line
+        for line in stdout.splitlines()
+        if line.startswith("trainer_step,")
+        or line.startswith("trainer_offload")
+    ]
+
+
+def smoke() -> List[str]:
+    """CI gate: 2-step trainer on a 2x2 CPU mesh, engine vs raw, bitwise."""
+    return _rows(_run_check(["2", "2", "--steps", "2"]))
+
+
+def run(steps: int = 2, bench_iters: int = 5) -> List[str]:
+    """Full report: adds the per-step wall-clock comparison."""
+    return _rows(
+        _run_check(
+            ["2", "2", "--steps", str(steps), "--bench-iters",
+             str(bench_iters)]
+        )
+    )

@@ -7,8 +7,12 @@
 # proves the descriptor schedule cache (hit/miss telemetry), executes one 3D
 # planned collective end-to-end per CollType — asserting the repeat dispatch
 # hits the plan cache and that telemetry exposes cache_size + per-coll
-# latency — and reports the tuned-vs-fixed axis split. Regressions in the
-# offload/planner subsystem fail CI even when no unit test covers them yet.
+# latency — reports the tuned-vs-fixed axis split, and runs a 2-step DP
+# trainer on a 2x2 CPU mesh with use_offload_engine=True, asserting the
+# step-2 dispatch is a plan-cache hit and that loss/grads/params are bitwise
+# equal to the raw shard_map baseline (plus planner-first remesh adoption).
+# Regressions in the offload/planner subsystem fail CI even when no unit
+# test covers them yet.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -24,6 +28,8 @@ trap 'rm -f "$SMOKE_OUT"' EXIT
 python -m benchmarks.run --smoke | tee "$SMOKE_OUT"
 grep -q "^planned_smoke_summary," "$SMOKE_OUT" \
   || { echo "CI FAIL: planned 3D smoke section missing"; exit 1; }
+grep -q "^trainer_offload_summary,bitwise_equal,1,step2_cache_hit,1," "$SMOKE_OUT" \
+  || { echo "CI FAIL: offloaded trainer smoke missing or not bitwise"; exit 1; }
 
 echo
 echo "CI OK"

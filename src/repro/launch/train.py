@@ -36,6 +36,11 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--mesh", choices=["none", "production"], default="none")
+    ap.add_argument(
+        "--offload-engine", action="store_true",
+        help="dispatch the step's gradient/metric collectives through the "
+             "offload engine as planned descriptors (pure-DP meshes)",
+    )
     ap.add_argument("--fail-at", type=int, nargs="*", default=[],
                     help="inject simulated failures at these steps")
     ap.add_argument("--opt", default="", help="perf flags k=v,...")
@@ -59,7 +64,10 @@ def main() -> None:
     ))
     tr = Trainer(
         api, topo, shape, data,
-        TrainerConfig(ckpt_dir=args.ckpt_dir, ckpt_every=25),
+        TrainerConfig(
+            ckpt_dir=args.ckpt_dir, ckpt_every=25,
+            use_offload_engine=args.offload_engine,
+        ),
         AdamWConfig(lr=args.lr, warmup_steps=10, total_steps=args.steps),
         injector=FailureInjector(fail_at=tuple(args.fail_at)),
     )

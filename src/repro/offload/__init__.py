@@ -30,12 +30,14 @@ from repro.offload.hierarchical import (
 from repro.offload.planner import (
     CollectivePlan,
     PhaseKind,
+    PlanLayout,
     PlanPhase,
     build_plan,
     lower_sim,
     lower_spmd,
     plan_axis_order,
     plan_cost,
+    plan_layout,
 )
 from repro.offload.tuner import (
     DEFAULT_PAYLOADS,
@@ -66,6 +68,7 @@ __all__ = [
     "Measurement",
     "OffloadEngine",
     "PhaseKind",
+    "PlanLayout",
     "PlanPhase",
     "SplitMeasurement",
     "TUNING_TABLE_ENV",
@@ -80,6 +83,7 @@ __all__ = [
     "lower_spmd",
     "plan_axis_order",
     "plan_cost",
+    "plan_layout",
     "sim_hierarchical_scan",
     "time_planned_collective",
     "time_sim_collective",

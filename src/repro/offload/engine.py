@@ -9,7 +9,7 @@ keyed by the descriptor words, and dispatches every subsequent identical
 request straight from the cache — with hit/miss/latency telemetry standing in
 for the paper's 8 ns on-NIC timer.
 
-Two execution modes, mirroring the repo's two backends:
+Three execution modes, mirroring the repo's backends:
 
   * **sim** (``axis_name=None``): payloads are stacked ``(p, ...)`` arrays on
     one device; the engine owns the dispatch, jits the fused schedule, and
@@ -18,6 +18,16 @@ Two execution modes, mirroring the repo's two backends:
     cached schedule closure is inlined into the caller's trace (the compiled
     XLA program is the "NIC"), so the engine counts hits/misses but leaves
     timing to the profiler.
+  * **driver** (``axis_name=...`` plus ``mesh=...``): called from *outside*
+    any trace. The engine wraps the schedule in its own
+    ``jit(shard_map(...))`` over the given mesh, compiles it once per
+    descriptor, and dispatches the compiled program on every offload — the
+    closest software analogue of the paper's host/NIC split: the host
+    computes locally, rings the doorbell with a descriptor, and the
+    pre-programmed engine runs the collective. Payload layout is the sim
+    contract (stacked ``(p, ...)`` leaves, leading axis in the plan's
+    *logical* rank order); sharding in/out follows the descriptor's split,
+    so repeat dispatches move no data. Latency is wall-clock, like sim.
 
 All five descriptor CollTypes dispatch through the same path: SCAN, EXSCAN,
 REDUCE, ALLREDUCE, BARRIER. Descriptors carrying a multi-axis topology
@@ -32,6 +42,7 @@ axes in descriptor order.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import time
 from typing import Any, Callable, Dict, Optional, Sequence, Tuple, Union
 
@@ -203,7 +214,9 @@ class OffloadEngine:
         return CollectiveDescriptor.decode(np.asarray(descriptor))
 
     @staticmethod
-    def _cache_key(desc: CollectiveDescriptor, axis_name: AxisSpec) -> bytes:
+    def _cache_key(
+        desc: CollectiveDescriptor, axis_name: AxisSpec, mesh: Any = None
+    ) -> bytes:
         normalized = dataclasses.replace(
             desc, rank=0, msg_type=MsgType.OFFLOAD_REQUEST
         )
@@ -213,6 +226,18 @@ class OffloadEngine:
             mode = axis_name
         else:
             mode = "|".join(axis_name)
+        if mesh is not None:
+            shape = ",".join(
+                f"{n}={s}" for n, s in zip(mesh.axis_names, mesh.devices.shape)
+            )
+            # device identity matters: two same-shape meshes over different
+            # (or reordered) devices must not share a compiled program
+            devs = hashlib.blake2s(
+                ",".join(
+                    str(getattr(d, "id", d)) for d in mesh.devices.flat
+                ).encode("utf-8")
+            ).hexdigest()[:12]
+            mode = f"driver[{shape}@{devs}]|{mode}"
         return normalized.encode().tobytes() + b"|" + mode.encode("utf-8")
 
     def make_descriptor(
@@ -299,15 +324,18 @@ class OffloadEngine:
         descriptor: "CollectiveDescriptor | np.ndarray",
         x: Optional[PyTree] = None,
         axis_name: AxisSpec = None,
+        mesh: Any = None,
     ) -> PyTree:
         """Run the collective the descriptor describes; return its result.
 
         ``x`` is the per-rank contribution: a stacked ``(p, ...)`` pytree in
-        sim mode, the local shard inside ``shard_map`` in spmd mode. BARRIER
-        ignores ``x``. For a planned multi-axis descriptor, spmd mode takes
-        ``axis_name`` as the tuple of physical mesh-axis names in descriptor
-        ``axes`` order; sim mode still takes the flat ``(comm_size, ...)``
-        stack (the plan owns the reshape to the logical mesh).
+        sim and driver modes (leading axis in the plan's *logical* rank
+        order), the local shard inside ``shard_map`` in spmd mode. BARRIER
+        ignores ``x``. For a planned multi-axis descriptor, ``axis_name`` is
+        the tuple of physical mesh-axis names in descriptor ``axes`` order.
+        Passing ``mesh`` (with ``axis_name``) selects driver mode: the
+        engine owns the ``jit(shard_map(...))`` program, compiled on first
+        dispatch and streamed from the cache afterwards.
         """
         try:
             desc = self._as_descriptor(descriptor)
@@ -316,11 +344,13 @@ class OffloadEngine:
             raise
         if axis_name is not None and not isinstance(axis_name, str):
             axis_name = tuple(axis_name) or None
-        key = self._cache_key(desc, axis_name)
+        if mesh is not None and axis_name is None:
+            raise ValueError("driver mode (mesh=...) requires axis_name")
+        key = self._cache_key(desc, axis_name, mesh)
         sched = self._cache.get(key)
         if sched is None:
             try:
-                sched = self._compile(desc, key, axis_name)
+                sched = self._compile(desc, key, axis_name, mesh)
             except Exception:
                 self.telemetry.errors += 1
                 raise
@@ -331,10 +361,14 @@ class OffloadEngine:
         else:
             self.telemetry.hits += 1
 
-        if axis_name is None and desc.coll_type != CollType.BARRIER:
+        timed = axis_name is None or mesh is not None
+        if desc.coll_type == CollType.BARRIER:
+            if mesh is not None and x is None:
+                x = jnp.zeros((desc.comm_size,), jnp.float32)
+        elif timed:
             self._validate_sim_payload(desc, x)
 
-        if axis_name is None:
+        if timed:
             t0 = time.perf_counter()
             out = sched.fn(x)
             out = jax.tree.map(lambda a: a.block_until_ready(), out)
@@ -372,6 +406,7 @@ class OffloadEngine:
         desc: CollectiveDescriptor,
         key: bytes,
         axis_name: AxisSpec,
+        mesh: Any = None,
     ) -> CompiledSchedule:
         op = get_operator(wire_op_name(desc.operation))
         algo = desc.algo_type
@@ -387,16 +422,19 @@ class OffloadEngine:
             fn = self._build_planned(desc, op, axis_name)
             algo = f"plan{desc.split}:{algo}"
         elif axis_name is not None:
-            if not isinstance(axis_name, str):
-                if len(axis_name) != 1:
+            one = axis_name
+            if not isinstance(one, str):
+                if len(one) != 1:
                     raise ValueError(
                         f"descriptor has no multi-axis topology; pass one "
-                        f"mesh axis name, not {axis_name!r}"
+                        f"mesh axis name, not {one!r}"
                     )
-                (axis_name,) = axis_name
-            fn = self._build_spmd(coll, op, algo, axis_name, root)
+                (one,) = one
+            fn = self._build_spmd(coll, op, algo, one, root)
         else:
             fn = jax.jit(self._build_sim(coll, op, algo, p, root))
+        if mesh is not None:
+            fn = self._build_driver(desc, fn, axis_name, mesh)
         return CompiledSchedule(
             key=key,
             coll=coll.name.lower(),
@@ -404,6 +442,62 @@ class OffloadEngine:
             op_name=op.name,
             p=p,
             fn=fn,
+        )
+
+    @staticmethod
+    def _build_driver(
+        desc: CollectiveDescriptor,
+        inner: Callable[[PyTree], PyTree],
+        axis_name: AxisSpec,
+        mesh: Any,
+    ) -> Callable[[PyTree], PyTree]:
+        """Wrap a spmd schedule closure in the engine's own shard_map + jit.
+
+        The payload is the sim-mode stacked ``(p, ...)`` contract with the
+        leading axis in *logical* rank order; the in/out spec shards it
+        across the physical axes in the descriptor split's logical order
+        (see ``sharding.specs.plan_spec``), so the stacked global array and
+        the per-rank shards line up with zero data movement.
+        """
+        from jax.sharding import PartitionSpec as P
+
+        from repro.compat import shard_map
+
+        names = (axis_name,) if isinstance(axis_name, str) else tuple(axis_name)
+        missing = [n for n in names if n not in mesh.axis_names]
+        if missing:
+            raise ValueError(
+                f"axes {missing} not in mesh axes {mesh.axis_names}"
+            )
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        expect = desc.axes if len(desc.axes) > 1 else (desc.comm_size,)
+        for n, want in zip(names, expect):
+            if int(sizes[n]) != int(want):
+                raise ValueError(
+                    f"descriptor axis size {want} != mesh axis "
+                    f"{n!r} size {sizes[n]}"
+                )
+        if len(desc.axes) > 1:
+            order = desc.split or tuple(range(len(desc.axes)))
+            names_l = tuple(names[i] for i in order)
+        else:
+            names_l = names
+        entry = names_l[0] if len(names_l) == 1 else names_l
+        spec = P(entry)
+
+        def body(xs: PyTree) -> PyTree:
+            xs = jax.tree.map(lambda a: a[0], xs)
+            out = inner(xs)
+            return jax.tree.map(lambda a: jnp.asarray(a)[None], out)
+
+        return jax.jit(
+            shard_map(
+                body,
+                mesh=mesh,
+                in_specs=(spec,),
+                out_specs=spec,
+                check_vma=False,
+            )
         )
 
     @staticmethod

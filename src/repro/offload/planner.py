@@ -46,6 +46,7 @@ from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from repro.core import algorithms as alg
@@ -148,6 +149,98 @@ class CollectivePlan:
                     f"[{ph.algorithm}] {ph.src[0]} -> {ph.dst}"
                 )
         return "\n".join(lines)
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanLayout:
+    """The logical<->physical data layout a plan's split implies.
+
+    A non-identity split changes global rank order: logical level ``i`` runs
+    over physical axis ``order[i]``, so the flat rank that owns block ``r`` of
+    a logical-rank-ordered payload is *not* ``r``. This object owns the two
+    flat permutations (as reshape/transpose, exact for any payload dims) so
+    callers never hand-derive the transpose again:
+
+      * :meth:`to_physical` — logical-rank-ordered leading axis -> physical
+        (lex over the physical mesh axes, outermost first);
+      * :meth:`to_logical` — the inverse;
+      * :meth:`spec_axes` — the physical axis *names* in logical order, the
+        input to :func:`repro.sharding.specs.plan_spec` (shard a logical
+        array with that spec and no data movement is needed at all).
+    """
+
+    sizes: Tuple[int, ...]
+    order: Tuple[int, ...]
+
+    def __post_init__(self):
+        if sorted(self.order) != list(range(len(self.sizes))):
+            raise ValueError(
+                f"order {self.order!r} is not a permutation of "
+                f"range({len(self.sizes)})"
+            )
+
+    @property
+    def logical_sizes(self) -> Tuple[int, ...]:
+        return tuple(self.sizes[i] for i in self.order)
+
+    @property
+    def inverse(self) -> Tuple[int, ...]:
+        """``inverse[physical_axis] = logical_level`` (the transpose axes)."""
+        inv = [0] * len(self.order)
+        for level, axis in enumerate(self.order):
+            inv[axis] = level
+        return tuple(inv)
+
+    @property
+    def p(self) -> int:
+        return math.prod(self.sizes)
+
+    def spec_axes(self, axis_names: Sequence[str]) -> Tuple[str, ...]:
+        """Physical mesh-axis names reordered to logical (split) order."""
+        if len(axis_names) != len(self.sizes):
+            raise ValueError(
+                f"layout spans {len(self.sizes)} axes; got names {axis_names}"
+            )
+        return tuple(axis_names[i] for i in self.order)
+
+    def _permute(self, x, from_sizes, axes):
+        k = len(self.sizes)
+        xp = np if isinstance(x, np.ndarray) else jnp
+        lead = x.shape[1:]
+        arr = xp.reshape(x, tuple(from_sizes) + lead)
+        arr = xp.transpose(arr, tuple(axes) + tuple(range(k, k + len(lead))))
+        return xp.reshape(arr, (self.p,) + lead)
+
+    def to_physical(self, x):
+        """Logical-rank-ordered leading axis -> physical rank order."""
+        return self._permute(x, self.logical_sizes, self.inverse)
+
+    def to_logical(self, x):
+        """Physical-rank-ordered leading axis -> logical rank order."""
+        return self._permute(x, self.sizes, self.order)
+
+    def permutation(self) -> np.ndarray:
+        """``perm[physical_rank] = logical_rank`` as a flat index vector."""
+        return np.asarray(
+            self.to_physical(np.arange(self.p, dtype=np.int64))
+        )
+
+
+def plan_layout(plan) -> PlanLayout:
+    """Layout for anything carrying a split: a :class:`CollectivePlan`
+    (``sizes``/``order``) or an encoded-topology descriptor (``axes``/
+    ``split`` — an empty split means the identity order)."""
+    sizes = getattr(plan, "sizes", None)
+    if sizes is None:
+        sizes = getattr(plan, "axes", None)
+    if not sizes:
+        raise ValueError(f"{plan!r} carries no multi-axis topology")
+    sizes = tuple(int(s) for s in sizes)
+    order = getattr(plan, "order", None)
+    if order is None:
+        order = getattr(plan, "split", None)
+    order = tuple(int(i) for i in order) if order else tuple(range(len(sizes)))
+    return PlanLayout(sizes=sizes, order=order)
 
 
 # ---------------------------------------------------------------------------

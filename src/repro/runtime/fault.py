@@ -28,7 +28,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, List, Optional, Tuple
 
-RemeshListener = Callable[[Tuple[int, int], Tuple[int, int]], None]
+RemeshListener = Callable[[Tuple[int, ...], Tuple[int, ...]], None]
 
 _REMESH_LISTENERS: List[RemeshListener] = []
 
@@ -51,7 +51,7 @@ def unregister_remesh_listener(fn: RemeshListener) -> None:
 
 
 def notify_remesh(
-    old_axes: Tuple[int, int], new_axes: Tuple[int, int]
+    old_axes: Tuple[int, ...], new_axes: Tuple[int, ...]
 ) -> None:
     """Fire every registered listener; a failing listener is recorded in
     ``remesh_listener_errors`` and never interrupts recovery."""
@@ -63,20 +63,94 @@ def notify_remesh(
 
 
 class SimulatedFailure(RuntimeError):
-    """Stands in for a lost host / hung collective."""
+    """Stands in for a lost host / hung collective.
+
+    ``lost_hosts`` is the failure-detector's estimate of how many hosts the
+    event took out — the recovery path feeds it to :func:`plan_remesh` so the
+    feasibility query is about the *actual* surviving capacity.
+    """
+
+    lost_hosts: int = 1
+
+
+def _collective_error_types() -> Tuple[type, ...]:
+    """The runtime-error family a dead host surfaces as through jax.
+
+    A hung or torn collective does not raise SimulatedFailure — it comes back
+    as the XLA runtime error wrapping the failed all-reduce/ppermute. Both
+    spellings (jax.errors.JaxRuntimeError and the older
+    jaxlib XlaRuntimeError) are included when present.
+    """
+    errs: List[type] = [SimulatedFailure]
+    try:
+        import jax.errors as _je
+
+        errs.append(_je.JaxRuntimeError)
+    except (ImportError, AttributeError):  # pragma: no cover - old jax
+        pass
+    try:
+        from jaxlib.xla_extension import XlaRuntimeError as _Xla
+
+        if not any(issubclass(_Xla, e) or issubclass(e, _Xla) for e in errs):
+            errs.append(_Xla)
+    except ImportError:  # pragma: no cover - jaxlib layout drift
+        pass
+    return tuple(errs)
+
+
+#: exception types the trainer's recovery loop treats as a host failure
+RECOVERABLE_ERRORS: Tuple[type, ...] = _collective_error_types()
+
+#: XLA status codes that signal a caller bug or resource problem, not a
+#: dead host — a runtime error carrying one must propagate, never remesh
+_NON_FAILURE_CODES = (
+    "RESOURCE_EXHAUSTED",
+    "INVALID_ARGUMENT",
+    "NOT_FOUND",
+    "ALREADY_EXISTS",
+    "UNIMPLEMENTED",
+    "PERMISSION_DENIED",
+    "OUT_OF_RANGE",
+)
+
+
+def is_recoverable(err: BaseException) -> bool:
+    """Whether the recovery loop should treat ``err`` as a host failure.
+
+    SimulatedFailure always is. A jax/XLA runtime error is, *unless* its
+    status code marks a non-transient caller problem (OOM, shape bugs, ...)
+    — shrinking the mesh and rolling back a checkpoint would mask those.
+    """
+    if isinstance(err, SimulatedFailure):
+        return True
+    if not isinstance(err, RECOVERABLE_ERRORS):
+        return False
+    msg = str(err)
+    return not any(code in msg for code in _NON_FAILURE_CODES)
 
 
 @dataclasses.dataclass
 class FailureInjector:
-    """Raises at configured step numbers (once each)."""
+    """Raises at configured step numbers (once each).
+
+    ``lost_hosts`` stamps the raised SimulatedFailure; ``exc_factory``
+    substitutes an arbitrary exception (e.g. a JaxRuntimeError) to exercise
+    the collective-error recovery path.
+    """
 
     fail_at: Tuple[int, ...] = ()
+    lost_hosts: int = 1
+    exc_factory: Optional[Callable[[int], BaseException]] = None
     _fired: set = dataclasses.field(default_factory=set)
 
     def check(self, step: int) -> None:
         if step in self.fail_at and step not in self._fired:
             self._fired.add(step)
-            raise SimulatedFailure(f"injected failure at step {step}")
+            if self.exc_factory is not None:
+                raise self.exc_factory(step)
+            err = SimulatedFailure(f"injected failure at step {step}")
+            err.lost_hosts = self.lost_hosts
+            raise err
 
 
 def plan_remesh(

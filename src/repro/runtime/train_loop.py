@@ -4,12 +4,22 @@ Checkpoint/restart + failure handling + elastic re-mesh + straggler watch,
 composed over the pure step builders in launch/steps.py. The loop's contract:
 
   1. every ``ckpt_every`` steps: atomic async checkpoint (params+opt+step);
-  2. a step raising SimulatedFailure (or any collective error) triggers:
-     detect -> plan_remesh (shrink data axis) -> rebuild jitted step on the
-     surviving topology -> restore latest checkpoint with NEW shardings ->
-     continue (bounded retries);
+  2. a step raising SimulatedFailure — or any error in the jax collective
+     runtime-error family (``fault.RECOVERABLE_ERRORS``) — triggers the
+     planner-first recovery sequence:
+     fail -> ``plan_remesh`` (lost_hosts derived from the failure) ->
+     **adopt the planned sizes** -> rebuild the step on the surviving
+     topology -> ``notify_remesh`` (offload listeners clear plan caches and
+     re-tune against the adopted mesh) -> restore the latest checkpoint with
+     NEW shardings -> continue (bounded retries). The offload engine's
+     cleared cache then repopulates from the trainer's own descriptors on
+     the next step.
   3. StragglerDetector watches step wall-times; eviction recommendations
      feed the same re-mesh path.
+
+With ``TrainerConfig.use_offload_engine`` the step's gradient/metric
+collectives dispatch through an :class:`~repro.offload.OffloadEngine`
+(see ``launch.steps.build_dp_train_step``); otherwise GSPMD derives them.
 
 Works identically on the 1-device CPU smoke mesh and on a real pod — the
 fault-injection integration test (tests/test_fault_tolerance.py) runs the
@@ -31,7 +41,13 @@ from repro.launch.steps import build_train_step
 from repro.models import ModelApi, build_model
 from repro.optim.adamw import AdamWConfig, init_opt_state
 from repro.runtime import fault as fault_mod
-from repro.runtime.fault import FailureInjector, SimulatedFailure, plan_remesh
+from repro.runtime.fault import (
+    RECOVERABLE_ERRORS,
+    FailureInjector,
+    SimulatedFailure,
+    is_recoverable,
+    plan_remesh,
+)
 from repro.runtime.straggler import StragglerDetector
 from repro.sharding.specs import Topology, make_topology, use_topology
 
@@ -44,6 +60,10 @@ class TrainerConfig:
     max_retries: int = 3
     log_every: int = 10
     async_ckpt: bool = True
+    #: route the step's gradient/metric collectives through the offload
+    #: engine as planned descriptors (requires a pure-DP mesh; a no-op
+    #: without a mesh)
+    use_offload_engine: bool = False
 
 
 class Trainer:
@@ -56,6 +76,7 @@ class Trainer:
         tcfg: TrainerConfig,
         opt_cfg: Optional[AdamWConfig] = None,
         injector: Optional[FailureInjector] = None,
+        engine: Any = None,
     ):
         self.api = api
         self.topo = topo
@@ -64,6 +85,7 @@ class Trainer:
         self.tcfg = tcfg
         self.opt_cfg = opt_cfg or AdamWConfig()
         self.injector = injector
+        self.engine = engine
         self.ckpt = CheckpointManager(
             tcfg.ckpt_dir, keep=tcfg.keep_ckpts, async_write=tcfg.async_ckpt
         )
@@ -72,8 +94,17 @@ class Trainer:
         self._build()
 
     def _build(self):
+        use_engine = (
+            self.tcfg.use_offload_engine and self.topo.mesh is not None
+        )
+        if use_engine and self.engine is None:
+            from repro.launch.offload_runtime import build_offload_engine
+
+            self.engine = build_offload_engine()
         self.step_fn, _, self.specs = build_train_step(
-            self.api, self.topo, self.shape, self.opt_cfg
+            self.api, self.topo, self.shape, self.opt_cfg,
+            use_offload_engine=use_engine,
+            engine=self.engine if use_engine else None,
         )
 
     def init_state(self, seed: int = 0):
@@ -108,7 +139,9 @@ class Trainer:
                         params, opt_state, batch
                     )
                     metrics = jax.tree.map(float, metrics)
-            except SimulatedFailure as e:
+            except RECOVERABLE_ERRORS as e:
+                if not is_recoverable(e):
+                    raise  # OOM / shape bugs: remeshing would mask them
                 retries += 1
                 if retries > self.tcfg.max_retries:
                     raise
@@ -133,32 +166,52 @@ class Trainer:
 
     # ------------------------------------------------------------- recovery
     def _recover(self, err: Exception) -> None:
-        """Shrink the data axis and rebuild the jitted step (elastic)."""
+        """Planner-first elastic re-mesh: adopt what ``plan_remesh`` returns.
+
+        Sequence: derive ``lost_hosts`` from the failure -> ``plan_remesh``
+        -> adopt the planned data-axis size (every other axis is
+        load-bearing and kept) -> rebuild the step on the adopted topology
+        -> ``notify_remesh`` so offload listeners invalidate plan caches and
+        re-tune against the mesh that was *actually* adopted. Notify fires
+        only after adopt+rebuild: listeners re-tune on the new topology, and
+        the engine's cleared cache repopulates from the rebuilt step's own
+        descriptors on the next step.
+        """
         mesh = self.topo.mesh
         if mesh is None:
             self.remesh_events.append({"err": str(err), "action": "none"})
             return
         sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-        old_data = sizes.get("data", 1)
-        model = sizes.get("model", 1)
-        plan = plan_remesh(old_data, model, lost_hosts=0)
-        new_data = max(1, old_data // 2) if old_data > 1 else 1
-        if new_data != old_data:
-            # the adopted topology invalidates offload plan caches and the
-            # active tuning grid — fire the fault-layer listeners
-            fault_mod.notify_remesh((old_data, model), (new_data, model))
-        n_needed = new_data * sizes.get("model", 1)
+        old_data = int(sizes.get("data", 1))
+        rest = int(np.prod([s for a, s in sizes.items() if a != "data"]))
+        lost = max(1, int(getattr(err, "lost_hosts", 1)))
+        plan = plan_remesh(old_data, rest, lost_hosts=lost)
+        if plan is None:
+            # the data axis cannot absorb the loss (e.g. TP-only mesh, or
+            # lost_hosts was a pessimistic estimate): keep the topology and
+            # retry from the checkpoint — run()'s max_retries bounds this
+            self.remesh_events.append(
+                {"err": str(err), "action": "infeasible", "lost_hosts": lost}
+            )
+            return
+        new_data = int(plan[0])
+        old_axes = tuple(int(s) for s in mesh.devices.shape)
+        new_sizes = {**sizes, "data": new_data}
+        new_shape = tuple(int(new_sizes[a]) for a in mesh.axis_names)
+        n_needed = int(np.prod(new_shape))
         devices = np.asarray(mesh.devices).reshape(-1)[:n_needed]
         new_mesh = jax.sharding.Mesh(
-            devices.reshape(new_data, sizes.get("model", 1)),
-            ("data", "model"),
+            devices.reshape(new_shape), mesh.axis_names
         )
         self.topo = make_topology(new_mesh)
+        self._build()
+        # adopt + rebuild first, *then* tell the offload layer: plan caches
+        # and the tuning grid are invalidated against the adopted topology
+        fault_mod.notify_remesh(old_axes, new_shape)
         self.remesh_events.append(
             {"err": str(err), "old_data": old_data, "new_data": new_data,
-             "plan": plan}
+             "plan": plan, "adopted": new_shape, "lost_hosts": lost}
         )
-        self._build()
 
     def _restore_after_failure(self, params, opt_state):
         self.ckpt.wait()

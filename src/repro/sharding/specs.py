@@ -92,10 +92,35 @@ def make_topology(mesh: Optional[Mesh]) -> Topology:
         return _null_topology()
     names = mesh.axis_names
     if "pod" in names:
-        return Topology(mesh=mesh, batch_axes=("pod", "data"), model_axis="model")
+        # pure-DP pod meshes (pod, data) carry no model axis
+        model = "model" if "model" in names else None
+        batch = ("pod", "data") if "data" in names else ("pod",)
+        return Topology(mesh=mesh, batch_axes=batch, model_axis=model)
     if "model" in names:
         return Topology(mesh=mesh, batch_axes=("data",), model_axis="model")
     return Topology(mesh=mesh, batch_axes=tuple(names), model_axis=None)
+
+
+def plan_spec(layout, axis_names, ndim: int = 1) -> P:
+    """PartitionSpec realizing a collective plan's data layout.
+
+    ``layout`` is anything with an ``order`` attribute (a
+    :class:`repro.offload.planner.PlanLayout` or ``CollectivePlan``).
+    Dim 0 of the array is sharded across the physical mesh axes named in
+    ``axis_names`` *in the plan's logical order*: block ``i`` of a flat
+    logical-rank-ordered array then lands exactly on the device whose
+    logical rank is ``i``, so callers feed logical-order data straight into
+    ``shard_map`` and never permute by hand (the spec-level twin of
+    ``PlanLayout.to_physical``)."""
+    order = tuple(layout.order)
+    if len(order) != len(axis_names):
+        raise ValueError(
+            f"layout order {order!r} does not cover axes "
+            f"{tuple(axis_names)!r}"
+        )
+    names = tuple(axis_names[i] for i in order)
+    entry = names[0] if len(names) == 1 else names
+    return P(entry, *([None] * (max(ndim, 1) - 1)))
 
 
 def shard(x, *logical: Optional[str]):

@@ -32,7 +32,8 @@ from jax.sharding import Mesh, PartitionSpec as P  # noqa: E402
 
 from repro.compat import shard_map  # noqa: E402
 from repro.core import SSD, sim_barrier, sim_reduce, sim_scan  # noqa: E402
-from repro.offload import OffloadEngine  # noqa: E402
+from repro.offload import OffloadEngine, plan_layout  # noqa: E402
+from repro.sharding.specs import plan_spec  # noqa: E402
 
 AXIS_NAMES = ("pod", "outer", "inner")
 
@@ -82,21 +83,23 @@ def main() -> None:
         check(f"{coll.lower()} sum", np.array_equal(got, want))
 
     # SCAN with a non-identity split: innermost logical level on the pod
-    # axis — the payload is laid out in the split's logical rank order
+    # axis. plan_spec shards the logical-rank-ordered payload straight onto
+    # the physical mesh (no hand layout), so the result compares directly
+    # against the flat logical reference.
     order = (1, 2, 0)
-    inv = tuple(order.index(k) for k in range(3))  # physical axis -> level
     desc = eng.make_descriptor(
         "SCAN", axes=axes, payload_bytes=n * 4, op="sum", split=order
     )
-    logical = x.reshape(tuple(axes[i] for i in order) + (n,))
-    # physical[c0,c1,c2] = logical[level coords l_i = c_{order[i]}]
-    phys = np.transpose(logical, inv + (3,)).reshape(ptotal, n)
-    got_phys = np.asarray(run(desc, jnp.asarray(phys)))
-    want_logical = np.asarray(
-        sim_scan(jnp.asarray(x), "sum", ptotal, algorithm="hillis_steele")
-    ).reshape(tuple(axes[i] for i in order) + (n,))
-    want_phys = np.transpose(want_logical, inv + (3,)).reshape(ptotal, n)
-    check(f"scan sum split={order}", np.array_equal(got_phys, want_phys))
+    layout = plan_layout(desc)
+    lspec = plan_spec(layout, AXIS_NAMES, ndim=2)
+    got = np.asarray(run(desc, xj, in_spec=lspec, out_spec=lspec))
+    want = np.asarray(
+        sim_scan(xj, "sum", ptotal, algorithm="hillis_steele")
+    )
+    check(f"scan sum split={order}", np.array_equal(got, want))
+    # the layout's flat permutations agree with the spec-level placement
+    rt = layout.to_logical(layout.to_physical(x))
+    check("plan_layout round-trip", np.array_equal(np.asarray(rt), x))
 
     # REDUCE with the root off rank 0
     root = ptotal - 3

@@ -1,0 +1,261 @@
+"""End-to-end validation of the offloaded training path on a real DP mesh.
+
+Run:  python -m repro.testing.train_offload_check [pod data] [--steps N]
+                                                  [--bench-iters N]
+
+Three scenarios on one multi-device CPU process (device count must be fixed
+before jax import, hence the subprocess pattern):
+
+  1. **Bitwise step equivalence** — two steps of ``build_dp_train_step`` on a
+     (pod, data) mesh with the gradient allreduce / metric means / example
+     EXSCAN dispatched through ``OffloadEngine`` planned descriptors, against
+     the identically-structured raw ``lax`` reference: loss, grad_norm and
+     every updated parameter must match bit for bit, and the step-2 dispatch
+     of every descriptor must hit the compiled-plan cache.
+  2. **Planner-first recovery** — a Trainer on the same mesh with an injected
+     failure: the adopted mesh must equal ``plan_remesh``'s output, the
+     notify-remesh hook must clear the engine's plan cache, and the cache
+     must repopulate from the trainer's own descriptors on the next step.
+  3. **Plan-not-halving** — a (data=4, model=1) mesh losing 3 hosts: the
+     adopted data axis is the planner's floor-pow2 answer (1), not the
+     hardcoded halving (2) the old recovery loop applied.
+
+Emits ``trainer_step``/``trainer_offload`` CSV rows (consumed by
+``benchmarks.trainer_step``) and a final ALL-OK; exits nonzero on mismatch.
+"""
+
+import argparse
+import os
+import sys
+import tempfile
+import time
+
+_ARGS = [a for a in sys.argv[1:] if not a.startswith("-")]
+_AXES = (int(_ARGS[0]), int(_ARGS[1])) if len(_ARGS) >= 2 else (2, 2)
+_NDEV = _AXES[0] * _AXES[1]
+os.environ["XLA_FLAGS"] = (
+    f"--xla_force_host_platform_device_count={_NDEV} "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import Mesh  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.configs.base import ShapeConfig  # noqa: E402
+from repro.data.pipeline import DataConfig, batches  # noqa: E402
+from repro.launch.offload_runtime import (  # noqa: E402
+    build_offload_engine,
+    detach_remesh_hook,
+)
+from repro.launch.steps import build_dp_train_step  # noqa: E402
+from repro.models import build_model  # noqa: E402
+from repro.optim.adamw import AdamWConfig, init_opt_state  # noqa: E402
+from repro.runtime.fault import FailureInjector  # noqa: E402
+from repro.runtime.train_loop import Trainer, TrainerConfig  # noqa: E402
+from repro.sharding.specs import make_topology  # noqa: E402
+
+FAILURES = 0
+
+
+def check(name: str, ok: bool) -> None:
+    global FAILURES
+    print(f"train_offload {name:38s} {'OK' if ok else 'FAIL'}")
+    FAILURES += 0 if ok else 1
+
+
+def _setup(mesh_shape, axis_names, *, batch=8, seq=32, seed=0):
+    cfg = get_config("smollm_360m").reduced()
+    api = build_model(cfg)
+    shape = ShapeConfig("tiny", seq, batch, "train")
+    data = batches(
+        DataConfig(
+            vocab_size=cfg.vocab_size, seq_len=seq, global_batch=batch,
+            seed=seed,
+        )
+    )
+    devs = np.array(jax.devices()[: int(np.prod(mesh_shape))])
+    mesh = Mesh(devs.reshape(mesh_shape), axis_names)
+    topo = make_topology(mesh)
+    return api, topo, shape, data
+
+
+def _tree_equal(a, b) -> bool:
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb)
+    )
+
+
+def bitwise_scenario(steps: int, bench_iters: int) -> None:
+    """Engine-dispatched DP step vs the raw-lax reference, bit for bit."""
+    api, topo, shape, data = _setup(_AXES, ("pod", "data"))
+    opt = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=100)
+    eng = build_offload_engine(retune_on_remesh=False)
+
+    raw_fn, _, _ = build_dp_train_step(api, topo, shape, opt, engine=None)
+    off_fn, _, _ = build_dp_train_step(api, topo, shape, opt, engine=eng)
+
+    # fresh (deterministic, identical) state per path: update_fn donates its
+    # params/opt buffers, so state must never be shared across step builders
+    def fresh_state():
+        params = api.init(jax.random.key(0))
+        return params, init_opt_state(params)
+
+    p_raw, o_raw = fresh_state()
+    p_off, o_off = fresh_state()
+    bitwise = True
+    step2_hit = True
+    for s in range(steps):
+        batch = next(data)
+        misses0, hits0 = eng.telemetry.misses, eng.telemetry.hits
+        p_off, o_off, m_off = off_fn(p_off, o_off, batch)
+        p_raw, o_raw, m_raw = raw_fn(p_raw, o_raw, batch)
+        d_miss = eng.telemetry.misses - misses0
+        d_hit = eng.telemetry.hits - hits0
+        same = (
+            _tree_equal(p_off, p_raw)
+            and np.array_equal(float(m_off["loss"]), float(m_raw["loss"]))
+            and np.array_equal(
+                float(m_off["grad_norm"]), float(m_raw["grad_norm"])
+            )
+        )
+        bitwise &= same
+        if s == 0:
+            check("step1 dispatches compile (miss)", d_miss > 0 and d_hit == 0)
+        else:
+            step2_hit &= d_miss == 0 and d_hit > 0
+        print(
+            f"trainer_offload,step,{s + 1},misses,{d_miss},hits,{d_hit},"
+            f"bitwise,{int(same)},loss,{float(m_off['loss']):.6f},"
+            f"examples_seen,{float(m_off['examples_seen']):.0f}"
+        )
+    check("loss/grads/params bitwise == raw", bitwise)
+    check("step2+ dispatch is a plan-cache hit", step2_hit)
+    check(
+        "examples_seen == global batch",
+        float(m_off["examples_seen"]) == shape.global_batch,
+    )
+
+    if bench_iters > 0:
+        rows = []
+        for label, fn in (("raw_lax", raw_fn), ("offload_engine", off_fn)):
+            p, o = fresh_state()
+            batch = next(data)
+            p, o, _ = fn(p, o, batch)  # warm the caches
+            t0 = time.perf_counter()
+            for _ in range(bench_iters):
+                p, o, m = fn(p, o, batch)
+            jax.block_until_ready(jax.tree.leaves(p)[0])
+            dt = (time.perf_counter() - t0) / bench_iters
+            rows.append(f"trainer_step,{label},{dt * 1e3:.1f}")
+        for r in rows:
+            print(r)
+    snap = eng.telemetry.snapshot()
+    print(
+        f"trainer_offload_summary,bitwise_equal,{int(bitwise)},"
+        f"step2_cache_hit,{int(step2_hit)},cache_size,{snap['cache_size']},"
+        f"hit_rate,{snap['hit_rate']:.2f}"
+    )
+
+
+def recovery_scenario() -> None:
+    """Injected failure under the offload trainer: planner-first remesh."""
+    from repro.runtime.fault import plan_remesh
+
+    api, topo, shape, data = _setup(_AXES, ("pod", "data"))
+    eng = build_offload_engine(
+        retune_on_remesh=True, remesh_tune_budget_s=0.2
+    )
+    try:
+        with tempfile.TemporaryDirectory() as ckpt_dir:
+            tr = Trainer(
+                api, topo, shape, data,
+                TrainerConfig(
+                    ckpt_dir=ckpt_dir, ckpt_every=1, async_ckpt=False,
+                    use_offload_engine=True,
+                ),
+                AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=100),
+                injector=FailureInjector(fail_at=(1,), lost_hosts=1),
+                engine=eng,
+            )
+            params, opt_state = tr.init_state()
+            _ = tr.run(params, opt_state, num_steps=3)
+        ev = tr.remesh_events[-1]
+        old_data = _AXES[1]
+        want_plan = plan_remesh(old_data, _AXES[0], lost_hosts=1)
+        adopted = dict(
+            zip(tr.topo.mesh.axis_names, tr.topo.mesh.devices.shape)
+        )
+        check("remesh event records the plan", ev.get("plan") == want_plan)
+        check(
+            "adopted mesh == plan_remesh output",
+            adopted["data"] == want_plan[0]
+            and ev.get("adopted") == (_AXES[0], want_plan[0]),
+        )
+        # notify cleared the cache *after* rebuild; the next step's own
+        # descriptors repopulated it on the surviving topology
+        check("plan cache repopulated after remesh", eng.cache_size() > 0)
+        check(
+            "post-remesh steps keep dispatching",
+            eng.telemetry.dispatches > 0 and eng.telemetry.errors == 0,
+        )
+    finally:
+        detach_remesh_hook(eng)
+
+
+def plan_not_halving_scenario() -> None:
+    """data=4, lost_hosts=3: the planner says 1; naive halving said 2."""
+    from repro.runtime.fault import plan_remesh
+
+    api, topo, shape, data = _setup((4, 1), ("data", "model"), batch=8)
+    eng = build_offload_engine(retune_on_remesh=True, remesh_tune_budget_s=0.2)
+    try:
+        with tempfile.TemporaryDirectory() as ckpt_dir:
+            tr = Trainer(
+                api, topo, shape, data,
+                TrainerConfig(
+                    ckpt_dir=ckpt_dir, ckpt_every=1, async_ckpt=False,
+                    use_offload_engine=True,
+                ),
+                AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=100),
+                injector=FailureInjector(fail_at=(1,), lost_hosts=3),
+                engine=eng,
+            )
+            params, opt_state = tr.init_state()
+            _ = tr.run(params, opt_state, num_steps=3)
+        want = plan_remesh(4, 1, lost_hosts=3)  # (1, 1) — not 4 // 2
+        got = dict(zip(tr.topo.mesh.axis_names, tr.topo.mesh.devices.shape))
+        check(
+            "adopted plan beats naive halving",
+            want == (1, 1) and got["data"] == 1 and got["data"] != 4 // 2,
+        )
+        check(
+            "remesh event carries lost_hosts",
+            tr.remesh_events[-1].get("lost_hosts") == 3,
+        )
+    finally:
+        detach_remesh_hook(eng)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("axes", nargs="*", type=int, default=list(_AXES))
+    ap.add_argument("--steps", type=int, default=2)
+    ap.add_argument("--bench-iters", type=int, default=0)
+    args = ap.parse_args()
+    assert len(jax.devices()) == _NDEV, (len(jax.devices()), _NDEV)
+
+    bitwise_scenario(max(2, args.steps), args.bench_iters)
+    recovery_scenario()
+    plan_not_halving_scenario()
+
+    if FAILURES:
+        print(f"FAILURES: {FAILURES}")
+        sys.exit(1)
+    print("ALL-OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -20,7 +20,7 @@ from repro.runtime.train_loop import Trainer, TrainerConfig
 from repro.sharding.specs import Topology
 
 
-def _make_trainer(tmp_path, fail_at=(), steps_shape=(4, 32)):
+def _make_trainer(tmp_path, fail_at=(), steps_shape=(4, 32), exc_factory=None):
     cfg = get_config("smollm_360m").reduced()
     api = build_model(cfg)
     B, S = steps_shape
@@ -31,7 +31,7 @@ def _make_trainer(tmp_path, fail_at=(), steps_shape=(4, 32)):
         ckpt_dir=str(tmp_path), ckpt_every=5, keep_ckpts=2,
         async_ckpt=False, max_retries=3,
     )
-    injector = FailureInjector(fail_at=tuple(fail_at))
+    injector = FailureInjector(fail_at=tuple(fail_at), exc_factory=exc_factory)
     opt = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=100)
     return Trainer(api, topo, shape, data, tcfg, opt, injector)
 
@@ -84,3 +84,60 @@ def test_multiple_failures_exhaust_retries(tmp_path):
     # every retry fails again at the next step; must eventually raise
     with pytest.raises(Exception):
         tr.run(params, opt, num_steps=20)
+
+
+def test_recovery_from_jax_runtime_error(tmp_path):
+    """The docstring's promise: not just SimulatedFailure — a collective
+    error from the jax runtime-error family triggers the same recovery."""
+    tr = _make_trainer(
+        tmp_path,
+        fail_at=(7,),
+        exc_factory=lambda step: jax.errors.JaxRuntimeError(
+            f"DEADLINE_EXCEEDED: all-reduce hung at step {step}"
+        ),
+    )
+    params, opt = tr.init_state()
+    params, opt, hist = tr.run(params, opt, num_steps=12)
+    steps = [h["step"] for h in hist]
+    assert max(steps) == 11  # reached the end despite the runtime error
+    assert len(tr.remesh_events) == 1
+    assert "DEADLINE_EXCEEDED" in tr.remesh_events[0]["err"]
+
+
+def test_non_failure_runtime_errors_propagate(tmp_path):
+    """An XLA runtime error whose status code marks a caller/resource
+    problem (OOM, bad shapes) must not be masked by a remesh+rollback."""
+    tr = _make_trainer(
+        tmp_path,
+        fail_at=(2,),
+        exc_factory=lambda step: jax.errors.JaxRuntimeError(
+            f"RESOURCE_EXHAUSTED: out of memory at step {step}"
+        ),
+    )
+    params, opt = tr.init_state()
+    with pytest.raises(jax.errors.JaxRuntimeError, match="RESOURCE_EXHAUSTED"):
+        tr.run(params, opt, num_steps=5)
+    assert tr.remesh_events == []
+
+
+def test_unrelated_errors_still_propagate(tmp_path):
+    """Only the collective-error family is recoverable: a ValueError from a
+    step must not be swallowed by the retry loop."""
+    tr = _make_trainer(
+        tmp_path,
+        fail_at=(2,),
+        exc_factory=lambda step: ValueError(f"bad batch at step {step}"),
+    )
+    params, opt = tr.init_state()
+    with pytest.raises(ValueError, match="bad batch"):
+        tr.run(params, opt, num_steps=5)
+    assert tr.remesh_events == []
+
+
+def test_injector_stamps_lost_hosts():
+    from repro.runtime.fault import FailureInjector, SimulatedFailure
+
+    inj = FailureInjector(fail_at=(0,), lost_hosts=3)
+    with pytest.raises(SimulatedFailure) as ei:
+        inj.check(0)
+    assert ei.value.lost_hosts == 3

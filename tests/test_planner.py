@@ -28,13 +28,16 @@ from repro.core import (
 from repro.core.selector import set_active_tuning
 from repro.offload import (
     OffloadEngine,
+    PlanLayout,
     TuningCache,
     build_plan,
     lower_sim,
     plan_axis_order,
     plan_cost,
+    plan_layout,
     tune_splits,
 )
+from repro.sharding.specs import plan_spec
 from repro.testing.hypothesis_compat import given, settings, strategies as st
 
 MESHES_2D = [(2, 4), (4, 2), (3, 3), (2, 2)]
@@ -107,6 +110,53 @@ def test_reduce_root_placement_off_rank_zero():
             want = np.asarray(sim_reduce(x, "sum", p, root=root))
             np.testing.assert_array_equal(
                 got, want, err_msg=f"sizes={sizes} root={root}"
+            )
+
+
+def test_reduce_off_root_under_non_identity_split():
+    """REDUCE to an off-rank-0 root with every *non-identity* axis order —
+    the trainer-path edge case: the split must not move the root."""
+    import itertools
+
+    for sizes in [(2, 4), (2, 2, 2), (3, 2, 2)]:
+        p = int(np.prod(sizes))
+        rng = np.random.default_rng(p * 13)
+        x = jnp.asarray(rng.integers(-7, 8, size=(p, 4)).astype(np.float32))
+        orders = [
+            o
+            for o in itertools.permutations(range(len(sizes)))
+            if o != tuple(range(len(sizes)))
+        ]
+        for order in orders:
+            for root in (1, p - 2, p - 1):
+                plan = build_plan(
+                    "REDUCE", sizes, "sum", 16, order=order, root=root
+                )
+                got = np.asarray(lower_sim(plan)(x))
+                want = np.asarray(sim_reduce(x, "sum", p, root=root))
+                np.testing.assert_array_equal(
+                    got, want, err_msg=f"sizes={sizes} order={order} "
+                    f"root={root}"
+                )
+
+
+def test_exscan_3d_mesh_bitwise_all_orders():
+    """EXSCAN over 3D meshes, every axis order, vs the flat single-axis
+    reference — bit for bit (integer payloads)."""
+    import itertools
+
+    for sizes in MESHES_3D:
+        p = int(np.prod(sizes))
+        rng = np.random.default_rng(p * 31)
+        x = jnp.asarray(rng.integers(-6, 7, size=(p, 5)).astype(np.float32))
+        want = np.asarray(
+            sim_scan(x, "sum", p, algorithm="hillis_steele", inclusive=False)
+        )
+        for order in itertools.permutations(range(3)):
+            plan = build_plan("EXSCAN", sizes, "sum", 20, order=order)
+            got = np.asarray(lower_sim(plan)(x))
+            np.testing.assert_array_equal(
+                got, want, err_msg=f"sizes={sizes} order={order}"
             )
 
 
@@ -251,6 +301,70 @@ def test_build_plan_validation():
         build_plan("REDUCE", (2, 4), "sum", 16, root=99)
     with pytest.raises(ValueError, match="mesh axes"):
         build_plan("SCAN", (2, 2, 2, 2), "sum", 16)
+
+
+# ----------------------------------------------------- plan layout helper
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    k=st.integers(1, 3),
+    perm_idx=st.integers(0, 5),
+    sizes_seed=st.integers(0, 1000),
+)
+def test_plan_layout_roundtrip_property(k, perm_idx, sizes_seed):
+    """layout.to_logical o layout.to_physical == identity (and vice versa)
+    for every permutation of <= 3 axes."""
+    import itertools
+
+    rng = np.random.default_rng(sizes_seed)
+    sizes = tuple(int(s) for s in rng.integers(1, 5, size=k))
+    perms = list(itertools.permutations(range(k)))
+    order = perms[perm_idx % len(perms)]
+    layout = PlanLayout(sizes=sizes, order=order)
+    p = int(np.prod(sizes))
+    x = rng.normal(size=(p, 3)).astype(np.float32)
+    np.testing.assert_array_equal(layout.to_logical(layout.to_physical(x)), x)
+    np.testing.assert_array_equal(layout.to_physical(layout.to_logical(x)), x)
+    # the flat permutation agrees with the reshape/transpose path
+    perm = layout.permutation()
+    assert sorted(perm.tolist()) == list(range(p))
+    np.testing.assert_array_equal(x[perm], layout.to_physical(x))
+
+
+def test_plan_layout_from_plan_and_descriptor():
+    plan = build_plan("SCAN", (2, 4), "sum", 16, order=(1, 0))
+    layout = plan_layout(plan)
+    assert layout.sizes == (2, 4)
+    assert layout.order == (1, 0)
+    assert layout.logical_sizes == (4, 2)
+    assert layout.inverse == (1, 0)
+    d = CollectiveDescriptor(
+        comm_size=8, coll_type=CollType.SCAN, algo_type="hillis_steele",
+        axes=(2, 2, 2), split=(1, 2, 0),
+    )
+    dl = plan_layout(d)
+    assert dl.sizes == (2, 2, 2) and dl.order == (1, 2, 0)
+    # identity order when the descriptor carries no split
+    d2 = CollectiveDescriptor(
+        comm_size=8, coll_type=CollType.SCAN, algo_type="hillis_steele",
+        axes=(2, 4),
+    )
+    assert plan_layout(d2).order == (0, 1)
+    with pytest.raises(ValueError, match="permutation"):
+        PlanLayout(sizes=(2, 4), order=(1, 1))
+    with pytest.raises(ValueError, match="topology"):
+        plan_layout(object())
+
+
+def test_plan_spec_orders_axes_logically():
+    layout = PlanLayout(sizes=(2, 2, 2), order=(1, 2, 0))
+    spec = plan_spec(layout, ("pod", "outer", "inner"), ndim=2)
+    assert tuple(spec) == (("outer", "inner", "pod"), None)
+    single = PlanLayout(sizes=(4,), order=(0,))
+    assert tuple(plan_spec(single, ("r",), ndim=1)) == ("r",)
+    with pytest.raises(ValueError, match="cover"):
+        plan_spec(layout, ("pod", "outer"))
 
 
 # -------------------------------------------- descriptor topology encoding
