@@ -10,19 +10,27 @@
   trainer_step                  -- trainer-step offload-vs-raw comparison on
                                    a 2x2 CPU mesh (subprocess): per-step
                                    wall-clock + bitwise/cache-hit assertions
+  service_throughput            -- multi-tenant broker requests/sec and
+                                   p50/p99 latency vs client count, with
+                                   coalescing on/off
   roofline (report)             -- dry-run derived roofline tables
 
 Prints ``name,...,derived`` CSV sections. Run:
   PYTHONPATH=src python -m benchmarks.run [--quick | --smoke]
+                                          [--report-json [PATH]]
 
 ``--smoke`` runs only the offload-engine smoke (budgeted tuning grid +
 descriptor-cache proof + one 3D planned collective end-to-end with an
 asserted schedule-cache hit rate + a 2-step offloaded trainer on a 2x2 mesh
-asserted bitwise against the raw shard_map baseline) — the CI regression
-gate for the offload subsystem.
+asserted bitwise against the raw shard_map baseline + the service broker's
+coalesce/bitwise proof) — the CI regression gate for the offload subsystem.
+
+``--report-json`` writes the service-throughput stats to a JSON artifact
+(default ``BENCH_service.json`` next to this file) for the perf trajectory.
 """
 
 import argparse
+import json
 import sys
 from pathlib import Path
 
@@ -32,9 +40,23 @@ from benchmarks import (  # noqa: E402
     offloaded_latency,
     report,
     scan_latency,
+    service_throughput,
     trainer_step,
     tuned_vs_static,
 )
+
+DEFAULT_REPORT_PATH = Path(__file__).resolve().parent / "BENCH_service.json"
+
+
+def _write_report(path: Path, stats, mode: str) -> None:
+    payload = {
+        "benchmark": "service_throughput",
+        "mode": mode,
+        "columns": "one dict per (clients, coalesce) configuration",
+        "stats": stats,
+    }
+    path.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"# service throughput stats written to {path}")
 
 
 def main() -> None:
@@ -45,8 +67,18 @@ def main() -> None:
         action="store_true",
         help="offload-engine smoke benchmark only (~10 s)",
     )
+    ap.add_argument(
+        "--report-json",
+        nargs="?",
+        const=str(DEFAULT_REPORT_PATH),
+        default=None,
+        metavar="PATH",
+        help="write service-throughput stats to a JSON artifact "
+        f"(default {DEFAULT_REPORT_PATH.name})",
+    )
     args = ap.parse_args()
     iters = 8 if args.quick else 30
+    service_stats: list = []
 
     if args.smoke:
         print(
@@ -62,6 +94,19 @@ def main() -> None:
         )
         for row in trainer_step.smoke():
             print(row)
+        print()
+        print(
+            "# === Service smoke: multi-tenant broker, coalesced vs "
+            "direct (bitwise) ==="
+        )
+        print(
+            "service_throughput,clients,coalesce,requests,reqs_per_s,"
+            "p50_us,p99_us,mean_us,coalesce_factor"
+        )
+        for row in service_throughput.smoke(stats_out=service_stats):
+            print(row)
+        if args.report_json:
+            _write_report(Path(args.report_json), service_stats, "smoke")
         return
 
     print("# === Paper Fig. 4/5: host-visible scan latency (8 ranks) ===")
@@ -117,6 +162,21 @@ def main() -> None:
             print(row)
     except Exception as e:  # subprocess needs a CPU with >= 4 threads
         print(f"(trainer-step comparison unavailable: {e})")
+
+    print()
+    print("# === Service throughput: multi-tenant broker, coalesce on/off ===")
+    print(
+        "service_throughput,clients,coalesce,requests,reqs_per_s,"
+        "p50_us,p99_us,mean_us,coalesce_factor"
+    )
+    for row in service_throughput.run(
+        client_counts=(1, 2, 4) if args.quick else (1, 2, 4, 8),
+        n_requests=8 if args.quick else 32,
+        stats_out=service_stats,
+    ):
+        print(row)
+    if args.report_json:
+        _write_report(Path(args.report_json), service_stats, "full")
 
     print()
     print("# === Roofline tables (from dry-run artifacts) ===")

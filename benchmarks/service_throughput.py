@@ -1,0 +1,185 @@
+"""Service throughput benchmark: requests/sec and latency percentiles vs.
+client count, with coalescing on and off.
+
+Each configuration runs C client threads, each streaming R identical-shape
+SCAN requests through one started :class:`DescriptorBroker` (sim-mode
+engine). "Coalescing off" pins ``max_coalesce=1`` — every request is its
+own engine dispatch — so the on/off delta isolates what request fusion
+buys. Latencies are measured client-side (submit -> result, the
+host-visible number), p50/p99 from the exact sample set; the broker's
+per-tenant histograms are telemetry, not the benchmark's ruler.
+
+``smoke()`` is the CI entry: a single coalesced configuration that asserts
+the fused results are bitwise equal to direct engine dispatch and that the
+coalesce factor exceeds 1, emitting a greppable summary row.
+
+CSV section:
+  service_throughput,clients,coalesce,requests,reqs_per_s,p50_us,p99_us,
+      mean_us,coalesce_factor
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.offload import OffloadEngine
+from repro.service import DescriptorBroker
+
+N = 256  # payload columns per request
+P = 8    # ranks per collective
+
+
+def _run_config(
+    n_clients: int,
+    n_requests: int,
+    *,
+    coalesce: bool,
+    flush_interval_s: float = 0.002,
+    payload_cols: int = N,
+) -> Dict[str, float]:
+    broker = DescriptorBroker(
+        OffloadEngine(),
+        flush_interval_s=flush_interval_s,
+        max_coalesce=64 if coalesce else 1,
+    )
+    desc = broker.make_descriptor(
+        "SCAN", p=P, payload_bytes=payload_cols * 4, op="sum"
+    ).encode()
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(
+        rng.normal(size=(P, payload_cols)).astype(np.float32)
+    )
+    # warm every fused shape the run can produce (single + pow2 widths up
+    # to the client count) so compile time doesn't skew the percentiles;
+    # the broker is drained unstarted so each warm group's width is exact
+    width = 1
+    while width <= (1 << max(0, n_clients - 1).bit_length()):
+        tmp = [broker.client(f"warm{width}_{i}") for i in range(width)]
+        tickets = [t.submit(desc, x) for t in tmp]
+        broker.drain()
+        for t, c in zip(tickets, tmp):
+            t.result(60)
+            c.close()
+        if not coalesce:
+            break  # every dispatch is width 1 anyway
+        width *= 2
+    broker.start()
+
+    clients = [broker.client(f"c{i}") for i in range(n_clients)]
+    barrier = threading.Barrier(n_clients)
+    latencies: List[List[float]] = [[] for _ in range(n_clients)]
+    errors: List[BaseException] = []
+
+    def work(ci: int) -> None:
+        try:
+            barrier.wait()
+            for _ in range(n_requests):
+                t0 = time.perf_counter()
+                clients[ci].offload(desc, x, timeout=60)
+                latencies[ci].append(time.perf_counter() - t0)
+        except BaseException as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [
+        threading.Thread(target=work, args=(i,)) for i in range(n_clients)
+    ]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    broker.stop()
+    if errors:
+        raise errors[0]
+    flat = np.asarray([s for per in latencies for s in per])
+    total = n_clients * n_requests
+    return {
+        "clients": n_clients,
+        "coalesce": int(coalesce),
+        "requests": total,
+        "reqs_per_s": total / wall,
+        "p50_us": float(np.percentile(flat, 50) * 1e6),
+        "p99_us": float(np.percentile(flat, 99) * 1e6),
+        "mean_us": float(flat.mean() * 1e6),
+        "coalesce_factor": broker.telemetry.coalesce_factor,
+    }
+
+
+def _row(s: Dict[str, float]) -> str:
+    return (
+        f"service_throughput,{s['clients']},"
+        f"{'on' if s['coalesce'] else 'off'},{s['requests']},"
+        f"{s['reqs_per_s']:.0f},{s['p50_us']:.0f},{s['p99_us']:.0f},"
+        f"{s['mean_us']:.0f},{s['coalesce_factor']:.2f}"
+    )
+
+
+def run(
+    *,
+    client_counts: Sequence[int] = (1, 2, 4, 8),
+    n_requests: int = 32,
+    stats_out: Optional[List[Dict[str, float]]] = None,
+) -> List[str]:
+    """One row per (client count, coalescing on/off)."""
+    rows: List[str] = []
+    for c in client_counts:
+        for coalesce in (False, True):
+            s = _run_config(c, n_requests, coalesce=coalesce)
+            if stats_out is not None:
+                stats_out.append(s)
+            rows.append(_row(s))
+    return rows
+
+
+def smoke(
+    n_clients: int = 4,
+    n_requests: int = 8,
+    stats_out: Optional[List[Dict[str, float]]] = None,
+) -> List[str]:
+    """CI entry: coalesced service dispatch must be bitwise equal to direct
+    engine dispatch, with a coalesce factor > 1."""
+    rows: List[str] = []
+    # bitwise proof: distinct per-tenant payloads through one fused dispatch
+    broker = DescriptorBroker(OffloadEngine())
+    direct = OffloadEngine()
+    desc = broker.make_descriptor("SCAN", p=P, payload_bytes=N * 4, op="sum")
+    rng = np.random.default_rng(7)
+    xs = [
+        jnp.asarray(rng.integers(-4, 5, size=(P, N)).astype(np.float32))
+        for _ in range(n_clients)
+    ]
+    tickets = [
+        broker.client(f"s{i}").submit(desc.encode(), xs[i])
+        for i in range(n_clients)
+    ]
+    broker.drain()
+    bitwise = all(
+        np.array_equal(
+            np.asarray(t.result(30)), np.asarray(direct.offload(desc, x))
+        )
+        for t, x in zip(tickets, xs)
+    )
+    factor = broker.telemetry.coalesce_factor
+    assert bitwise, "coalesced dispatch diverged from direct dispatch"
+    assert factor > 1.0, f"no coalescing happened (factor={factor})"
+
+    # one small threaded throughput config, coalescing on vs off
+    for coalesce in (False, True):
+        s = _run_config(
+            n_clients, n_requests, coalesce=coalesce,
+            flush_interval_s=0.01, payload_cols=64,
+        )
+        if stats_out is not None:
+            stats_out.append(s)
+        rows.append(_row(s))
+    rows.append(
+        f"service_smoke_summary,bitwise_equal,{int(bitwise)},"
+        f"coalesce_gt1,{int(factor > 1.0)},coalesce_factor,{factor:.2f}"
+    )
+    return rows

@@ -1,18 +1,24 @@
 #!/usr/bin/env bash
-# One-entry-point CI gate: tier-1 test suite + offload-engine smoke benchmark.
+# One-entry-point CI gate: tier-1 test suite + offload-engine smoke benchmark
+# + the multi-tenant service check.
 #
-#   bash scripts/ci.sh           # full tier-1 + offload/planner smoke
+#   bash scripts/ci.sh           # full tier-1 + offload/planner/service smoke
 #
 # The smoke benchmark (benchmarks.run --smoke) runs a budgeted autotuning grid,
 # proves the descriptor schedule cache (hit/miss telemetry), executes one 3D
 # planned collective end-to-end per CollType — asserting the repeat dispatch
 # hits the plan cache and that telemetry exposes cache_size + per-coll
-# latency — reports the tuned-vs-fixed axis split, and runs a 2-step DP
+# latency — reports the tuned-vs-fixed axis split, runs a 2-step DP
 # trainer on a 2x2 CPU mesh with use_offload_engine=True, asserting the
 # step-2 dispatch is a plan-cache hit and that loss/grads/params are bitwise
-# equal to the raw shard_map baseline (plus planner-first remesh adoption).
-# Regressions in the offload/planner subsystem fail CI even when no unit
-# test covers them yet.
+# equal to the raw shard_map baseline (plus planner-first remesh adoption),
+# and drives the multi-tenant broker, asserting coalesced dispatches are
+# bitwise equal to direct engine dispatch with a coalesce factor > 1.
+# The service check (repro.testing.service_check) then exercises the broker
+# in driver mode on a real 2x2 mesh: 4 concurrent tenant streams, bitwise
+# equality, backpressure isolation, and registry split-winner inheritance.
+# Regressions in the offload/planner/service subsystems fail CI even when
+# no unit test covers them yet.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -22,14 +28,26 @@ echo "=== tier-1: pytest ==="
 python -m pytest -x -q
 
 echo
-echo "=== offload-engine + planner smoke benchmark ==="
+echo "=== offload-engine + planner + service smoke benchmark ==="
 SMOKE_OUT="$(mktemp -t repro_smoke.XXXXXX.csv)"
 trap 'rm -f "$SMOKE_OUT"' EXIT
-python -m benchmarks.run --smoke | tee "$SMOKE_OUT"
+python -m benchmarks.run --smoke --report-json | tee "$SMOKE_OUT"
 grep -q "^planned_smoke_summary," "$SMOKE_OUT" \
   || { echo "CI FAIL: planned 3D smoke section missing"; exit 1; }
 grep -q "^trainer_offload_summary,bitwise_equal,1,step2_cache_hit,1," "$SMOKE_OUT" \
   || { echo "CI FAIL: offloaded trainer smoke missing or not bitwise"; exit 1; }
+grep -q "^service_smoke_summary,bitwise_equal,1,coalesce_gt1,1," "$SMOKE_OUT" \
+  || { echo "CI FAIL: service smoke missing, not bitwise, or not coalescing"; exit 1; }
+
+echo
+echo "=== multi-tenant service check (driver mode, 2x2 mesh) ==="
+SVC_OUT="$(mktemp -t repro_service.XXXXXX.log)"
+trap 'rm -f "$SMOKE_OUT" "$SVC_OUT"' EXIT
+python -m repro.testing.service_check 2 2 | tee "$SVC_OUT"
+grep -q "^service_check_summary,bitwise_equal,1,coalesce_gt1,1," "$SVC_OUT" \
+  || { echo "CI FAIL: service check not bitwise or not coalescing"; exit 1; }
+grep -q "^ALL-OK$" "$SVC_OUT" \
+  || { echo "CI FAIL: service check did not pass"; exit 1; }
 
 echo
 echo "CI OK"

@@ -167,6 +167,16 @@ class CollectiveDescriptor:
         elif self.split:
             raise ValueError("split given without axes")
 
+    def normalized(self) -> "CollectiveDescriptor":
+        """This request with the per-rank fields zeroed: every rank of a
+        communicator, and every repeat request, shares one normalized form.
+        Both the engine's schedule-cache key and the broker's coalescing
+        group key derive from it — requests fuse iff they would share a
+        compiled schedule."""
+        return dataclasses.replace(
+            self, rank=0, msg_type=MsgType.OFFLOAD_REQUEST
+        )
+
     @property
     def node_type(self) -> NodeType:
         """Derived role in the binomial tree (paper left this to software)."""

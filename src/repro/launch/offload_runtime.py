@@ -15,10 +15,18 @@ Every launcher that issues collective descriptors goes through here:
     (``autotune(time_budget_s=...)``) on the surviving topology, hot-swapping
     the active tuning table. Disable with ``retune_on_remesh=False``; detach
     a built engine's hook with :func:`detach_remesh_hook`.
+  * :func:`build_offload_service` stacks the multi-tenant
+    :class:`~repro.service.DescriptorBroker` on top of the engine (service
+    mode): many client streams, coalesced dispatches, per-tenant telemetry,
+    and a shared tuning-table registry — a fresh tune (or an ambient table)
+    is *published* to the registry so every worker pointing at the same
+    registry directory (``$REPRO_TUNING_REGISTRY`` / ``--registry``)
+    inherits the merged winners instead of re-measuring.
   * ``python -m repro.launch.offload_runtime --tune`` is the operator-facing
     way to produce a tuning table once (including the planner's axis-split
     winners via ``--splits``) and reuse it across launches via
-    ``$REPRO_TUNING_TABLE``.
+    ``$REPRO_TUNING_TABLE``; add ``--registry DIR`` to also merge it into a
+    shared registry keyed by backend fingerprint.
 """
 
 from __future__ import annotations
@@ -171,6 +179,72 @@ def get_engine() -> OffloadEngine:
     return _ENGINE
 
 
+DEFAULT_REGISTRY_DIR = Path(
+    os.environ.get("REPRO_CACHE_DIR", os.path.expanduser("~/.cache/repro"))
+) / "tuning_registry"
+
+_SERVICE = None
+
+
+def build_offload_service(
+    *,
+    axis_name=None,
+    mesh=None,
+    registry: "object | str | Path | None" = None,
+    publish_active_table: bool = True,
+    flush_interval_s: float = 0.002,
+    max_coalesce: int = 64,
+    max_pending: int = 1024,
+    max_tenants: int = 64,
+    start: bool = True,
+    **engine_kw,
+):
+    """Service mode: a started :class:`~repro.service.DescriptorBroker`
+    front end over a freshly built engine.
+
+    The registry resolves from (in order): the explicit argument (a registry
+    object or a directory path), ``$REPRO_TUNING_REGISTRY``, the default
+    cache-dir registry. The broker fetches the registry's merged table for
+    this backend and activates it; when ``publish_active_table`` and this
+    process also tuned (or loaded) its own table, that table is merged back
+    in, so workers converge on one pod-wide table instead of each keeping a
+    private one.
+    """
+    from repro.core.selector import get_active_tuning
+    from repro.service import DescriptorBroker, FileTuningRegistry
+    from repro.service.registry import default_registry
+
+    if registry is None:
+        registry = default_registry() or FileTuningRegistry(
+            DEFAULT_REGISTRY_DIR
+        )
+    elif isinstance(registry, (str, Path)):
+        registry = FileTuningRegistry(registry)
+    engine = build_offload_engine(**engine_kw)
+    active = get_active_tuning()
+    if publish_active_table and isinstance(active, TuningCache):
+        registry.publish(active)
+    broker = DescriptorBroker(
+        engine,
+        axis_name=axis_name,
+        mesh=mesh,
+        flush_interval_s=flush_interval_s,
+        max_coalesce=max_coalesce,
+        max_pending=max_pending,
+        max_tenants=max_tenants,
+        registry=registry,
+    )
+    return broker.start() if start else broker
+
+
+def get_service():
+    """Process-wide broker singleton (sim-mode engine, default registry)."""
+    global _SERVICE
+    if _SERVICE is None:
+        _SERVICE = build_offload_service()
+    return _SERVICE
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--tune", action="store_true", help="run the autotuner")
@@ -182,6 +256,13 @@ def main() -> None:
     ap.add_argument("--out", default=str(DEFAULT_TABLE_PATH))
     ap.add_argument("--budget-s", type=float, default=60.0)
     ap.add_argument("--iters", type=int, default=5)
+    ap.add_argument(
+        "--registry",
+        metavar="DIR",
+        default=None,
+        help="also merge the tuned table into a shared file registry "
+        "(keyed by backend fingerprint) so other workers inherit it",
+    )
     args = ap.parse_args()
     if not args.tune:
         ap.error("nothing to do; pass --tune")
@@ -194,6 +275,15 @@ def main() -> None:
             time_budget_s=args.budget_s,
             cache=cache,
             verbose=True,
+        )
+    if args.registry:
+        from repro.service import FileTuningRegistry
+
+        merged = FileTuningRegistry(args.registry).publish(cache)
+        print(
+            f"merged into registry {args.registry} "
+            f"[{cache.backend}]: {len(merged.measurements)} measurements, "
+            f"{len(merged.split_measurements)} split samples"
         )
     out = cache.save(args.out)
     fitted = cache.fitted_model()

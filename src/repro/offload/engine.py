@@ -132,6 +132,7 @@ class EngineTelemetry:
     last_latency_s: float = 0.0
     timed_dispatches: int = 0
     cache_size: int = 0
+    cache_clears: int = 0
     latency_by_coll: Dict[str, Tuple[float, int]] = dataclasses.field(
         default_factory=dict
     )
@@ -168,6 +169,7 @@ class EngineTelemetry:
             "compiles": self.compiles,
             "errors": self.errors,
             "cache_size": self.cache_size,
+            "cache_clears": self.cache_clears,
             "calls_by_coll": dict(self.calls_by_coll),
             "mean_latency_us": self.mean_latency_s * 1e6,
             "last_latency_us": self.last_latency_s * 1e6,
@@ -217,9 +219,7 @@ class OffloadEngine:
     def _cache_key(
         desc: CollectiveDescriptor, axis_name: AxisSpec, mesh: Any = None
     ) -> bytes:
-        normalized = dataclasses.replace(
-            desc, rank=0, msg_type=MsgType.OFFLOAD_REQUEST
-        )
+        normalized = desc.normalized()
         if axis_name is None:
             mode = "<sim>"
         elif isinstance(axis_name, str):
@@ -383,8 +383,11 @@ class OffloadEngine:
         return len(self._cache)
 
     def clear(self) -> None:
+        # reset the gauge at clear time: a remesh-triggered clear must not
+        # keep reporting the pre-clear size until the next dispatch
         self._cache.clear()
         self.telemetry.cache_size = 0
+        self.telemetry.cache_clears += 1
 
     # -- internals ---------------------------------------------------------
 

@@ -149,6 +149,49 @@ class TuningCache:
         )
         self._split_winners = {}  # invalidate
 
+    # -- merging -----------------------------------------------------------
+
+    def merge(self, other: "TuningCache") -> "TuningCache":
+        """Fold another table's measurements into this one, in place.
+
+        Only tables measured on the *same* backend fingerprint may merge —
+        latencies from different hardware are not comparable, and a merged
+        table silently mixing them would mis-rank every selection — so a
+        mismatch raises. Same-key samples (identical coll/algo/p/payload, or
+        coll/sizes/order/payload for splits) keep the lower measured cost:
+        re-measurement can only sharpen a winner, never regress it. The
+        merged table round-trips through :meth:`save`/:meth:`load_compatible`
+        like any single-host table, which is what lets a registry serve one
+        pod-wide table assembled from many workers' partial tuning runs.
+        """
+        if other.backend != self.backend:
+            raise ValueError(
+                f"cannot merge tuning tables across backends: this table "
+                f"was measured on {self.backend!r}, the other on "
+                f"{other.backend!r}"
+            )
+        best: Dict[Tuple[str, str, int, int], Measurement] = {}
+        for m in (*self.measurements, *other.measurements):
+            key = (m.coll, m.algo, m.p, m.payload_bytes)
+            cur = best.get(key)
+            if cur is None or m.seconds < cur.seconds:
+                best[key] = m
+        self.measurements = [best[k] for k in sorted(best)]
+        best_split: Dict[
+            Tuple[str, Tuple[int, ...], Tuple[int, ...], int],
+            SplitMeasurement,
+        ] = {}
+        for s in (*self.split_measurements, *other.split_measurements):
+            key = (s.coll, s.sizes, s.order, s.payload_bytes)
+            cur = best_split.get(key)
+            if cur is None or s.seconds < cur.seconds:
+                best_split[key] = s
+        self.split_measurements = [best_split[k] for k in sorted(best_split)]
+        self._winners = {}
+        self._split_winners = {}
+        self._fitted = None
+        return self
+
     # -- reductions --------------------------------------------------------
 
     @property

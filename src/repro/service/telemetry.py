@@ -1,0 +1,211 @@
+"""Per-tenant service telemetry, layered on the engine's counters.
+
+The broker is the NIC's request FIFO made multi-tenant: every client stream
+gets its own submitted/completed/rejected/deadline-missed counters, a queue
+depth gauge, and a log-bucketed latency histogram (submit-to-result wall
+clock, the host-visible latency the paper's Fig. 4/5 measures), while the
+coalescing stats (fused dispatches vs. fused requests) quantify how much
+network-level combining the broker achieves — the software twin of the
+NetFPGA combining packets from many host ranks in one pipeline pass.
+:class:`ServiceTelemetry` snapshots all of it alongside the wrapped
+:class:`~repro.offload.engine.EngineTelemetry` so one dict shows the whole
+stack: tenant queues -> broker coalescing -> engine schedule cache.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Dict, List, Optional
+
+#: histogram bucket upper edges in microseconds (last bucket is open-ended)
+LATENCY_BUCKETS_US = (
+    50.0, 100.0, 250.0, 500.0, 1e3, 2.5e3, 5e3, 1e4, 2.5e4, 5e4, 1e5,
+    2.5e5, 5e5, 1e6, 5e6,
+)
+
+
+@dataclasses.dataclass
+class LatencyHistogram:
+    """Log-bucketed latency histogram with count/sum/max (microseconds)."""
+
+    counts: List[int] = dataclasses.field(
+        default_factory=lambda: [0] * (len(LATENCY_BUCKETS_US) + 1)
+    )
+    count: int = 0
+    total_us: float = 0.0
+    max_us: float = 0.0
+
+    def record(self, seconds: float) -> None:
+        us = seconds * 1e6
+        self.count += 1
+        self.total_us += us
+        self.max_us = max(self.max_us, us)
+        for i, edge in enumerate(LATENCY_BUCKETS_US):
+            if us <= edge:
+                self.counts[i] += 1
+                return
+        self.counts[-1] += 1
+
+    @property
+    def mean_us(self) -> float:
+        return self.total_us / self.count if self.count else 0.0
+
+    def percentile_us(self, q: float) -> float:
+        """Bucket-resolution percentile (upper edge of the q-quantile bucket;
+        the open last bucket reports the observed max)."""
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"quantile {q} not in [0, 1]")
+        if self.count == 0:
+            return 0.0
+        rank = q * self.count
+        seen = 0
+        for i, c in enumerate(self.counts):
+            seen += c
+            if seen >= rank and c:
+                if i < len(LATENCY_BUCKETS_US):
+                    return LATENCY_BUCKETS_US[i]
+                return self.max_us
+        return self.max_us
+
+    def snapshot(self) -> Dict[str, float]:
+        return {
+            "count": self.count,
+            "mean_us": self.mean_us,
+            "p50_us": self.percentile_us(0.50),
+            "p99_us": self.percentile_us(0.99),
+            "max_us": self.max_us,
+        }
+
+
+@dataclasses.dataclass
+class TenantStats:
+    """One client stream's counters (the per-host NIC doorbell registers)."""
+
+    submitted: int = 0
+    completed: int = 0
+    rejected: int = 0
+    errors: int = 0
+    deadline_missed: int = 0
+    queue_depth: int = 0
+    max_queue_depth: int = 0
+    latency: LatencyHistogram = dataclasses.field(
+        default_factory=LatencyHistogram
+    )
+
+    def snapshot(self) -> Dict[str, Any]:
+        return {
+            "submitted": self.submitted,
+            "completed": self.completed,
+            "rejected": self.rejected,
+            "errors": self.errors,
+            "deadline_missed": self.deadline_missed,
+            "queue_depth": self.queue_depth,
+            "max_queue_depth": self.max_queue_depth,
+            "latency": self.latency.snapshot(),
+        }
+
+
+class ServiceTelemetry:
+    """Broker-wide counters + per-tenant stats, thread-safe.
+
+    ``coalesce_factor`` is requests-per-engine-dispatch over everything the
+    broker has flushed — the service's headline number: > 1 means concurrent
+    tenants are genuinely sharing compiled collective dispatches.
+    """
+
+    def __init__(self, engine_telemetry: Any = None):
+        self._lock = threading.Lock()
+        self._engine_telemetry = engine_telemetry
+        self.tenants: Dict[str, TenantStats] = {}
+        self.fused_dispatches = 0
+        self.fused_requests = 0
+        self.flushes = 0
+        self.deadline_flushes = 0
+
+    def tenant(self, name: str) -> TenantStats:
+        with self._lock:
+            stats = self.tenants.get(name)
+            if stats is None:
+                stats = self.tenants[name] = TenantStats()
+            return stats
+
+    # -- recording (all called with the broker holding its own lock or from
+    #    the single dispatch thread; the internal lock guards snapshots) ----
+
+    def record_submit(self, tenant: str) -> None:
+        with self._lock:
+            t = self.tenants.setdefault(tenant, TenantStats())
+            t.submitted += 1
+            t.queue_depth += 1
+            t.max_queue_depth = max(t.max_queue_depth, t.queue_depth)
+
+    def record_reject(self, tenant: str) -> None:
+        with self._lock:
+            self.tenants.setdefault(tenant, TenantStats()).rejected += 1
+
+    def record_complete(
+        self,
+        tenant: str,
+        latency_s: float,
+        *,
+        error: bool = False,
+        deadline_missed: bool = False,
+    ) -> None:
+        with self._lock:
+            t = self.tenants.setdefault(tenant, TenantStats())
+            t.queue_depth = max(0, t.queue_depth - 1)
+            if error:
+                t.errors += 1
+            else:
+                t.completed += 1
+                t.latency.record(latency_s)
+            if deadline_missed:
+                t.deadline_missed += 1
+
+    def record_flush(
+        self, n_requests: int, n_dispatches: int, *, deadline: bool = False
+    ) -> None:
+        with self._lock:
+            self.flushes += 1
+            self.fused_requests += n_requests
+            self.fused_dispatches += n_dispatches
+            if deadline:
+                self.deadline_flushes += 1
+
+    # -- reading -----------------------------------------------------------
+
+    @property
+    def coalesce_factor(self) -> float:
+        with self._lock:
+            if not self.fused_dispatches:
+                return 0.0
+            return self.fused_requests / self.fused_dispatches
+
+    def snapshot(self) -> Dict[str, Any]:
+        with self._lock:
+            snap: Dict[str, Any] = {
+                "tenants": {
+                    name: t.snapshot() for name, t in self.tenants.items()
+                },
+                "fused_requests": self.fused_requests,
+                "fused_dispatches": self.fused_dispatches,
+                "coalesce_factor": (
+                    self.fused_requests / self.fused_dispatches
+                    if self.fused_dispatches
+                    else 0.0
+                ),
+                "flushes": self.flushes,
+                "deadline_flushes": self.deadline_flushes,
+            }
+        if self._engine_telemetry is not None:
+            snap["engine"] = self._engine_telemetry.snapshot()
+        return snap
+
+
+__all__ = [
+    "LATENCY_BUCKETS_US",
+    "LatencyHistogram",
+    "ServiceTelemetry",
+    "TenantStats",
+]

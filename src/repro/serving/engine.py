@@ -7,6 +7,14 @@ slot one token (greedy). Finished slots (EOS / max_len) free up for the
 queue. This is the serving analogue of the paper's offload: ONE compiled
 decode program serves the whole batch per step, with all schedule work
 (attention over sharded caches, SSM state updates) inside it.
+
+With a ``collective_client`` (a :class:`repro.service.ServiceClient`), each
+step also posts its batched slot-statistics reduction — active slots, tokens
+emitted, finished requests — as an ALLREDUCE descriptor to the shared
+offload service instead of reducing locally: the serving engine becomes one
+more tenant of the broker, its per-step reductions coalescing with every
+other stream's requests. Tickets are collected asynchronously; call
+:meth:`collect_service_stats` to resolve them into serving totals.
 """
 
 from __future__ import annotations
@@ -41,6 +49,7 @@ class ServeEngine:
         batch_size: int = 4,
         max_len: int = 256,
         eos_id: int = 1,
+        collective_client=None,
     ):
         self.api = api
         self.params = params
@@ -55,6 +64,20 @@ class ServeEngine:
         self.cur_tokens = np.zeros((batch_size, 1), dtype=np.int32)
         self.queue: List[Request] = []
         self._decode = None
+        # offload-service tenancy: the per-step slot-stats reduction is a
+        # wire-encoded ALLREDUCE over the slot axis (each slot plays the
+        # role of a rank), submitted async and resolved on demand
+        self._collective = collective_client
+        self._stat_tickets: List = []
+        self._stat_totals = np.zeros(3, dtype=np.float64)
+        self._stat_steps = 0
+        self._stats_desc = (
+            None
+            if collective_client is None
+            else collective_client.broker.make_descriptor(
+                "ALLREDUCE", p=batch_size, payload_bytes=3 * 4, op="sum"
+            ).encode()
+        )
 
     # -------------------------------------------------------------- intake
     def submit(self, req: Request) -> None:
@@ -129,6 +152,53 @@ class ServeEngine:
                 self.slots[s] = None
             else:
                 self.cur_tokens[s, 0] = tok
+        if self._collective is not None:
+            self._post_step_stats(active)
+        return out
+
+    # ------------------------------------------------- service tenancy
+    def _post_step_stats(self, active) -> None:
+        """Post this step's batched slot-stats reduction to the offload
+        service: per-slot [active, tokens_emitted, finished] rows, summed
+        over the slot axis by one shared ALLREDUCE dispatch."""
+        stats = np.zeros((self.B, 3), dtype=np.float32)
+        for s in active:
+            stats[s, 0] = 1.0  # slot was active
+            stats[s, 1] = 1.0  # one token emitted per active slot per step
+            if self.slots[s] is None:  # freed this step => request finished
+                stats[s, 2] = 1.0
+        self._stat_tickets.append(
+            self._collective.submit(self._stats_desc, jnp.asarray(stats))
+        )
+        # fold already-completed tickets into the running totals so a
+        # long-lived serving process never accumulates unbounded tickets
+        still_pending = []
+        for ticket in self._stat_tickets:
+            if ticket.done():
+                self._fold_ticket(ticket, timeout=0.0)
+            else:
+                still_pending.append(ticket)
+        self._stat_tickets = still_pending
+
+    def _fold_ticket(self, ticket, timeout: float) -> None:
+        reduced = np.asarray(ticket.result(timeout))
+        self._stat_totals += reduced[0]  # every row holds the slot-axis sum
+        self._stat_steps += 1
+
+    def collect_service_stats(self, timeout: float = 30.0) -> Dict[str, int]:
+        """Resolve outstanding stat tickets and return the serving totals
+        accumulated since the last call."""
+        for ticket in self._stat_tickets:
+            self._fold_ticket(ticket, timeout)
+        self._stat_tickets = []
+        out = {
+            "service_steps": self._stat_steps,
+            "slot_steps": int(self._stat_totals[0]),
+            "tokens_emitted": int(self._stat_totals[1]),
+            "requests_finished": int(self._stat_totals[2]),
+        }
+        self._stat_totals = np.zeros(3, dtype=np.float64)
+        self._stat_steps = 0
         return out
 
     def run_until_drained(self, max_steps: int = 10_000) -> None:

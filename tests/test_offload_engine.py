@@ -140,6 +140,27 @@ def test_cache_key_ignores_rank_and_msg_type_but_not_schedule_fields():
     assert eng.cache_size() == 3
 
 
+def test_clear_resets_cache_size_gauge_and_counts_clears():
+    """A remesh-triggered clear must zero the cache_size gauge immediately
+    (not at the next dispatch) and bump the cache_clears counter."""
+    eng = OffloadEngine()
+    x = _payload()
+    eng.offload(_descriptor(eng, "SCAN"), x)
+    eng.offload(_descriptor(eng, "ALLREDUCE"), x)
+    assert eng.telemetry.snapshot()["cache_size"] == 2
+    assert eng.telemetry.snapshot()["cache_clears"] == 0
+    eng.clear()
+    snap = eng.telemetry.snapshot()
+    assert snap["cache_size"] == 0          # reset at clear time
+    assert snap["cache_clears"] == 1
+    eng.clear()
+    assert eng.telemetry.snapshot()["cache_clears"] == 2
+    # repopulation reports the rebuilt size
+    eng.offload(_descriptor(eng, "SCAN"), x)
+    snap = eng.telemetry.snapshot()
+    assert snap["cache_size"] == 1 and snap["cache_clears"] == 2
+
+
 def test_per_coll_telemetry_counters():
     eng = OffloadEngine()
     x = _payload()

@@ -1,0 +1,435 @@
+"""Service-subsystem tests: broker coalescing (bitwise vs direct dispatch),
+backpressure and admission control, per-tenant telemetry, the tuning-table
+registry (merge conflict policy, fingerprint keying, persistence), and the
+broker inheriting another worker's split winner."""
+
+import threading
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import CollType
+from repro.core.selector import set_active_tuning
+from repro.offload import OffloadEngine, TuningCache
+from repro.service import (
+    AdmissionError,
+    BrokerStopped,
+    DescriptorBroker,
+    FileTuningRegistry,
+    LatencyHistogram,
+    QueueFullError,
+    ServiceTelemetry,
+    TuningRegistry,
+)
+
+P = 8
+N = 16
+
+
+@pytest.fixture(autouse=True)
+def _no_active_tuning():
+    set_active_tuning(None)
+    yield
+    set_active_tuning(None)
+
+
+def _payloads(k, seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        jnp.asarray(rng.normal(size=(P, N)).astype(np.float32))
+        for _ in range(k)
+    ]
+
+
+def _scan_desc(broker):
+    return broker.make_descriptor("SCAN", p=P, payload_bytes=N * 4, op="sum")
+
+
+# ------------------------------------------------------------- coalescing
+
+
+@pytest.mark.parametrize("coll", [c.name for c in CollType])
+def test_coalesced_dispatch_bitwise_equals_direct(coll):
+    """Four tenants' fused dispatch == four direct engine dispatches, per
+    CollType, bit for bit."""
+    broker = DescriptorBroker(OffloadEngine())
+    direct = OffloadEngine()
+    desc = broker.make_descriptor(coll, p=P, payload_bytes=N * 4, op="sum")
+    xs = _payloads(4)
+    is_barrier = coll == "BARRIER"
+    clients = [broker.client() for _ in range(4)]
+    tickets = [
+        c.submit(desc.encode(), None if is_barrier else x)
+        for c, x in zip(clients, xs)
+    ]
+    assert broker.drain() == 4
+    for t, x in zip(tickets, xs):
+        got = np.asarray(t.result(5))
+        want = np.asarray(direct.offload(desc, None if is_barrier else x))
+        np.testing.assert_array_equal(got, want)
+    # four requests, one engine dispatch
+    assert broker.telemetry.coalesce_factor == 4.0
+    assert broker.engine.telemetry.dispatches == 1
+
+
+def test_coalesce_groups_split_by_descriptor_and_shape():
+    """Different descriptors (or payload shapes) never fuse."""
+    broker = DescriptorBroker(OffloadEngine())
+    scan = _scan_desc(broker)
+    allred = broker.make_descriptor(
+        "ALLREDUCE", p=P, payload_bytes=N * 4, op="sum"
+    )
+    xs = _payloads(3)
+    wide = jnp.concatenate([xs[2], xs[2]], axis=1)  # different leaf shape
+    a = broker.client("a")
+    t1 = a.submit(scan.encode(), xs[0])
+    t2 = broker.client("b").submit(allred.encode(), xs[1])
+    t3 = broker.client("c").submit(scan.encode(), wide)
+    assert broker.drain() == 3
+    for t in (t1, t2, t3):
+        t.result(5)
+    assert broker.engine.telemetry.dispatches == 3
+    assert broker.telemetry.coalesce_factor == 1.0
+
+
+def test_pytree_payloads_coalesce():
+    """Tuple-pytree payloads stack leafwise and unstack bitwise."""
+    broker = DescriptorBroker(OffloadEngine())
+    direct = OffloadEngine()
+    desc = broker.make_descriptor(
+        "SCAN", p=P, payload_bytes=2 * N * 4, op="ssd"
+    )
+    rng = np.random.default_rng(3)
+
+    def pair(seed):
+        r = np.random.default_rng(seed)
+        return (
+            jnp.asarray(r.uniform(0.5, 1.0, (P, N)).astype(np.float32)),
+            jnp.asarray(r.normal(size=(P, N)).astype(np.float32)),
+        )
+
+    pairs = [pair(s) for s in range(3)]
+    tickets = [
+        broker.client().submit(desc.encode(), pr) for pr in pairs
+    ]
+    broker.drain()
+    assert broker.engine.telemetry.dispatches == 1
+    for t, pr in zip(tickets, pairs):
+        got_a, got_b = t.result(5)
+        want_a, want_b = direct.offload(desc, pr)
+        np.testing.assert_array_equal(np.asarray(got_a), np.asarray(want_a))
+        np.testing.assert_array_equal(np.asarray(got_b), np.asarray(want_b))
+
+
+def test_threaded_clients_with_deadline_flush():
+    """Started broker: concurrent submits complete within the flush window;
+    a lone request is not starved."""
+    with DescriptorBroker(OffloadEngine(), flush_interval_s=0.02) as broker:
+        desc = _scan_desc(broker)
+        xs = _payloads(4)
+        direct = OffloadEngine()
+        clients = [broker.client() for _ in range(4)]
+        barrier = threading.Barrier(4)
+        results = {}
+
+        def work(i):
+            barrier.wait()
+            results[i] = clients[i].offload(desc.encode(), xs[i], timeout=30)
+
+        threads = [
+            threading.Thread(target=work, args=(i,)) for i in range(4)
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        for i in range(4):
+            np.testing.assert_array_equal(
+                np.asarray(results[i]),
+                np.asarray(direct.offload(desc, xs[i])),
+            )
+        # lone follow-up request: the deadline flush dispatches it alone
+        lone = clients[0].offload(desc.encode(), xs[0], timeout=30)
+        np.testing.assert_array_equal(
+            np.asarray(lone), np.asarray(direct.offload(desc, xs[0]))
+        )
+    assert not broker.running
+
+
+def test_pow2_padding_bounds_fused_shapes_and_stays_bitwise():
+    """Groups of 3 and 4 share one fused (p, 4, n) shape; padding columns
+    never leak into real tenants' results."""
+    broker = DescriptorBroker(OffloadEngine())
+    direct = OffloadEngine()
+    desc = _scan_desc(broker)
+    for k in (3, 4):
+        xs = _payloads(k, seed=k)
+        tickets = [broker.client().submit(desc.encode(), x) for x in xs]
+        broker.drain()
+        for t, x in zip(tickets, xs):
+            np.testing.assert_array_equal(
+                np.asarray(t.result(5)), np.asarray(direct.offload(desc, x))
+            )
+    # one descriptor-level schedule serves both group sizes, and padding
+    # keeps the fused leaf shape identical across them
+    assert broker.engine.telemetry.compiles == 1
+    assert broker.telemetry.fused_dispatches == 2
+
+
+def test_max_coalesce_chunks_groups():
+    broker = DescriptorBroker(OffloadEngine(), max_coalesce=2)
+    desc = _scan_desc(broker)
+    xs = _payloads(5)
+    tickets = [broker.client().submit(desc.encode(), x) for x in xs]
+    broker.drain()
+    for t in tickets:
+        t.result(5)
+    # 5 requests at max_coalesce=2 -> 3 dispatches (2+2+1)
+    assert broker.engine.telemetry.dispatches == 3
+
+
+# ------------------------------------------- backpressure + admission
+
+
+def test_tenant_queue_bound_rejects_without_corrupting_others():
+    broker = DescriptorBroker(OffloadEngine())
+    desc = _scan_desc(broker)
+    xs = _payloads(6)
+    small = broker.client("small", max_queue_depth=2)
+    other = broker.client("other")
+    t_other = other.submit(desc.encode(), xs[0])
+    small.submit(desc.encode(), xs[1])
+    small.submit(desc.encode(), xs[2])
+    with pytest.raises(QueueFullError):
+        small.submit(desc.encode(), xs[3])
+    broker.drain()
+    direct = OffloadEngine()
+    np.testing.assert_array_equal(
+        np.asarray(t_other.result(5)),
+        np.asarray(direct.offload(desc, xs[0])),
+    )
+    snap = broker.telemetry.snapshot()
+    assert snap["tenants"]["small"]["rejected"] == 1
+    assert snap["tenants"]["small"]["completed"] == 2
+    assert snap["tenants"]["other"]["rejected"] == 0
+    assert snap["tenants"]["other"]["completed"] == 1
+
+
+def test_blocking_submit_times_out():
+    broker = DescriptorBroker(OffloadEngine())
+    desc = _scan_desc(broker)
+    xs = _payloads(2)
+    c = broker.client("blocky", max_queue_depth=1, block=True)
+    c.submit(desc.encode(), xs[0])
+    with pytest.raises(QueueFullError):
+        c.submit(desc.encode(), xs[1], timeout=0.05)
+    broker.drain()
+
+
+def test_admission_control_caps_tenants_and_duplicate_names():
+    broker = DescriptorBroker(OffloadEngine(), max_tenants=2)
+    broker.client("a")
+    b = broker.client("b")
+    with pytest.raises(AdmissionError):
+        broker.client("c")
+    b.close()
+    broker.client("c")  # freed slot is admissible again
+    with pytest.raises(AdmissionError):
+        broker.client("a")  # duplicate stream name
+
+
+def test_stopped_broker_rejects_submissions():
+    broker = DescriptorBroker(OffloadEngine())
+    c = broker.client("a")
+    broker.start()
+    broker.stop()
+    with pytest.raises(BrokerStopped):
+        c.submit(_scan_desc(broker).encode(), _payloads(1)[0])
+
+
+def test_stop_without_drain_accounts_dropped_requests():
+    """Requests failed at shutdown still settle the per-tenant accounting:
+    queue_depth returns to zero and submitted == completed + errors."""
+    broker = DescriptorBroker(OffloadEngine())
+    desc = _scan_desc(broker)
+    c = broker.client("t0")
+    tickets = [c.submit(desc.encode(), x) for x in _payloads(2)]
+    broker.stop(drain=False)
+    for t in tickets:
+        with pytest.raises(BrokerStopped):
+            t.result(5)
+    snap = broker.telemetry.snapshot()["tenants"]["t0"]
+    assert snap["queue_depth"] == 0
+    assert snap["submitted"] == snap["completed"] + snap["errors"] == 2
+
+
+def test_dispatch_error_reported_through_tickets_only():
+    """A bad request fails its own group's tickets; the engine error counter
+    moves; other tenants' results are unaffected."""
+    broker = DescriptorBroker(OffloadEngine())
+    desc = _scan_desc(broker)
+    xs = _payloads(2)
+    good = broker.client("good").submit(desc.encode(), xs[0])
+    # wrong leading axis: sim payload validation fails at dispatch time
+    bad = broker.client("bad").submit(
+        desc.encode(), jnp.zeros((P // 2, N), jnp.float32)
+    )
+    broker.drain()
+    np.testing.assert_array_equal(
+        np.asarray(good.result(5)),
+        np.asarray(OffloadEngine().offload(desc, xs[0])),
+    )
+    with pytest.raises(ValueError):
+        bad.result(5)
+    snap = broker.telemetry.snapshot()
+    assert snap["tenants"]["bad"]["errors"] == 1
+    assert snap["tenants"]["good"]["completed"] == 1
+
+
+# --------------------------------------------------------------- telemetry
+
+
+def test_latency_histogram_percentiles():
+    h = LatencyHistogram()
+    for us in (60, 60, 60, 300, 9000):
+        h.record(us / 1e6)
+    snap = h.snapshot()
+    assert snap["count"] == 5
+    assert snap["p50_us"] == 100.0     # bucket upper edge containing 60us
+    assert snap["p99_us"] == 10000.0   # bucket upper edge containing 9ms
+    assert snap["max_us"] == pytest.approx(9000.0)
+    assert h.percentile_us(0.0) == 0.0 or h.count  # q=0 well-defined
+    with pytest.raises(ValueError):
+        h.percentile_us(1.5)
+
+
+def test_service_telemetry_snapshot_layers_engine():
+    eng = OffloadEngine()
+    tel = ServiceTelemetry(eng.telemetry)
+    tel.record_submit("t0")
+    tel.record_complete("t0", 0.001)
+    tel.record_flush(3, 1, deadline=True)
+    snap = tel.snapshot()
+    assert snap["coalesce_factor"] == 3.0
+    assert snap["deadline_flushes"] == 1
+    assert snap["tenants"]["t0"]["queue_depth"] == 0
+    assert "cache_clears" in snap["engine"]
+
+
+def test_deadline_missed_counter():
+    broker = DescriptorBroker(OffloadEngine())
+    desc = _scan_desc(broker)
+    c = broker.client("late")
+    t = c.submit(desc.encode(), _payloads(1)[0], deadline_s=0.0)
+    broker.drain()
+    t.result(5)  # completes fine; the deadline miss is telemetry, not an error
+    assert broker.telemetry.snapshot()["tenants"]["late"]["deadline_missed"] == 1
+
+
+# ------------------------------------------------- tuning-table registry
+
+
+def _disjoint_tables():
+    """Two same-fingerprint tables with disjoint measurements; B holds the
+    faster split for the (2, 2) mesh that A never measured."""
+    a, b = TuningCache(), TuningCache()
+    a.record("scan", "sklansky", 4, 1024, 9e-3)
+    a.record_split("scan", (2, 2), (0, 1), 1024, 5e-3)
+    b.record("scan", "hillis_steele", 4, 1024, 2e-3)
+    b.record_split("scan", (2, 2), (1, 0), 1024, 1e-3)
+    return a, b
+
+
+def test_merge_same_key_prefers_lower_cost():
+    a, b = TuningCache(), TuningCache()
+    a.record("scan", "sklansky", 4, 1024, 9e-3)
+    b.record("scan", "sklansky", 4, 1024, 2e-3)   # same key, faster sample
+    b.record("scan", "hillis_steele", 4, 1024, 5e-3)
+    a.merge(b)
+    kept = {
+        (m.coll, m.algo, m.p, m.payload_bytes): m.seconds
+        for m in a.measurements
+    }
+    assert kept[("scan", "sklansky", 4, 1024)] == 2e-3
+    assert a.winners[("scan", 4, 1024)] == "sklansky"
+    # splits follow the same policy
+    a.record_split("scan", (2, 2), (0, 1), 1024, 5e-3)
+    c = TuningCache()
+    c.record_split("scan", (2, 2), (0, 1), 1024, 1e-3)
+    c.record_split("scan", (2, 2), (1, 0), 1024, 3e-3)
+    a.merge(c)
+    assert a.split_winners[("scan", (2, 2), 1024)] == (0, 1)
+
+
+def test_merge_mismatched_fingerprint_raises():
+    a = TuningCache()
+    other = TuningCache(backend="tpu:v9:riscv")
+    with pytest.raises(ValueError, match="backend"):
+        a.merge(other)
+    with pytest.raises(ValueError, match="backend"):
+        other.merge(a)
+
+
+def test_merged_table_load_compatible_round_trips(tmp_path):
+    a, b = _disjoint_tables()
+    a.merge(b)
+    path = a.save(tmp_path / "merged.json")
+    loaded = TuningCache.load_compatible(path)
+    assert loaded is not None
+    assert loaded.winners == a.winners
+    assert loaded.split_winner("scan", (2, 2), 1024) == (1, 0)
+
+
+def test_registry_merges_disjoint_tables_and_keys_by_fingerprint():
+    a, b = _disjoint_tables()
+    foreign = TuningCache(backend="tpu:v9:riscv")
+    foreign.record("scan", "sklansky", 4, 1024, 1e-9)
+    reg = TuningRegistry()
+    reg.publish(a)
+    reg.publish(foreign)   # different fingerprint: separate entry, no raise
+    merged = reg.publish(b)
+    assert merged.split_winner("scan", (2, 2), 1024) == (1, 0)
+    assert merged.winners[("scan", 4, 1024)] == "hillis_steele"
+    assert reg.fetch(backend="tpu:v9:riscv").winners[
+        ("scan", 4, 1024)
+    ] == "sklansky"
+    assert len(reg.backends()) == 2
+    assert reg.fetch(backend="never:seen:this") is None
+
+
+def test_file_registry_persists_across_instances(tmp_path):
+    a, b = _disjoint_tables()
+    FileTuningRegistry(tmp_path).publish(a)
+    FileTuningRegistry(tmp_path).publish(b)    # fresh "process"
+    merged = FileTuningRegistry(tmp_path).fetch()
+    assert merged is not None
+    assert merged.split_winner("scan", (2, 2), 1024) == (1, 0)
+    assert merged.winners[("scan", 4, 1024)] == "hillis_steele"
+    assert FileTuningRegistry(tmp_path).backends() == [a.backend]
+
+
+def test_broker_planner_inherits_other_workers_split_winner(tmp_path):
+    """The acceptance demo: worker A publishes its table, worker B publishes
+    a *disjoint* one holding the (2, 2) split winner; a broker built over
+    the registry plans split="auto" with B's winner — which A (and the
+    static cost model) never measured."""
+    a, b = _disjoint_tables()
+    reg = FileTuningRegistry(tmp_path)
+    reg.publish(a)
+    reg.publish(b)
+    broker = DescriptorBroker(OffloadEngine(), registry=reg)
+    assert broker.tuning_table is not None
+    desc = broker.make_descriptor(
+        "SCAN", axes=(2, 2), payload_bytes=1024, op="sum", split="auto"
+    )
+    assert desc.split == (1, 0)   # contributed by table b, not a
+    # and the descriptor dispatches end-to-end under that split
+    x = jnp.asarray(
+        np.random.default_rng(0).normal(size=(4, 256)).astype(np.float32)
+    )
+    ticket = broker.client().submit(desc.encode(), x)
+    broker.drain()
+    got = np.asarray(ticket.result(5))
+    want = np.asarray(np.cumsum(np.asarray(x), axis=0).astype(np.float32))
+    np.testing.assert_allclose(got, want, atol=1e-4)

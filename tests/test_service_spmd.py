@@ -1,0 +1,19 @@
+"""End-to-end service check on a real 2x2 device mesh (subprocess: the
+device count must be fixed before jax initializes). Scenarios: >= 4
+concurrent tenant streams through the broker's driver-mode dispatch, bitwise
+equality against direct per-client engine dispatch, measured coalesce
+factor > 1, backpressure isolation, registry split-winner inheritance, and
+the deadline flush for a lone request."""
+
+import re
+
+
+def test_service_end_to_end_2x2(subprocess_runner):
+    out = subprocess_runner("repro.testing.service_check", "2", "2")
+    m = re.search(
+        r"service_check_summary,bitwise_equal,1,coalesce_gt1,1,"
+        r"coalesce_factor,([0-9.]+)",
+        out,
+    )
+    assert m, f"summary row missing or failing:\n{out[-2000:]}"
+    assert float(m.group(1)) > 1.0

@@ -1,0 +1,121 @@
+"""Descriptor wire-format compatibility tests: the 10-word legacy layout,
+the 15-word topology layout for every 1-3-axis split, and malformed-length
+rejection. The wire words are the service's request format — every broker
+submission round-trips through them — so the layout is a compatibility
+contract, not an implementation detail."""
+
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import CollType, CollectiveDescriptor
+from repro.core.packet import (
+    _LEGACY_WORDS,
+    _TOPO_WORDS,
+    MAX_AXES,
+    MsgType,
+    WireDType,
+    WireOp,
+    split_from_index,
+    split_index,
+)
+
+assert _LEGACY_WORDS == 10 and _TOPO_WORDS == 15, "wire layout changed"
+
+
+def _legacy_words(**over):
+    fields = dict(
+        comm_id=7, comm_size=8, coll_type=int(CollType.EXSCAN), algo_type=4,
+        rank=3, root=5, operation=int(WireOp.MAX),
+        data_type=int(WireDType.BFLOAT16), count=33,
+        msg_type=int(MsgType.PARTIAL),
+    )
+    fields.update(over)
+    return np.asarray(list(fields.values()), dtype=np.uint32)
+
+
+def test_legacy_10_word_decode_round_trips():
+    """A pre-topology 10-word request decodes to a single-axis descriptor,
+    and its re-encode (15 words, zeroed topology) decodes to the same one."""
+    words = _legacy_words()
+    desc = CollectiveDescriptor.decode(words)
+    assert desc.comm_id == 7 and desc.comm_size == 8
+    assert desc.coll_type == CollType.EXSCAN
+    assert desc.algo_type == "binomial_tree"
+    assert desc.rank == 3 and desc.root == 5
+    assert desc.operation == WireOp.MAX
+    assert desc.data_type == WireDType.BFLOAT16
+    assert desc.count == 33 and desc.msg_type == MsgType.PARTIAL
+    assert desc.axes == () and desc.split == ()
+    re = desc.encode()
+    assert re.shape == (_TOPO_WORDS,) and re.dtype == np.uint32
+    # legacy prefix preserved verbatim; topology tail zeroed
+    np.testing.assert_array_equal(re[:_LEGACY_WORDS], words)
+    np.testing.assert_array_equal(re[_LEGACY_WORDS:], np.zeros(5, np.uint32))
+    assert CollectiveDescriptor.decode(re) == desc
+
+
+@pytest.mark.parametrize("n_axes", [1, 2, 3])
+def test_topology_encode_decode_all_splits(n_axes):
+    """15-word round-trip for every axis count and every split permutation."""
+    sizes_by_n = {1: (8,), 2: (2, 4), 3: (2, 2, 2)}
+    sizes = sizes_by_n[n_axes]
+    for order in itertools.permutations(range(n_axes)):
+        desc = CollectiveDescriptor(
+            comm_size=int(np.prod(sizes)),
+            coll_type=CollType.ALLREDUCE,
+            algo_type="hillis_steele",
+            count=64,
+            axes=sizes,
+            split=order,
+        )
+        words = desc.encode()
+        assert words.shape == (_TOPO_WORDS,)
+        assert words[_LEGACY_WORDS] == n_axes
+        np.testing.assert_array_equal(
+            words[_LEGACY_WORDS + 1 : _LEGACY_WORDS + 1 + MAX_AXES],
+            np.asarray(
+                list(sizes) + [0] * (MAX_AXES - n_axes), np.uint32
+            ),
+        )
+        assert words[-1] == split_index(order)
+        back = CollectiveDescriptor.decode(words)
+        assert back == desc
+        assert back.axes == sizes and back.split == order
+
+
+def test_split_index_is_lexicographic_and_invertible():
+    for n in (1, 2, 3):
+        perms = list(itertools.permutations(range(n)))
+        for i, perm in enumerate(perms):
+            assert split_index(perm) == i
+            assert split_from_index(i, n) == perm
+    with pytest.raises(ValueError, match="not a permutation"):
+        split_index((0, 0))
+    with pytest.raises(ValueError, match="out of range"):
+        split_from_index(6, 3)
+
+
+@pytest.mark.parametrize("length", [0, 1, 9, 11, 14, 16, 32])
+def test_malformed_length_rejected_with_clear_error(length):
+    words = np.ones(length, dtype=np.uint32)
+    with pytest.raises(ValueError) as exc:
+        CollectiveDescriptor.decode(words)
+    msg = str(exc.value)
+    # the error must name both accepted lengths and the offending one
+    # (delimited match: "1" in "10" must not satisfy the length=1 case)
+    assert str(_LEGACY_WORDS) in msg and str(_TOPO_WORDS) in msg
+    assert f"got {length}" in msg
+
+
+def test_topology_words_internally_consistent_on_decode():
+    """A topology word vector whose sizes don't factor comm_size is rejected
+    by the descriptor invariant, not silently accepted."""
+    desc = CollectiveDescriptor(
+        comm_size=8, axes=(2, 4), count=4, coll_type=CollType.SCAN
+    )
+    words = desc.encode().copy()
+    words[1] = 9  # comm_size no longer equals prod(axes)
+    with pytest.raises(ValueError, match="factor"):
+        CollectiveDescriptor.decode(words)
