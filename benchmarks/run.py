@@ -13,6 +13,10 @@
   service_throughput            -- multi-tenant broker requests/sec and
                                    p50/p99 latency vs client count, with
                                    coalescing on/off
+  fusion_speedup                -- plan-optimizer fused vs unfused planned
+                                   collectives: communication rounds +
+                                   measured us + bitwise proof + profiler-
+                                   sourced per-schedule device latency
   roofline (report)             -- dry-run derived roofline tables
 
 Prints ``name,...,derived`` CSV sections. Run:
@@ -23,10 +27,13 @@ Prints ``name,...,derived`` CSV sections. Run:
 descriptor-cache proof + one 3D planned collective end-to-end with an
 asserted schedule-cache hit rate + a 2-step offloaded trainer on a 2x2 mesh
 asserted bitwise against the raw shard_map baseline + the service broker's
-coalesce/bitwise proof) — the CI regression gate for the offload subsystem.
+coalesce/bitwise proof + the plan-optimizer's fused-vs-unfused rounds/
+bitwise/device-latency proof) — the CI regression gate for the offload
+subsystem.
 
 ``--report-json`` writes the service-throughput stats to a JSON artifact
-(default ``BENCH_service.json`` next to this file) for the perf trajectory.
+(default ``BENCH_service.json`` next to this file) and the fusion stats to
+``BENCH_fusion.json`` for the perf trajectory.
 """
 
 import argparse
@@ -37,6 +44,7 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
 from benchmarks import (  # noqa: E402
+    fusion_speedup,
     offloaded_latency,
     report,
     scan_latency,
@@ -105,8 +113,23 @@ def main() -> None:
         )
         for row in service_throughput.smoke(stats_out=service_stats):
             print(row)
+        print()
+        print(
+            "# === Fusion smoke: plan-optimizer fused vs unfused "
+            "(rounds + bitwise + profiler-sourced device latency) ==="
+        )
+        print(
+            "fusion_speedup,coll,sizes,msg_bytes,raw_rounds,fused_rounds,"
+            "raw_us,fused_us,speedup,bitwise"
+        )
+        fusion_stats: list = []
+        for row in fusion_speedup.smoke(stats_out=fusion_stats):
+            print(row)
         if args.report_json:
             _write_report(Path(args.report_json), service_stats, "smoke")
+            fusion_speedup.write_report(
+                fusion_speedup.DEFAULT_REPORT_PATH, fusion_stats, "smoke"
+            )
         return
 
     print("# === Paper Fig. 4/5: host-visible scan latency (8 ranks) ===")
@@ -177,6 +200,22 @@ def main() -> None:
         print(row)
     if args.report_json:
         _write_report(Path(args.report_json), service_stats, "full")
+
+    print()
+    print("# === Fusion speedup: plan-optimizer fused vs unfused ===")
+    print(
+        "fusion_speedup,coll,sizes,msg_bytes,raw_rounds,fused_rounds,"
+        "raw_us,fused_us,speedup,bitwise"
+    )
+    fusion_stats: list = []
+    for row in fusion_speedup.run(
+        iters=3 if args.quick else 5, stats_out=fusion_stats
+    ):
+        print(row)
+    if args.report_json:
+        fusion_speedup.write_report(
+            fusion_speedup.DEFAULT_REPORT_PATH, fusion_stats, "full"
+        )
 
     print()
     print("# === Roofline tables (from dry-run artifacts) ===")

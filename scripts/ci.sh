@@ -12,8 +12,11 @@
 # trainer on a 2x2 CPU mesh with use_offload_engine=True, asserting the
 # step-2 dispatch is a plan-cache hit and that loss/grads/params are bitwise
 # equal to the raw shard_map baseline (plus planner-first remesh adoption),
-# and drives the multi-tenant broker, asserting coalesced dispatches are
-# bitwise equal to direct engine dispatch with a coalesce factor > 1.
+# drives the multi-tenant broker, asserting coalesced dispatches are
+# bitwise equal to direct engine dispatch with a coalesce factor > 1, and
+# proves the plan-optimizer pass pipeline: fused plans bitwise-equal to
+# unfused, fewer SCAN/EXSCAN communication rounds on multi-axis meshes, and
+# a profiler-sourced per-schedule device latency in the engine telemetry.
 # The service check (repro.testing.service_check) then exercises the broker
 # in driver mode on a real 2x2 mesh: 4 concurrent tenant streams, bitwise
 # equality, backpressure isolation, and registry split-winner inheritance.
@@ -38,6 +41,9 @@ grep -q "^trainer_offload_summary,bitwise_equal,1,step2_cache_hit,1," "$SMOKE_OU
   || { echo "CI FAIL: offloaded trainer smoke missing or not bitwise"; exit 1; }
 grep -q "^service_smoke_summary,bitwise_equal,1,coalesce_gt1,1," "$SMOKE_OUT" \
   || { echo "CI FAIL: service smoke missing, not bitwise, or not coalescing"; exit 1; }
+grep -q "^fusion_summary,bitwise_equal,1,rounds_reduced,1,device_latency,1," "$SMOKE_OUT" \
+  || { echo "CI FAIL: plan-optimizer smoke missing, fused plan regressed the bitwise check, or rounds/device-latency not reported"; exit 1; }
+echo "fusion speedup: $(grep '^fusion_summary,' "$SMOKE_OUT")"
 
 echo
 echo "=== multi-tenant service check (driver mode, 2x2 mesh) ==="

@@ -394,6 +394,78 @@ def invertible_doubling(backend: Backend, x: PyTree, op: AssocOp) -> PyTree:
     return hillis_steele(backend, x, op)
 
 
+def scan_total_schedule(
+    backend: Backend, x: PyTree, op: AssocOp, *, inclusive: bool = True
+) -> Tuple[PyTree, PyTree]:
+    """Fused scan + total: ``(prefix scan of x, full reduction of x)`` from
+    ONE schedule of ``ceil(log2 p) + 1`` rounds.
+
+    This is the planner's ``FUSED_SCAN_TOTAL`` phase — the software analogue
+    of the NetFPGA folding the scan's combine/forward/total steps into one
+    pass over the wire instead of running a scan round followed by a separate
+    allreduce round. Each doubling step carries two permutes in *opposite*
+    directions (full-duplex links carry both at once, the same accounting as
+    ``recursive_doubling``):
+
+      * ``prefix``  extends left  — rank r accumulates x[l..r], l doubling
+        toward 0 (plain hillis-steele invariant);
+      * ``suffix``  extends right — rank r accumulates x[r..u], u doubling
+        toward p-1 (the mirror image).
+
+    After ceil(log2 p) steps every rank holds the complete prefix AND the
+    complete suffix, so the total is one local combine away:
+    ``total_r = prefix[0..r] (+) suffix[r+1..p-1]`` (inclusive form; one
+    extra single-hop shift fetches suffix[r+1]) or
+    ``total_r = prefix[0..r-1] (+) suffix[r..p-1]`` (exclusive form; the
+    structural shift already happened on the way in, so no extra hop).
+    Unfused, the same pair of outputs costs ``2*ceil(log2 p)`` rounds
+    (scan + allreduce); fused it costs ``ceil(log2 p) + 1``.
+
+    Correct for any associative operator (non-commutative included: windows
+    only ever merge with *adjacent* windows, in rank order) and any p.
+    """
+    p = backend.p
+    if p == 1:
+        y = x if inclusive else op.identity_like(x)
+        return y, x
+    one = _ones_flag(backend)
+    if inclusive:
+        pre_v, pre_f = x, one
+    else:
+        # structural shift: rank r starts from x_{r-1}; rank 0 starts empty
+        pre_v, pre_f = backend.permute(
+            (x, one), [(i, i + 1) for i in range(p - 1)]
+        )
+    suf_v, suf_f = x, one
+    for k in range(num_steps(p)):
+        d = 1 << k
+        rv, rf = backend.permute(
+            (pre_v, pre_f), [(i, i + d) for i in range(p - d)]
+        )
+        pre_v, pre_f = _combine_lr(op, rv, rf, pre_v, pre_f)
+        sv, sf = backend.permute(
+            (suf_v, suf_f), [(i + d, i) for i in range(p - d)]
+        )
+        suf_v, suf_f = _combine_lr(op, suf_v, suf_f, sv, sf)
+    if inclusive:
+        # total = prefix[0..r] (+) suffix[r+1..]; last rank keeps its prefix
+        sv, sf = backend.permute(
+            (suf_v, suf_f), [(i + 1, i) for i in range(p - 1)]
+        )
+        total, _ = _combine_lr(op, pre_v, pre_f, sv, sf)
+        return pre_v, total
+    # exclusive: prefix covers [0..r-1], same-rank suffix covers [r..p-1]
+    total, _ = _combine_lr(op, pre_v, pre_f, suf_v, suf_f)
+    rank = backend.rank()
+    y = _bwhere(rank != 0, pre_v, op.identity_like(x))
+    return y, total
+
+
+def scan_total_step_count(p: int) -> int:
+    """Rounds of the fused schedule (the planner's cost-model alpha term)."""
+    return num_steps(p) + 1 if p > 1 else 0
+
+
 ALGORITHMS = {
     "sequential": sequential,
     "sequential_pipelined": sequential_pipelined,

@@ -17,8 +17,12 @@ permutation of the axis indices). A multi-axis descriptor names a *planned*
 hierarchical collective — the phase structure is derived from (coll_type,
 axes, split) by ``repro.offload.planner`` — while keeping the wire contract:
 the whole request, topology included, round-trips through ``encode``/
-``decode`` and cache-keys the compiled schedule. Legacy 10-word descriptors
-(no topology) decode as single-axis requests.
+``decode`` and cache-keys the compiled schedule. The 16th word is the
+``optimized`` flag: 1 iff the plan-optimizer pass pipeline
+(``repro.offload.passes``) runs for this request, so brokered, cached, and
+remote dispatches agree on the compiled schedule's shape. Legacy 10-word
+descriptors (no topology) decode as single-axis requests; 15-word
+descriptors (topology, pre-optimizer) decode with the flag off.
 """
 
 from __future__ import annotations
@@ -82,9 +86,11 @@ class WireDType(enum.IntEnum):
 #: most mesh axes a descriptor can encode (inner, outer, pod)
 MAX_AXES = 3
 
-#: encoded word counts: legacy single-axis vs topology-carrying
+#: encoded word counts: legacy single-axis, topology-carrying, and the
+#: optimizer-flagged layout (one extra flag word; see ``encode``)
 _LEGACY_WORDS = 10
 _TOPO_WORDS = _LEGACY_WORDS + MAX_AXES + 2  # n_axes + sizes + split index
+_OPT_WORDS = _TOPO_WORDS + 1                # + "optimized" flag word
 
 
 def split_index(order: "tuple[int, ...]") -> int:
@@ -145,8 +151,14 @@ class CollectiveDescriptor:
     msg_type: MsgType = MsgType.OFFLOAD_REQUEST
     axes: "tuple[int, ...]" = ()
     split: "tuple[int, ...]" = ()
+    optimized: bool = False
 
     def __post_init__(self):
+        if self.optimized and not self.axes:
+            raise ValueError(
+                "optimized flag requires a multi-axis topology (the plan "
+                "optimizer runs on planned collectives only)"
+            )
         if self.axes:
             if len(self.axes) > MAX_AXES:
                 raise ValueError(
@@ -192,7 +204,10 @@ class CollectiveDescriptor:
         """Pack to a uint32 word vector (round-trippable, logged by launch).
 
         Layout: the 10 legacy descriptor words, then [n_axes, size_0,
-        size_1, size_2, split_index] (zero-padded past n_axes).
+        size_1, size_2, split_index] (zero-padded past n_axes), then the
+        "optimized" flag word (1 iff the plan-optimizer pass pipeline runs
+        for this request — brokered and cached dispatches must agree on it,
+        so it travels on the wire like every other schedule-shaping field).
         """
         sizes = list(self.axes) + [0] * (MAX_AXES - len(self.axes))
         split = split_index(self.split) if self.axes else 0
@@ -211,6 +226,7 @@ class CollectiveDescriptor:
                 len(self.axes),
                 *sizes,
                 split,
+                int(self.optimized),
             ],
             dtype=np.uint32,
         )
@@ -218,17 +234,19 @@ class CollectiveDescriptor:
     @staticmethod
     def decode(words: np.ndarray) -> "CollectiveDescriptor":
         w = [int(v) for v in np.asarray(words, dtype=np.uint32)]
-        if len(w) not in (_LEGACY_WORDS, _TOPO_WORDS):
+        if len(w) not in (_LEGACY_WORDS, _TOPO_WORDS, _OPT_WORDS):
             raise ValueError(
-                f"descriptor must be {_LEGACY_WORDS} (legacy) or "
-                f"{_TOPO_WORDS} words; got {len(w)}"
+                f"descriptor must be {_LEGACY_WORDS} (legacy), "
+                f"{_TOPO_WORDS} (topology), or {_OPT_WORDS} (optimizer "
+                f"flag) words; got {len(w)}"
             )
         axes: "tuple[int, ...]" = ()
         split: "tuple[int, ...]" = ()
-        if len(w) == _TOPO_WORDS and w[_LEGACY_WORDS]:
+        if len(w) >= _TOPO_WORDS and w[_LEGACY_WORDS]:
             n = w[_LEGACY_WORDS]
             axes = tuple(w[_LEGACY_WORDS + 1 : _LEGACY_WORDS + 1 + n])
             split = split_from_index(w[_LEGACY_WORDS + 1 + MAX_AXES], n)
+        optimized = bool(w[_OPT_WORDS - 1]) if len(w) == _OPT_WORDS else False
         return CollectiveDescriptor(
             comm_id=w[0],
             comm_size=w[1],
@@ -242,4 +260,5 @@ class CollectiveDescriptor:
             msg_type=MsgType(w[9]),
             axes=axes,
             split=split,
+            optimized=optimized,
         )

@@ -253,6 +253,12 @@ def main() -> None:
         action="store_true",
         help="also measure planner axis-split winners per mesh shape",
     )
+    ap.add_argument(
+        "--fusion",
+        action="store_true",
+        help="also measure plan-optimizer fused-vs-unfused winners per "
+        "mesh shape (feeds make_descriptor's optimize='auto')",
+    )
     ap.add_argument("--out", default=str(DEFAULT_TABLE_PATH))
     ap.add_argument("--budget-s", type=float, default=60.0)
     ap.add_argument("--iters", type=int, default=5)
@@ -271,6 +277,15 @@ def main() -> None:
     )
     if args.splits:
         tune_splits(
+            iters=args.iters,
+            time_budget_s=args.budget_s,
+            cache=cache,
+            verbose=True,
+        )
+    if args.fusion:
+        from repro.offload import tune_fusion
+
+        tune_fusion(
             iters=args.iters,
             time_budget_s=args.budget_s,
             cache=cache,
@@ -295,6 +310,8 @@ def main() -> None:
         )
     if cache.split_winners:
         print(f"axis-split winners: {len(cache.split_winners)} shapes")
+    if cache.fusion_winners:
+        print(f"fusion winners: {len(cache.fusion_winners)} shapes")
     print(f"export {TUNING_TABLE_ENV}={out}  # to use it in later launches")
 
 

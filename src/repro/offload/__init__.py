@@ -27,6 +27,14 @@ from repro.offload.hierarchical import (
     flat_equivalent,
     sim_hierarchical_scan,
 )
+from repro.offload.passes import (
+    PASS_NAMES,
+    choose_optimization,
+    eliminate_dead_phases,
+    fuse_scan_total,
+    optimize_plan,
+    plan_comm_rounds,
+)
 from repro.offload.planner import (
     CollectivePlan,
     PhaseKind,
@@ -38,6 +46,12 @@ from repro.offload.planner import (
     plan_axis_order,
     plan_cost,
     plan_layout,
+    plan_layout_moves,
+)
+from repro.offload.profiling import (
+    DeviceTiming,
+    parse_device_us,
+    profile_offload,
 )
 from repro.offload.tuner import (
     DEFAULT_PAYLOADS,
@@ -46,10 +60,12 @@ from repro.offload.tuner import (
     autotune,
     time_planned_collective,
     time_sim_collective,
+    tune_fusion,
     tune_splits,
 )
 from repro.offload.tuning_cache import (
     TUNING_TABLE_ENV,
+    FusionMeasurement,
     Measurement,
     SplitMeasurement,
     TuningCache,
@@ -64,9 +80,12 @@ __all__ = [
     "DEFAULT_PAYLOADS",
     "DEFAULT_PS",
     "DEFAULT_TOPOLOGIES",
+    "DeviceTiming",
     "EngineTelemetry",
+    "FusionMeasurement",
     "Measurement",
     "OffloadEngine",
+    "PASS_NAMES",
     "PhaseKind",
     "PlanLayout",
     "PlanPhase",
@@ -75,18 +94,27 @@ __all__ = [
     "TuningCache",
     "autotune",
     "build_plan",
+    "choose_optimization",
     "deactivate",
     "dist_hierarchical_scan",
+    "eliminate_dead_phases",
     "flat_equivalent",
+    "fuse_scan_total",
     "load_default_table",
     "lower_sim",
     "lower_spmd",
+    "optimize_plan",
+    "parse_device_us",
     "plan_axis_order",
+    "plan_comm_rounds",
     "plan_cost",
     "plan_layout",
+    "plan_layout_moves",
+    "profile_offload",
     "sim_hierarchical_scan",
     "time_planned_collective",
     "time_sim_collective",
+    "tune_fusion",
     "tune_splits",
     "wire_dtype",
     "wire_op_id",

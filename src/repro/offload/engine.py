@@ -32,11 +32,20 @@ Three execution modes, mirroring the repo's backends:
 All five descriptor CollTypes dispatch through the same path: SCAN, EXSCAN,
 REDUCE, ALLREDUCE, BARRIER. Descriptors carrying a multi-axis topology
 (``axes`` + ``split``) compile through the collective planner
-(:mod:`repro.offload.planner`) instead of a flat single-axis schedule: the
-plan's phase list is derived from the descriptor, lowered through the same
-sim/spmd backend pair, and cached under the encoded words like every other
-request — in spmd mode ``axis_name`` is then a tuple naming the physical mesh
-axes in descriptor order.
+(:mod:`repro.offload.planner`): the plan's phase list is derived from the
+descriptor, run through the plan-optimizer pass pipeline when the
+descriptor's ``optimized`` flag is set (:mod:`repro.offload.passes` —
+SCAN+TOTAL fusion, dead-phase elimination, permute threading), lowered
+through the same sim/spmd backend pair, and cached under a fingerprint of
+the *optimized plan* rather than the raw words — descriptors whose plans
+converge after the passes (different ``comm_id``; ``(2,4)`` split ``(1,0)``
+vs ``(4,2)`` split ``(0,1)``; size-1 axes pruned) share one compiled
+schedule, so the optimizer shrinks compile count as well as round count. In
+spmd mode ``axis_name`` is a tuple naming the physical mesh axes in
+descriptor order. :meth:`OffloadEngine.profile_offload` additionally runs
+one dispatch under ``jax.profiler`` and feeds the device-side schedule time
+back into the telemetry (``device_latency_by_coll_us``), the
+measured-on-device latency source for driver/SPMD modes.
 """
 
 from __future__ import annotations
@@ -136,6 +145,12 @@ class EngineTelemetry:
     latency_by_coll: Dict[str, Tuple[float, int]] = dataclasses.field(
         default_factory=dict
     )
+    device_latency_by_coll: Dict[str, Tuple[float, int]] = dataclasses.field(
+        default_factory=dict
+    )
+    latency_source_by_coll: Dict[str, str] = dataclasses.field(
+        default_factory=dict
+    )
 
     def record_dispatch(self, coll: str, latency_s: Optional[float]) -> None:
         self.dispatches += 1
@@ -146,6 +161,30 @@ class EngineTelemetry:
             self.last_latency_s = latency_s
             tot, n = self.latency_by_coll.get(coll, (0.0, 0))
             self.latency_by_coll[coll] = (tot + latency_s, n + 1)
+            self.latency_source_by_coll.setdefault(coll, "wall")
+
+    def record_device_latency(
+        self, coll: str, latency_s: float, *, source: str = "profiler"
+    ) -> None:
+        """A per-schedule device timing from a profiler trace (or, when the
+        trace could not be parsed, the wall fallback — labeled as such).
+        This is the measured-on-device source behind ``latency_by_coll_us``:
+        the wall numbers include dispatch/transfer/sync, the profiler
+        numbers are the collective itself. The accumulated mean is never
+        mixed-source: the first trace-derived sample evicts any wall
+        fallbacks, and wall fallbacks never dilute a profiler-labeled mean.
+        """
+        prior = self.latency_source_by_coll.get(coll)
+        if source == "profiler":
+            if prior != "profiler":
+                self.device_latency_by_coll.pop(coll, None)
+            self.latency_source_by_coll[coll] = "profiler"
+        elif prior == "profiler":
+            return  # keep the device-only mean; drop the wall sample
+        elif prior is None:
+            self.latency_source_by_coll[coll] = source
+        tot, n = self.device_latency_by_coll.get(coll, (0.0, 0))
+        self.device_latency_by_coll[coll] = (tot + latency_s, n + 1)
 
     @property
     def hit_rate(self) -> float:
@@ -177,6 +216,11 @@ class EngineTelemetry:
                 coll: (tot / n) * 1e6 if n else 0.0
                 for coll, (tot, n) in self.latency_by_coll.items()
             },
+            "device_latency_by_coll_us": {
+                coll: (tot / n) * 1e6 if n else 0.0
+                for coll, (tot, n) in self.device_latency_by_coll.items()
+            },
+            "latency_source_by_coll": dict(self.latency_source_by_coll),
         }
 
 
@@ -203,6 +247,17 @@ class OffloadEngine:
 
     def __init__(self) -> None:
         self._cache: Dict[bytes, CompiledSchedule] = {}
+        # planned descriptors cache-key on the *optimized plan*, not the
+        # raw words: requests whose plans converge after the pass pipeline
+        # (different comm_id; (2,4) split (1,0) vs (4,2) split (0,1); size-1
+        # axes pruned away) share one compiled schedule, so fusion also
+        # shrinks compile count. _plan_memo maps normalized words -> plan;
+        # _fp_memo memoizes the plan fingerprint per (words, axis names)
+        # so a repeat dispatch is a dict lookup, not a rehash of the phase
+        # list; _plans stashes the plan under the final key for _compile.
+        self._plan_memo: Dict[bytes, Any] = {}
+        self._fp_memo: Dict[Tuple[bytes, Any], bytes] = {}
+        self._plans: Dict[bytes, Any] = {}
         self.telemetry = EngineTelemetry()
 
     # -- descriptor helpers ------------------------------------------------
@@ -216,10 +271,7 @@ class OffloadEngine:
         return CollectiveDescriptor.decode(np.asarray(descriptor))
 
     @staticmethod
-    def _cache_key(
-        desc: CollectiveDescriptor, axis_name: AxisSpec, mesh: Any = None
-    ) -> bytes:
-        normalized = desc.normalized()
+    def _mode_tag(axis_name: AxisSpec, mesh: Any = None) -> str:
         if axis_name is None:
             mode = "<sim>"
         elif isinstance(axis_name, str):
@@ -238,7 +290,88 @@ class OffloadEngine:
                 ).encode("utf-8")
             ).hexdigest()[:12]
             mode = f"driver[{shape}@{devs}]|{mode}"
+        return mode
+
+    @classmethod
+    def _cache_key(
+        cls, desc: CollectiveDescriptor, axis_name: AxisSpec, mesh: Any = None
+    ) -> bytes:
+        normalized = desc.normalized()
+        mode = cls._mode_tag(axis_name, mesh)
         return normalized.encode().tobytes() + b"|" + mode.encode("utf-8")
+
+    def _plan_for(self, desc: CollectiveDescriptor):
+        """The (optimized, when flagged) plan a multi-axis descriptor names
+        plus its normalized wire words, memoized on those words."""
+        words = desc.normalized().encode().tobytes()
+        plan = self._plan_memo.get(words)
+        if plan is None:
+            itemsize = jnp.dtype(wire_dtype(desc.data_type)).itemsize
+            payload_bytes = max(1, int(desc.count)) * itemsize
+            plan = planner.build_plan(
+                desc.coll_type,
+                desc.axes,
+                get_operator(wire_op_name(desc.operation)),
+                payload_bytes,
+                order=desc.split,
+                root=int(desc.root),
+            )
+            if desc.optimized:
+                from repro.offload import passes
+
+                plan = passes.optimize_plan(plan)
+            self._plan_memo[words] = plan
+        return plan, words
+
+    def _planned_cache_key(
+        self,
+        words: bytes,
+        plan,
+        axis_name: AxisSpec,
+        mesh: Any = None,
+    ) -> bytes:
+        """Key a planned request on everything its lowering reads — and
+        nothing more. In sim mode that is the logical structure alone; in
+        spmd/driver modes the physical axis names per logical level join
+        the fingerprint (two plans with one logical shape but different
+        splits bind levels to different named axes). The digest is a pure
+        function of (plan, names), so repeat dispatches resolve it from
+        ``_fp_memo`` without rehashing the phase list."""
+        names_l: Optional[Tuple[str, ...]] = None
+        if axis_name is not None:
+            names = (
+                (axis_name,)
+                if isinstance(axis_name, str)
+                else tuple(axis_name)
+            )
+            if len(names) == len(plan.sizes):
+                names_l = tuple(names[i] for i in plan.order)
+            else:  # malformed; let _compile raise with its clear error
+                names_l = names
+        digest = self._fp_memo.get((words, names_l))
+        if digest is None:
+            fp = repr(
+                (
+                    plan.coll.name,
+                    plan.op_name,
+                    plan.logical_sizes,
+                    plan.result,
+                    plan.optimized,
+                    names_l,
+                    tuple(
+                        (
+                            int(ph.kind), ph.level, ph.algorithm,
+                            ph.inclusive, ph.root, ph.src, ph.dst, ph.dst2,
+                            ph.guard_levels,
+                        )
+                        for ph in plan.phases
+                    ),
+                )
+            )
+            digest = hashlib.blake2s(fp.encode("utf-8")).digest()
+            self._fp_memo[(words, names_l)] = digest
+        mode = self._mode_tag(axis_name, mesh)
+        return b"plan|" + digest + b"|" + mode.encode("utf-8")
 
     def make_descriptor(
         self,
@@ -254,6 +387,7 @@ class OffloadEngine:
         count: Optional[int] = None,
         axes: Optional[Sequence[int]] = None,
         split: "str | Sequence[int]" = "auto",
+        optimize: "str | bool" = "auto",
     ) -> CollectiveDescriptor:
         """Build an offload request, resolving ``algorithm="auto"`` through
         the (tuning-table-aware) selector — the host-side half of the paper's
@@ -265,7 +399,12 @@ class OffloadEngine:
         a planned hierarchical collective: ``split="auto"`` asks the planner
         for the tuned logical axis order, and the resolved ``algo_type``
         names the innermost intra-phase schedule (per-phase algorithms are
-        re-derived from the plan at compile time).
+        re-derived from the plan at compile time). ``optimize`` controls the
+        plan-optimizer pass pipeline (``repro.offload.passes``): ``"auto"``
+        consults the measured fusion winner / cost model
+        (:func:`~repro.offload.passes.choose_optimization`), True/False
+        force it. The resolved flag is encoded on the wire (word 16) so
+        brokered and cached dispatches agree on whether passes ran.
         """
         if isinstance(coll, str):
             coll = CollType[coll.upper()]
@@ -277,9 +416,20 @@ class OffloadEngine:
         if p is None:
             raise ValueError("either p or axes is required")
         order: "tuple[int, ...]" = ()
+        optimized = False
         if axes is not None and len(axes) > 1:
+            if optimize == "auto":
+                from repro.offload import passes
+
+                optimized = passes.choose_optimization(
+                    coll, axes, payload_bytes, op
+                )
+            else:
+                optimized = bool(optimize)
             order = (
-                planner.plan_axis_order(coll, axes, payload_bytes, op)
+                planner.plan_axis_order(
+                    coll, axes, payload_bytes, op, optimize=optimized
+                )
                 if split == "auto"
                 else tuple(int(i) for i in split)
             )
@@ -315,6 +465,7 @@ class OffloadEngine:
             count=count,
             axes=axes if (axes is not None and len(axes) > 1) else (),
             split=order,
+            optimized=optimized,
         )
 
     # -- dispatch ----------------------------------------------------------
@@ -346,7 +497,16 @@ class OffloadEngine:
             axis_name = tuple(axis_name) or None
         if mesh is not None and axis_name is None:
             raise ValueError("driver mode (mesh=...) requires axis_name")
-        key = self._cache_key(desc, axis_name, mesh)
+        if len(desc.axes) > 1:
+            try:
+                plan, words = self._plan_for(desc)
+            except Exception:
+                self.telemetry.errors += 1
+                raise
+            key = self._planned_cache_key(words, plan, axis_name, mesh)
+            self._plans.setdefault(key, plan)
+        else:
+            key = self._cache_key(desc, axis_name, mesh)
         sched = self._cache.get(key)
         if sched is None:
             try:
@@ -379,13 +539,40 @@ class OffloadEngine:
         self.telemetry.record_dispatch(sched.coll, latency)
         return out
 
+    def profile_offload(
+        self,
+        descriptor: "CollectiveDescriptor | np.ndarray",
+        x: Optional[PyTree] = None,
+        *,
+        axis_name: AxisSpec = None,
+        mesh: Any = None,
+        warmup: int = 1,
+    ):
+        """Dispatch once under a ``jax.profiler`` trace and record the
+        device-side schedule time into the telemetry (the SPMD/driver-mode
+        latency story: the engine counts hits/misses inside ``shard_map``
+        and the profiler owns timing — this wires the profiler's numbers
+        back in). Returns a :class:`repro.offload.profiling.DeviceTiming`.
+        """
+        from repro.offload.profiling import profile_offload as _profile
+
+        return _profile(
+            self, descriptor, x, axis_name=axis_name, mesh=mesh,
+            warmup=warmup,
+        )
+
     def cache_size(self) -> int:
         return len(self._cache)
 
     def clear(self) -> None:
         # reset the gauge at clear time: a remesh-triggered clear must not
-        # keep reporting the pre-clear size until the next dispatch
+        # keep reporting the pre-clear size until the next dispatch. The
+        # plan memos clear too: a retune can change the per-phase
+        # algorithms (and the fused-vs-unfused choice) a plan compiles to.
         self._cache.clear()
+        self._plan_memo.clear()
+        self._fp_memo.clear()
+        self._plans.clear()
         self.telemetry.cache_size = 0
         self.telemetry.cache_clears += 1
 
@@ -422,8 +609,12 @@ class OffloadEngine:
             )
 
         if len(desc.axes) > 1:
-            fn = self._build_planned(desc, op, axis_name)
+            fn = self._build_planned(
+                desc, op, axis_name, plan=self._plans.get(key)
+            )
             algo = f"plan{desc.split}:{algo}"
+            if desc.optimized:
+                algo = f"opt:{algo}"
         elif axis_name is not None:
             one = axis_name
             if not isinstance(one, str):
@@ -505,19 +696,23 @@ class OffloadEngine:
 
     @staticmethod
     def _build_planned(
-        desc: CollectiveDescriptor, op: AssocOp, axis_name: AxisSpec
+        desc: CollectiveDescriptor,
+        op: AssocOp,
+        axis_name: AxisSpec,
+        plan,
     ) -> Callable[[PyTree], PyTree]:
-        """Lower a multi-axis descriptor through the collective planner."""
-        itemsize = jnp.dtype(wire_dtype(desc.data_type)).itemsize
-        payload_bytes = max(1, int(desc.count)) * itemsize
-        plan = planner.build_plan(
-            desc.coll_type,
-            desc.axes,
-            op,
-            payload_bytes,
-            order=desc.split,
-            root=int(desc.root),
-        )
+        """Lower a multi-axis descriptor through the collective planner.
+
+        ``plan`` is the dispatch path's already-built (and, when the
+        descriptor is flagged, pass-optimized) plan — ``offload`` stashes
+        it under the cache key before compiling, so there is exactly one
+        place plans are constructed (:meth:`_plan_for`).
+        """
+        if plan is None:
+            raise ValueError(
+                "planned compile without a stashed plan; dispatch through "
+                "offload(), which builds it via _plan_for"
+            )
         if axis_name is None:
             return jax.jit(planner.lower_sim(plan, op))
         if isinstance(axis_name, str) or len(axis_name) != len(desc.axes):

@@ -66,13 +66,15 @@ PyTree = Any
 
 
 class PhaseKind(enum.IntEnum):
-    """What one plan phase does. All but COMBINE span exactly one axis."""
+    """What one plan phase does. All but COMBINE/IDENTITY span one axis."""
 
     SCAN = 0      # intra-axis prefix (inclusive or exclusive)
     TOTAL = 1     # order-respecting allreduce along the axis (block totals)
     REDUCE = 2    # tree reduction to a root coordinate along the axis
     BARRIER = 3   # zero-payload fence along the axis
     COMBINE = 4   # local fold of a carry into a prefix, guarded at level 0
+    FUSED_SCAN_TOTAL = 5  # scan AND axis total from one schedule (passes)
+    IDENTITY = 6  # local: materialize the operator identity (passes)
 
 
 # coll kind each phase kind tunes against in the measured tables
@@ -87,11 +89,13 @@ _PHASE_COLL = {
 class PlanPhase:
     """One step of a CollectivePlan.
 
-    ``level`` indexes the *logical* axis the phase spans (COMBINE is local:
-    level is -1). ``src``/``dst`` name registers of the plan interpreter;
-    COMBINE reads ``src = (carry, local)`` and keeps ``local`` unchanged on
-    ranks whose coordinates are zero along every level in ``guard_levels``
-    (the ranks whose carry is empty).
+    ``level`` indexes the *logical* axis the phase spans (COMBINE and
+    IDENTITY are local: level is -1). ``src``/``dst`` name registers of the
+    plan interpreter; COMBINE reads ``src = (carry, local)`` and keeps
+    ``local`` unchanged on ranks whose coordinates are zero along every
+    level in ``guard_levels`` (the ranks whose carry is empty).
+    FUSED_SCAN_TOTAL writes two registers: ``dst`` receives the scan and
+    ``dst2`` the axis total, both from one communication schedule.
     """
 
     kind: PhaseKind
@@ -101,6 +105,7 @@ class PlanPhase:
     root: int = 0
     src: Tuple[str, ...] = ("x",)
     dst: str = "y"
+    dst2: str = ""
     guard_levels: Tuple[int, ...] = ()
 
 
@@ -120,6 +125,7 @@ class CollectivePlan:
     order: Tuple[int, ...]
     phases: Tuple[PlanPhase, ...]
     result: str = "y"
+    optimized: bool = False
 
     @property
     def logical_sizes(self) -> Tuple[int, ...]:
@@ -130,16 +136,35 @@ class CollectivePlan:
         return math.prod(self.sizes)
 
     def describe(self) -> str:
-        """One line per phase — the plan's schedule_trace analogue."""
-        lines = [
+        """One line per phase — the plan's schedule_trace analogue.
+
+        Optimized plans render their fused phases and ONE permute-chain line
+        for the whole plan (the layout moves the threaded interpreter makes)
+        instead of the implicit per-phase to-front/to-back pair, which is
+        what keeps ``planner_check`` output readable after the pass
+        pipeline has rewritten the phase list.
+        """
+        header = (
             f"{self.coll.name} over {self.sizes} split={self.order} "
             f"(logical {self.logical_sizes})"
-        ]
+        )
+        if self.optimized:
+            header += " [optimized]"
+        lines = [header]
         for ph in self.phases:
             if ph.kind == PhaseKind.COMBINE:
                 lines.append(
                     f"  combine {ph.src[0]} into {ph.src[1]} -> {ph.dst} "
                     f"(guard levels {ph.guard_levels})"
+                )
+            elif ph.kind == PhaseKind.IDENTITY:
+                lines.append(f"  identity {ph.src[0]} -> {ph.dst} (local)")
+            elif ph.kind == PhaseKind.FUSED_SCAN_TOTAL:
+                extra = "" if ph.inclusive else " exclusive"
+                lines.append(
+                    f"  fused_scan_total{extra} level {ph.level} "
+                    f"(p={self.logical_sizes[ph.level]}) [{ph.algorithm}] "
+                    f"{ph.src[0]} -> {ph.dst}, {ph.dst2}"
                 )
             else:
                 extra = "" if ph.inclusive else " exclusive"
@@ -148,7 +173,82 @@ class CollectivePlan:
                     f"(p={self.logical_sizes[ph.level]}) "
                     f"[{ph.algorithm}] {ph.src[0]} -> {ph.dst}"
                 )
+        if self.optimized:
+            moves = plan_layout_moves(self)
+            chain = (
+                " -> ".join(
+                    f"{reg}@{'nat' if lv is None else f'L{lv}'}"
+                    for reg, lv in moves
+                )
+                if moves
+                else "(none)"
+            )
+            lines.append(
+                f"  permute chain (once per plan, {len(moves)} moves): "
+                f"{chain}"
+            )
         return "\n".join(lines)
+
+
+def plan_layout_moves(plan: "CollectivePlan") -> Tuple[Tuple[str, Any], ...]:
+    """The per-plan permute chain: each ``(register, level)`` is one
+    ``moveaxis`` the threaded sim interpreter performs (``level`` is the
+    logical level moved to the front; ``None`` is the natural mesh order —
+    a fronted-to-fronted conversion goes via natural, so it renders as two
+    entries, exactly mirroring ``lower_sim``'s ``get_reg``).
+
+    The unoptimized interpreter fronts every phase operand and moves every
+    output straight back — one move per input plus one per output, always.
+    The optimized interpreter (``plan.optimized``) keeps each register in
+    its produced layout and converts lazily, *memoizing every view*, so a
+    register consumed twice in one layout pays its conversion once: the
+    shared logical<->physical permute chain is computed once per plan, not
+    once per phase. This function is the exact static form of that
+    bookkeeping, used by :meth:`CollectivePlan.describe` and the
+    pass-pipeline tests (for plans with ``optimized=False`` it reports the
+    per-phase front-and-back chain instead).
+    """
+    moves: list = []
+    views: Dict[str, set] = {}
+
+    def define(name: str, layout) -> None:
+        views[name] = {layout}
+
+    def fetch(name: str, want) -> None:
+        have = views.setdefault(name, {None})
+        if want in have:
+            return
+        if None not in have:
+            moves.append((name, None))
+            have.add(None)
+        if want is not None:
+            moves.append((name, want))
+            have.add(want)
+
+    for ph in plan.phases:
+        if ph.kind == PhaseKind.COMBINE:
+            fetch(ph.src[0], None)
+            fetch(ph.src[1], None)
+            define(ph.dst, None)
+        elif ph.kind == PhaseKind.IDENTITY:
+            fetch(ph.src[0], None)
+            define(ph.dst, None)
+        elif plan.optimized:
+            fetch(ph.src[0], ph.level)
+            define(ph.dst, ph.level)
+            if ph.kind == PhaseKind.FUSED_SCAN_TOTAL:
+                define(ph.dst2, ph.level)
+        else:
+            # _along_axis fronts the operand and moves every output back
+            # to natural immediately, with no view sharing
+            moves.append((ph.src[0], ph.level))
+            moves.append((ph.dst, None))
+            define(ph.dst, None)
+            if ph.kind == PhaseKind.FUSED_SCAN_TOTAL:
+                moves.append((ph.dst2, None))
+                define(ph.dst2, None)
+    fetch(plan.result, None)
+    return tuple(moves)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -320,6 +420,7 @@ def build_plan(
     root: int = 0,
     inclusive: bool = True,
     level_algorithms: Optional[Sequence[Optional[str]]] = None,
+    optimize: bool = False,
 ) -> CollectivePlan:
     """Build the N-level plan for one collective over one mesh shape.
 
@@ -335,6 +436,10 @@ def build_plan(
       level_algorithms: optional per-*logical-level* algorithm override
         (None or "auto" entries fall back to the selector); used by the
         legacy hierarchical wrappers.
+      optimize: run the plan-optimizer pass pipeline
+        (:func:`repro.offload.passes.optimize_plan`) over the built plan —
+        SCAN+TOTAL fusion, dead-phase elimination, permute threading. With
+        ``order="auto"`` the tuned split is also priced on optimized plans.
     """
     if isinstance(coll, str):
         coll = CollType[coll.upper()]
@@ -345,7 +450,9 @@ def build_plan(
     if any(s < 1 for s in sizes):
         raise ValueError(f"axis sizes must be positive: {sizes}")
     if order == "auto":
-        order = plan_axis_order(coll, sizes, payload_bytes, op)
+        order = plan_axis_order(
+            coll, sizes, payload_bytes, op, optimize=optimize
+        )
     order = tuple(int(i) for i in order)
     if sorted(order) != list(range(len(sizes))):
         raise ValueError(
@@ -417,7 +524,7 @@ def build_plan(
     else:
         raise ValueError(f"unknown coll_type {coll!r}")
 
-    return CollectivePlan(
+    plan = CollectivePlan(
         coll=coll,
         op_name=op.name,
         sizes=sizes,
@@ -425,6 +532,11 @@ def build_plan(
         phases=phases,
         result=result,
     )
+    if optimize:
+        from repro.offload.passes import optimize_plan
+
+        plan = optimize_plan(plan)
+    return plan
 
 
 def _unflatten(rank: int, logical_sizes: Sequence[int]) -> Tuple[int, ...]:
@@ -449,8 +561,14 @@ def plan_cost(
 ) -> float:
     """Predicted latency: sum of the per-phase alpha-beta-gamma estimates.
 
-    COMBINE phases are local (zero network cost); a REDUCE phase pays one
-    extra root-relocation hop on top of its tree schedule.
+    COMBINE and IDENTITY phases are local (zero network cost); a REDUCE
+    phase pays one extra root-relocation hop on top of its tree schedule. A
+    FUSED_SCAN_TOTAL phase is priced as its own schedule — ``log2(p)+1``
+    rounds carrying two payloads per doubling step — which is what lets the
+    tuner and ``plan_axis_order`` trade the fused form (roughly half the
+    rounds, one payload traversal) against the unfused pair (the alpha term
+    halves; the beta term gains one extra payload, so huge messages can
+    still prefer the unfused plan).
     """
     if model is None:
         tuning = get_active_tuning()
@@ -459,9 +577,29 @@ def plan_cost(
     logical = plan.logical_sizes
     total = 0.0
     for ph in plan.phases:
-        if ph.kind == PhaseKind.COMBINE:
+        if ph.kind in (PhaseKind.COMBINE, PhaseKind.IDENTITY):
             continue
         p_axis = logical[ph.level]
+        if ph.kind == PhaseKind.FUSED_SCAN_TOTAL:
+            if p_axis > 1:
+                # each doubling step is one full-duplex pairwise exchange
+                # (prefix forward, suffix back between the same pair) —
+                # priced like recursive_doubling's butterfly: one payload
+                # per step — plus the final single-hop suffix shift
+                lg = alg.num_steps(p_axis)
+                up_hops = sum(
+                    min(1 << i, p_axis - (1 << i)) if model.ring else 1 << i
+                    for i in range(lg)
+                )
+                steps = lg + 1.0
+                nbytes = (lg + 1) * payload_bytes
+                hops = up_hops + 1.0
+                total += (
+                    steps * model.alpha
+                    + nbytes * model.beta
+                    + hops * model.gamma
+                )
+            continue
         nbytes = 4 if ph.kind == PhaseKind.BARRIER else payload_bytes
         total += estimate_cost(ph.algorithm, p_axis, nbytes, model)
         if ph.kind == PhaseKind.REDUCE and p_axis > 1:
@@ -474,6 +612,8 @@ def plan_axis_order(
     sizes: Sequence[int],
     payload_bytes: int,
     op: "AssocOp | str" = "sum",
+    *,
+    optimize: bool = False,
 ) -> Tuple[int, ...]:
     """Choose the logical axis order (the split) for one topology.
 
@@ -481,7 +621,11 @@ def plan_axis_order(
     active tuning table rules when one exists for this (coll, sizes) at a
     nearby payload; otherwise every permutation is priced with
     :func:`plan_cost` under the fitted-or-static LinkModel. Ties keep the
-    physical order (identity split) for stability.
+    physical order (identity split) for stability. With ``optimize=True``
+    every candidate is run through the pass pipeline before pricing, so the
+    chosen split is the one that is cheapest *after* fusion and dead-phase
+    elimination — a split that exposes a fusible SCAN+TOTAL pair can beat
+    one that looks cheaper raw.
     """
     if isinstance(coll, str):
         coll = CollType[coll.upper()]
@@ -499,6 +643,9 @@ def plan_axis_order(
         if winner is not None and sorted(winner) == list(range(n)):
             return tuple(winner)
 
+    if optimize:
+        from repro.offload.passes import optimize_plan
+
     best: Optional[Tuple[float, int, Tuple[int, ...]]] = None
     identity = tuple(range(n))
     for perm in itertools.permutations(range(n)):
@@ -506,6 +653,8 @@ def plan_axis_order(
             coll, sizes, op, payload_bytes, order=perm,
             root=0, inclusive=True,
         )
+        if optimize:
+            plan = optimize_plan(plan)
         cost = plan_cost(plan, payload_bytes)
         key = (cost, 0 if perm == identity else 1, perm)
         if best is None or key < best:
@@ -548,11 +697,26 @@ def lower_sim(plan: CollectivePlan, op: "AssocOp | str | None" = None):
     is reshaped to the logical mesh shape, phases run along single mesh axes,
     and the output is flattened back — directly comparable (bitwise, given
     exact arithmetic) to the flat single-axis reference collective.
+
+    Interpreter layouts: the unoptimized path permutes every phase operand
+    to the front and back again (two ``moveaxis`` per phase). For an
+    *optimized* plan (``plan.optimized``, set by the pass pipeline) the
+    interpreter instead threads layouts: every register remembers which
+    logical level is currently fronted and converts lazily, only when a
+    consumer needs a different layout, memoizing each view — the shared
+    logical<->physical permute chain is computed once per plan, not once
+    per phase (``plan_layout_moves`` is the static form). COMBINE operands
+    are normalized to the natural mesh order first, because its guard mask
+    is built over the un-permuted logical mesh (the dataflow check that
+    makes permute elimination COMBINE-aware). Both interpreters compute
+    identical values (``moveaxis`` is exact), so optimization never changes
+    bits.
     """
     op = get_operator(plan.op_name if op is None else op)
     logical = plan.logical_sizes
     k = len(logical)
     p_total = plan.p
+    threaded = plan.optimized
 
     def to_mesh(tree: PyTree) -> PyTree:
         return jax.tree.map(
@@ -565,26 +729,56 @@ def lower_sim(plan: CollectivePlan, op: "AssocOp | str | None" = None):
         )
 
     def run(x: Optional[PyTree]) -> PyTree:
-        regs: Dict[str, PyTree] = {}
+        # register name -> {layout: view}; layout None is the natural mesh
+        # order, an int means that logical level is moved to axis 0
+        regs: Dict[str, Dict[Optional[int], PyTree]] = {}
+
+        def set_reg(name: str, tree: PyTree, layout: Optional[int]) -> None:
+            regs[name] = {layout: tree}
+
+        def get_reg(name: str, layout: Optional[int]) -> PyTree:
+            views = regs[name]
+            if layout in views:
+                return views[layout]
+            if None not in views:
+                lv, tree = next(iter(views.items()))
+                views[None] = jax.tree.map(
+                    lambda a: jnp.moveaxis(a, 0, lv), tree
+                )
+            if layout is None:
+                return views[None]
+            views[layout] = jax.tree.map(
+                lambda a: jnp.moveaxis(a, layout, 0), views[None]
+            )
+            return views[layout]
+
         if plan.coll == CollType.BARRIER:
-            regs["x"] = jnp.ones(logical, jnp.float32)
+            set_reg("x", jnp.ones(logical, jnp.float32), None)
         else:
-            regs["x"] = to_mesh(x)
+            set_reg("x", to_mesh(x), None)
         for ph in plan.phases:
             if ph.kind == PhaseKind.COMBINE:
-                carry, local = regs[ph.src[0]], regs[ph.src[1]]
-                mask = _zero_coord_mask(logical, ph.guard_levels)
-                regs[ph.dst] = alg._bwhere(
-                    mask, local, op.combine(carry, local)
-                )
+                carry = get_reg(ph.src[0], None)
+                local = get_reg(ph.src[1], None)
+                merged = op.combine(carry, local)
+                if ph.guard_levels:
+                    mask = _zero_coord_mask(logical, ph.guard_levels)
+                    merged = alg._bwhere(mask, local, merged)
+                set_reg(ph.dst, merged, None)
                 continue
-            src = regs[ph.src[0]]
+            if ph.kind == PhaseKind.IDENTITY:
+                set_reg(ph.dst, op.identity_like(get_reg(ph.src[0], None)), None)
+                continue
             p_axis = logical[ph.level]
             backend = alg.SimBackend(p_axis)
             if ph.kind == PhaseKind.SCAN:
                 fn = lambda t: sim_scan(  # noqa: E731
                     t, op, p_axis, algorithm=ph.algorithm,
                     inclusive=ph.inclusive,
+                )
+            elif ph.kind == PhaseKind.FUSED_SCAN_TOTAL:
+                fn = lambda t: alg.scan_total_schedule(  # noqa: E731
+                    backend, t, op, inclusive=ph.inclusive
                 )
             elif ph.kind == PhaseKind.TOTAL:
                 fn = lambda t: allreduce_schedule(  # noqa: E731
@@ -604,8 +798,22 @@ def lower_sim(plan: CollectivePlan, op: "AssocOp | str | None" = None):
                 )
             else:  # pragma: no cover - exhaustive
                 raise ValueError(f"unknown phase kind {ph.kind!r}")
-            regs[ph.dst] = _along_axis(src, ph.level, fn)
-        return to_flat(regs[plan.result])
+            if threaded:
+                out = fn(get_reg(ph.src[0], ph.level))
+                if ph.kind == PhaseKind.FUSED_SCAN_TOTAL:
+                    set_reg(ph.dst, out[0], ph.level)
+                    set_reg(ph.dst2, out[1], ph.level)
+                else:
+                    set_reg(ph.dst, out, ph.level)
+            else:
+                src = get_reg(ph.src[0], None)
+                out = _along_axis(src, ph.level, fn)
+                if ph.kind == PhaseKind.FUSED_SCAN_TOTAL:
+                    set_reg(ph.dst, out[0], None)
+                    set_reg(ph.dst2, out[1], None)
+                else:
+                    set_reg(ph.dst, out, None)
+        return to_flat(get_reg(plan.result, None))
 
     return run
 
@@ -640,17 +848,28 @@ def lower_spmd(
         for ph in plan.phases:
             if ph.kind == PhaseKind.COMBINE:
                 carry, local = regs[ph.src[0]], regs[ph.src[1]]
+                merged = op.combine(carry, local)
                 cond = None
                 for lv in ph.guard_levels:
                     z = lax.axis_index(names_l[lv]) == 0
                     cond = z if cond is None else (cond & z)
-                regs[ph.dst] = alg._bwhere(
-                    cond, local, op.combine(carry, local)
-                )
+                if cond is not None:
+                    merged = alg._bwhere(cond, local, merged)
+                regs[ph.dst] = merged
+                continue
+            if ph.kind == PhaseKind.IDENTITY:
+                regs[ph.dst] = op.identity_like(regs[ph.src[0]])
                 continue
             src = regs[ph.src[0]]
             name = names_l[ph.level]
             backend = alg.SpmdBackend(name, plan.logical_sizes[ph.level])
+            if ph.kind == PhaseKind.FUSED_SCAN_TOTAL:
+                y, t = alg.scan_total_schedule(
+                    backend, src, op, inclusive=ph.inclusive
+                )
+                regs[ph.dst] = y
+                regs[ph.dst2] = t
+                continue
             if ph.kind == PhaseKind.SCAN:
                 if ph.inclusive:
                     out = dist_scan(src, op, name, algorithm=ph.algorithm)

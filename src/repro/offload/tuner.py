@@ -168,11 +168,14 @@ def time_planned_collective(
     *,
     iters: int = 5,
     seed: int = 0,
+    optimized: bool = False,
 ) -> float:
     """Median wall-clock seconds of one whole planner-lowered collective on
-    the sim backend, for a fixed logical axis order."""
+    the sim backend, for a fixed logical axis order (``optimized=True``
+    times the pass-pipeline form of the same plan)."""
     import math
 
+    from repro.offload.passes import optimize_plan
     from repro.offload.planner import build_plan, lower_sim
 
     op = get_operator(op)
@@ -181,6 +184,8 @@ def time_planned_collective(
     rng = np.random.default_rng(seed)
     x = jnp.asarray(rng.normal(size=(p_total, n)).astype(np.float32))
     plan = build_plan(coll, sizes, op, payload_bytes, order=tuple(order))
+    if optimized:
+        plan = optimize_plan(plan)
     fused = jax.jit(lower_sim(plan, op))
     arg = None if coll.lower() == "barrier" else x
     out = fused(arg)
@@ -239,4 +244,57 @@ def tune_splits(
     if verbose and skipped:
         print(f"tune-split: time budget hit, skipped {skipped} points")
     _ = cache.split_winners
+    return cache
+
+
+def tune_fusion(
+    *,
+    topologies: Sequence[Sequence[int]] = DEFAULT_TOPOLOGIES,
+    payloads: Sequence[int] = (1024, 65536),
+    colls: Sequence[str] = ("scan", "exscan"),
+    op: "AssocOp | str" = "sum",
+    iters: int = 3,
+    time_budget_s: Optional[float] = None,
+    cache: Optional[TuningCache] = None,
+    verbose: bool = False,
+) -> TuningCache:
+    """Measure each planned collective with the plan-optimizer passes on
+    and off — the fused-vs-unfused half of the topology autotuner. The
+    recorded winners feed ``TuningCache.fusion_winner``, which
+    ``choose_optimization`` (and through it ``make_descriptor``'s
+    ``optimize="auto"``) consults before the plan cost model, so the
+    fusion decision is made per *measured* winner wherever one exists."""
+    op = get_operator(op)
+    cache = cache if cache is not None else TuningCache()
+    t_start = time.perf_counter()
+    skipped = 0
+    for sizes in topologies:
+        sizes = tuple(int(s) for s in sizes)
+        order = tuple(range(len(sizes)))
+        for payload in payloads:
+            for coll in colls:
+                # budget-check once per grid point: a half-measured pair
+                # would record a categorical "winner" that was never
+                # actually compared against its alternative
+                if (
+                    time_budget_s is not None
+                    and time.perf_counter() - t_start > time_budget_s
+                ):
+                    skipped += 1
+                    continue
+                for optimized in (False, True):
+                    t = time_planned_collective(
+                        coll, sizes, order, payload, op,
+                        iters=iters, optimized=optimized,
+                    )
+                    cache.record_fusion(coll, sizes, optimized, payload, t)
+                    if verbose:
+                        tag = "opt" if optimized else "raw"
+                        print(
+                            f"tune-fusion {coll:9s} {str(sizes):12s} "
+                            f"{tag} bytes={payload:8d} {t*1e6:10.1f}us"
+                        )
+    if verbose and skipped:
+        print(f"tune-fusion: time budget hit, skipped {skipped} points")
+    _ = cache.fusion_winners
     return cache

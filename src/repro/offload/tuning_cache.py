@@ -15,6 +15,9 @@ selection"; this module is where that intelligence persists. The autotuner
   * ``split_winners`` — the measured-fastest logical axis order per
     (coll, mesh shape, payload) — consulted by the collective planner's
     ``plan_axis_order`` before any model-predicted split;
+  * ``fusion_winners`` — the measured fused-vs-unfused decision per
+    (coll, mesh shape, payload) — consulted by the plan optimizer's
+    ``choose_optimization`` before the plan cost model;
 
 and round-trips the whole table through JSON so one tuning run serves every
 subsequent process on the same backend (`REPRO_TUNING_TABLE` env var or an
@@ -106,6 +109,35 @@ class SplitMeasurement:
         )
 
 
+@dataclasses.dataclass(frozen=True)
+class FusionMeasurement:
+    """One plan-optimizer sample: median seconds of a whole planned
+    collective with the pass pipeline on (``optimized=True``) or off, for
+    one (coll, mesh shape, payload). The reduction over these is the
+    measured fused-vs-unfused winner ``choose_optimization`` consults."""
+
+    coll: str
+    sizes: Tuple[int, ...]
+    optimized: bool
+    payload_bytes: int
+    seconds: float
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["sizes"] = list(self.sizes)
+        return d
+
+    @staticmethod
+    def from_json(d: dict) -> "FusionMeasurement":
+        return FusionMeasurement(
+            coll=str(d["coll"]),
+            sizes=tuple(int(v) for v in d["sizes"]),
+            optimized=bool(d["optimized"]),
+            payload_bytes=int(d["payload_bytes"]),
+            seconds=float(d["seconds"]),
+        )
+
+
 class TuningCache:
     """Measurements + winners + fitted model, with JSON persistence."""
 
@@ -113,9 +145,13 @@ class TuningCache:
         self.backend = backend or _backend_fingerprint()
         self.measurements: List[Measurement] = []
         self.split_measurements: List[SplitMeasurement] = []
+        self.fusion_measurements: List[FusionMeasurement] = []
         self._winners: Dict[Tuple[str, int, int], str] = {}
         self._split_winners: Dict[
             Tuple[str, Tuple[int, ...], int], Tuple[int, ...]
+        ] = {}
+        self._fusion_winners: Dict[
+            Tuple[str, Tuple[int, ...], int], bool
         ] = {}
         self._fitted: Optional[LinkModel] = None
 
@@ -148,6 +184,25 @@ class TuningCache:
             )
         )
         self._split_winners = {}  # invalidate
+
+    def record_fusion(
+        self,
+        coll: str,
+        sizes: Sequence[int],
+        optimized: bool,
+        payload_bytes: int,
+        seconds: float,
+    ) -> None:
+        self.fusion_measurements.append(
+            FusionMeasurement(
+                coll,
+                tuple(int(s) for s in sizes),
+                bool(optimized),
+                int(payload_bytes),
+                float(seconds),
+            )
+        )
+        self._fusion_winners = {}  # invalidate
 
     # -- merging -----------------------------------------------------------
 
@@ -187,8 +242,20 @@ class TuningCache:
             if cur is None or s.seconds < cur.seconds:
                 best_split[key] = s
         self.split_measurements = [best_split[k] for k in sorted(best_split)]
+        best_fusion: Dict[
+            Tuple[str, Tuple[int, ...], bool, int], FusionMeasurement
+        ] = {}
+        for f in (*self.fusion_measurements, *other.fusion_measurements):
+            key = (f.coll, f.sizes, f.optimized, f.payload_bytes)
+            cur = best_fusion.get(key)
+            if cur is None or f.seconds < cur.seconds:
+                best_fusion[key] = f
+        self.fusion_measurements = [
+            best_fusion[k] for k in sorted(best_fusion)
+        ]
         self._winners = {}
         self._split_winners = {}
+        self._fusion_winners = {}
         self._fitted = None
         return self
 
@@ -224,6 +291,50 @@ class TuningCache:
                 k: order for k, (_, order) in best.items()
             }
         return self._split_winners
+
+    @property
+    def fusion_winners(
+        self,
+    ) -> Dict[Tuple[str, Tuple[int, ...], int], bool]:
+        """(coll, sizes, payload) -> measured-fastest optimizer setting.
+
+        Ties break toward the optimized form: the pass pipeline never adds
+        communication rounds, so equal measurements favor fewer rounds."""
+        if not self._fusion_winners and self.fusion_measurements:
+            best: Dict[
+                Tuple[str, Tuple[int, ...], int], Tuple[float, int]
+            ] = {}
+            for m in self.fusion_measurements:
+                key = (m.coll, m.sizes, m.payload_bytes)
+                cand = (m.seconds, 0 if m.optimized else 1)
+                cur = best.get(key)
+                if cur is None or cand < cur:
+                    best[key] = cand
+            self._fusion_winners = {
+                k: flag == 0 for k, (_, flag) in best.items()
+            }
+        return self._fusion_winners
+
+    def fusion_winner(
+        self, coll: str, sizes: Sequence[int], payload_bytes: int
+    ) -> Optional[bool]:
+        """Measured fused-vs-unfused winner for this exact mesh shape at
+        the nearest measured payload (log2 distance), or None when the
+        shape was never fusion-tuned — ``choose_optimization`` then falls
+        back to the plan cost model."""
+        sizes = tuple(int(s) for s in sizes)
+        best: Optional[Tuple[float, bool]] = None
+        for (c, gs, gm), flag in self.fusion_winners.items():
+            if c != coll or gs != sizes:
+                continue
+            dist = abs(
+                math.log2(max(payload_bytes, 1)) - math.log2(max(gm, 1))
+            )
+            if best is None or dist < best[0]:
+                best = (dist, flag)
+        if best is None or best[0] > 4 * _MAX_GRID_DISTANCE:
+            return None
+        return best[1]
 
     def fitted_model(self) -> Optional[LinkModel]:
         """Least-squares (alpha, beta, gamma) over the inclusive-scan
@@ -304,6 +415,9 @@ class TuningCache:
             "split_measurements": [
                 m.to_json() for m in self.split_measurements
             ],
+            "fusion_measurements": [
+                m.to_json() for m in self.fusion_measurements
+            ],
             "winners": [
                 {"coll": c, "p": p, "payload_bytes": m, "algo": algo}
                 for (c, p, m), algo in sorted(self.winners.items())
@@ -337,6 +451,8 @@ class TuningCache:
             cache.measurements.append(Measurement.from_json(m))
         for m in d.get("split_measurements", []):
             cache.split_measurements.append(SplitMeasurement.from_json(m))
+        for m in d.get("fusion_measurements", []):
+            cache.fusion_measurements.append(FusionMeasurement.from_json(m))
         f = d.get("fitted")
         if f is not None:
             cache._fitted = LinkModel(

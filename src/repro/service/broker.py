@@ -470,6 +470,17 @@ class DescriptorBroker:
         desc = reqs[0].desc
         barrier = desc.coll_type == CollType.BARRIER
         try:
+            # the optimized flag shapes the compiled schedule, so a fused
+            # group must agree on it. Normal grouping guarantees this (the
+            # flag travels in the normalized words the group key hashes);
+            # the check guards direct/manual dispatch paths.
+            flags = {bool(r.desc.optimized) for r in reqs}
+            if len(flags) > 1:
+                raise ValueError(
+                    "cannot coalesce requests with mixed plan-optimizer "
+                    "flags: optimized and unoptimized descriptors compile "
+                    "different schedules"
+                )
             if barrier or len(reqs) == 1:
                 out = self.engine.offload(
                     desc, reqs[0].payload,

@@ -32,7 +32,12 @@ from jax.sharding import Mesh, PartitionSpec as P  # noqa: E402
 
 from repro.compat import shard_map  # noqa: E402
 from repro.core import SSD, sim_barrier, sim_reduce, sim_scan  # noqa: E402
-from repro.offload import OffloadEngine, plan_layout  # noqa: E402
+from repro.offload import (  # noqa: E402
+    OffloadEngine,
+    build_plan,
+    optimize_plan,
+    plan_layout,
+)
 from repro.sharding.specs import plan_spec  # noqa: E402
 
 AXIS_NAMES = ("pod", "outer", "inner")
@@ -69,6 +74,13 @@ def main() -> None:
 
     x = rng.integers(-4, 5, size=(ptotal, n)).astype(np.float32)
     xj = jnp.asarray(x)
+
+    # the plan trace, raw and optimized — describe() must stay readable
+    # after the pass pipeline rewrites the phase list (fused phases render
+    # with both outputs, the permute chain renders once per plan)
+    plan = build_plan("SCAN", axes, "sum", n * 4, order=(0, 1, 2))
+    print(plan.describe())
+    print(optimize_plan(plan).describe())
 
     # SCAN / EXSCAN (identity split): bitwise vs the flat reference
     for coll, inclusive in (("SCAN", True), ("EXSCAN", False)):

@@ -123,7 +123,11 @@ def bitwise_scenario(steps: int, bench_iters: int) -> None:
         )
         bitwise &= same
         if s == 0:
-            check("step1 dispatches compile (miss)", d_miss > 0 and d_hit == 0)
+            # step 1 must compile — but the plan-keyed cache may already
+            # serve hits within the step: descriptors whose optimized
+            # plans converge (e.g. the gradient and metric-mean ALLREDUCE
+            # over the same axes) legitimately share one schedule
+            check("step1 dispatches compile (miss)", d_miss > 0)
         else:
             step2_hit &= d_miss == 0 and d_hit > 0
         print(

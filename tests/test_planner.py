@@ -379,7 +379,7 @@ def test_descriptor_topology_roundtrip():
         split=(1, 2, 0),
     )
     assert CollectiveDescriptor.decode(d.encode()) == d
-    assert len(d.encode()) == 15
+    assert len(d.encode()) == 16
 
 
 def test_descriptor_legacy_ten_word_decode():
@@ -419,11 +419,23 @@ def test_engine_planned_dispatch_and_cache():
     np.testing.assert_array_equal(out, want)
     assert (eng.telemetry.hits, eng.telemetry.misses) == (1, 1)
     assert eng.telemetry.snapshot()["cache_size"] == 1
-    # a different split is a different compiled plan
+    # the cache keys on the plan, not the words: a reversed split of the
+    # symmetric 2x2x2 mesh yields the identical logical plan -> cache HIT
     other = dataclasses.replace(desc, split=tuple(reversed(desc.split)))
     eng.offload(other, x)
-    assert eng.telemetry.misses == 2
-    assert eng.telemetry.snapshot()["cache_size"] == 2
+    assert (eng.telemetry.hits, eng.telemetry.misses) == (2, 1)
+    assert eng.telemetry.snapshot()["cache_size"] == 1
+    # a split that changes the logical shape is a different compiled plan
+    d24 = eng.make_descriptor(
+        "SCAN", axes=(2, 4), payload_bytes=24, op="sum", split=(0, 1)
+    )
+    d42 = dataclasses.replace(
+        d24, axes=(4, 2), split=(0, 1)  # logical (2, 4) -> (4, 2): distinct
+    )
+    eng.offload(d24, x)
+    eng.offload(d42, x)
+    assert eng.telemetry.misses == 3
+    assert eng.telemetry.snapshot()["cache_size"] == 3
 
 
 def test_engine_planned_all_colltypes_match_flat():

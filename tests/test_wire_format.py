@@ -1,8 +1,9 @@
 """Descriptor wire-format compatibility tests: the 10-word legacy layout,
-the 15-word topology layout for every 1-3-axis split, and malformed-length
-rejection. The wire words are the service's request format — every broker
-submission round-trips through them — so the layout is a compatibility
-contract, not an implementation detail."""
+the 15-word topology layout for every 1-3-axis split, the 16-word
+optimizer-flag layout, and malformed-length rejection. The wire words are
+the service's request format — every broker submission round-trips through
+them — so the layout is a compatibility contract, not an implementation
+detail."""
 
 import itertools
 
@@ -12,6 +13,7 @@ import pytest
 from repro.core import CollType, CollectiveDescriptor
 from repro.core.packet import (
     _LEGACY_WORDS,
+    _OPT_WORDS,
     _TOPO_WORDS,
     MAX_AXES,
     MsgType,
@@ -21,7 +23,9 @@ from repro.core.packet import (
     split_index,
 )
 
-assert _LEGACY_WORDS == 10 and _TOPO_WORDS == 15, "wire layout changed"
+assert _LEGACY_WORDS == 10 and _TOPO_WORDS == 15 and _OPT_WORDS == 16, (
+    "wire layout changed"
+)
 
 
 def _legacy_words(**over):
@@ -37,7 +41,8 @@ def _legacy_words(**over):
 
 def test_legacy_10_word_decode_round_trips():
     """A pre-topology 10-word request decodes to a single-axis descriptor,
-    and its re-encode (15 words, zeroed topology) decodes to the same one."""
+    and its re-encode (16 words, zeroed topology + flag tail) decodes to
+    the same one."""
     words = _legacy_words()
     desc = CollectiveDescriptor.decode(words)
     assert desc.comm_id == 7 and desc.comm_size == 8
@@ -48,17 +53,20 @@ def test_legacy_10_word_decode_round_trips():
     assert desc.data_type == WireDType.BFLOAT16
     assert desc.count == 33 and desc.msg_type == MsgType.PARTIAL
     assert desc.axes == () and desc.split == ()
+    assert desc.optimized is False
     re = desc.encode()
-    assert re.shape == (_TOPO_WORDS,) and re.dtype == np.uint32
-    # legacy prefix preserved verbatim; topology tail zeroed
+    assert re.shape == (_OPT_WORDS,) and re.dtype == np.uint32
+    # legacy prefix preserved verbatim; topology + flag tail zeroed
     np.testing.assert_array_equal(re[:_LEGACY_WORDS], words)
-    np.testing.assert_array_equal(re[_LEGACY_WORDS:], np.zeros(5, np.uint32))
+    np.testing.assert_array_equal(re[_LEGACY_WORDS:], np.zeros(6, np.uint32))
     assert CollectiveDescriptor.decode(re) == desc
 
 
 @pytest.mark.parametrize("n_axes", [1, 2, 3])
-def test_topology_encode_decode_all_splits(n_axes):
-    """15-word round-trip for every axis count and every split permutation."""
+@pytest.mark.parametrize("optimized", [False, True])
+def test_topology_encode_decode_all_splits(n_axes, optimized):
+    """16-word round-trip for every axis count, split permutation, and
+    optimizer-flag setting; the 15-word prefix still decodes (flag off)."""
     sizes_by_n = {1: (8,), 2: (2, 4), 3: (2, 2, 2)}
     sizes = sizes_by_n[n_axes]
     for order in itertools.permutations(range(n_axes)):
@@ -69,9 +77,10 @@ def test_topology_encode_decode_all_splits(n_axes):
             count=64,
             axes=sizes,
             split=order,
+            optimized=optimized,
         )
         words = desc.encode()
-        assert words.shape == (_TOPO_WORDS,)
+        assert words.shape == (_OPT_WORDS,)
         assert words[_LEGACY_WORDS] == n_axes
         np.testing.assert_array_equal(
             words[_LEGACY_WORDS + 1 : _LEGACY_WORDS + 1 + MAX_AXES],
@@ -79,10 +88,29 @@ def test_topology_encode_decode_all_splits(n_axes):
                 list(sizes) + [0] * (MAX_AXES - n_axes), np.uint32
             ),
         )
-        assert words[-1] == split_index(order)
+        assert words[_TOPO_WORDS - 1] == split_index(order)
+        assert words[-1] == int(optimized)
         back = CollectiveDescriptor.decode(words)
         assert back == desc
         assert back.axes == sizes and back.split == order
+        assert back.optimized is optimized
+        # the 15-word (pre-optimizer) prefix keeps decoding, flag off
+        legacy_topo = CollectiveDescriptor.decode(words[:_TOPO_WORDS])
+        assert legacy_topo.axes == sizes and legacy_topo.split == order
+        assert legacy_topo.optimized is False
+
+
+def test_optimized_flag_requires_topology():
+    with pytest.raises(ValueError, match="multi-axis"):
+        CollectiveDescriptor(comm_size=8, optimized=True)
+    # and the flag survives normalization (it shapes the schedule, so the
+    # engine cache key and the broker group key must both see it)
+    desc = CollectiveDescriptor(
+        comm_size=8, axes=(2, 4), count=4, optimized=True, rank=3,
+        msg_type=MsgType.PARTIAL,
+    )
+    norm = desc.normalized()
+    assert norm.optimized is True and norm.rank == 0
 
 
 def test_split_index_is_lexicographic_and_invertible():
@@ -97,15 +125,16 @@ def test_split_index_is_lexicographic_and_invertible():
         split_from_index(6, 3)
 
 
-@pytest.mark.parametrize("length", [0, 1, 9, 11, 14, 16, 32])
+@pytest.mark.parametrize("length", [0, 1, 9, 11, 14, 17, 32])
 def test_malformed_length_rejected_with_clear_error(length):
     words = np.ones(length, dtype=np.uint32)
     with pytest.raises(ValueError) as exc:
         CollectiveDescriptor.decode(words)
     msg = str(exc.value)
-    # the error must name both accepted lengths and the offending one
+    # the error must name all accepted lengths and the offending one
     # (delimited match: "1" in "10" must not satisfy the length=1 case)
     assert str(_LEGACY_WORDS) in msg and str(_TOPO_WORDS) in msg
+    assert str(_OPT_WORDS) in msg
     assert f"got {length}" in msg
 
 
