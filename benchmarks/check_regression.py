@@ -1,0 +1,189 @@
+"""Benchmark regression gate: fresh BENCH artifacts vs committed baselines.
+
+``scripts/ci.sh`` snapshots the committed ``BENCH_fusion.json`` /
+``BENCH_service.json`` *before* ``benchmarks.run --smoke`` rewrites them,
+then runs this check on the (baseline, fresh) pairs. Three failure modes:
+
+  1. **Lost rows** — a (coll, sizes, payload) fusion grid point or a
+     (clients, coalesce) service configuration present in the baseline is
+     missing from the fresh report. A benchmark silently shrinking its
+     grid would otherwise look like a pass.
+  2. **Lost proofs** — a fusion row whose ``bitwise`` flag was true goes
+     false, rounds increase on a previously-reduced row, or a coalescing
+     service configuration stops coalescing (factor drops to <= 1).
+  3. **Latency drift** — a measured latency grows by more than
+     ``--max-drift`` (default 2.0x) over the baseline. Timing in CI is
+     noisy, so the bar is deliberately loose: 2x is a real regression,
+     not jitter. Improvements never fail.
+
+Prints one ``regression_check,...`` CSV row per comparison and ``ALL-OK``
+iff everything passed (exit code 1 otherwise), matching the repo's other
+check modules so ``scripts/ci.sh`` can grep it.
+
+Usage:
+  python -m benchmarks.check_regression \
+      --baseline-fusion OLD_fusion.json --fusion benchmarks/BENCH_fusion.json \
+      --baseline-service OLD_service.json --service benchmarks/BENCH_service.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+_FAILED = False
+
+
+def _fail(msg: str) -> None:
+    global _FAILED
+    _FAILED = True
+    print(f"REGRESSION: {msg}")
+
+
+def _load(path: Optional[str]) -> Optional[Dict]:
+    if not path:
+        return None
+    p = Path(path)
+    if not p.exists():
+        _fail(f"report {p} does not exist")
+        return None
+    try:
+        return json.loads(p.read_text())
+    except ValueError as e:
+        _fail(f"report {p} is not valid JSON: {e}")
+        return None
+
+
+def _drift_ok(base_us: float, new_us: float, max_drift: float) -> bool:
+    if base_us <= 0.0:
+        return True  # no baseline signal to drift from
+    return new_us <= base_us * max_drift
+
+
+def check_fusion(
+    base: Dict, new: Dict, max_drift: float, *, require_per_round: bool
+) -> None:
+    by_key: Dict[Tuple, Dict] = {
+        (r["coll"], tuple(r["sizes"]), r["payload_bytes"]): r
+        for r in new.get("grid", [])
+    }
+    for r in base.get("grid", []):
+        key = (r["coll"], tuple(r["sizes"]), r["payload_bytes"])
+        label = f"{key[0]},{'x'.join(map(str, key[1]))},{key[2]}"
+        nr = by_key.get(key)
+        if nr is None:
+            _fail(f"fusion grid row lost: {label}")
+            continue
+        if r.get("bitwise") and not nr.get("bitwise"):
+            _fail(f"fusion bitwise proof lost: {label}")
+        if nr.get("fused_rounds", 0) > r.get("fused_rounds", 0):
+            _fail(
+                f"fusion rounds regressed: {label} "
+                f"{r['fused_rounds']} -> {nr['fused_rounds']}"
+            )
+        ok = _drift_ok(r.get("fused_us", 0.0), nr.get("fused_us", 0.0),
+                       max_drift)
+        if not ok:
+            _fail(
+                f"fusion latency drift > {max_drift}x: {label} "
+                f"{r['fused_us']:.1f}us -> {nr['fused_us']:.1f}us"
+            )
+        print(
+            f"regression_check,fusion,{label},"
+            f"bitwise,{int(bool(nr.get('bitwise')))},"
+            f"fused_us,{nr.get('fused_us', 0.0):.1f},"
+            f"baseline_us,{r.get('fused_us', 0.0):.1f},ok,{int(ok)}"
+        )
+    for coll, d in base.get("device_latency", {}).items():
+        nd = new.get("device_latency", {}).get(coll)
+        if nd is None:
+            _fail(f"fusion device-latency row lost: {coll}")
+        elif d.get("source") == "profiler" and nd.get("source") != "profiler":
+            _fail(
+                f"fusion device latency degraded to wall clock: {coll} "
+                f"(was profiler-sourced)"
+            )
+    if require_per_round and not new.get("per_round"):
+        _fail("fusion report has no per_round attribution section")
+
+
+def check_service(base: Dict, new: Dict, max_drift: float) -> None:
+    by_key: Dict[Tuple, Dict] = {
+        (r["clients"], r["coalesce"]): r for r in new.get("stats", [])
+    }
+    for r in base.get("stats", []):
+        key = (r["clients"], r["coalesce"])
+        label = f"clients={key[0]},coalesce={key[1]}"
+        nr = by_key.get(key)
+        if nr is None:
+            _fail(f"service configuration lost: {label}")
+            continue
+        if (
+            r["coalesce"]
+            and r.get("coalesce_factor", 0.0) > 1.0
+            and nr.get("coalesce_factor", 0.0) <= 1.0
+        ):
+            _fail(
+                f"service stopped coalescing: {label} factor "
+                f"{r['coalesce_factor']:.2f} -> "
+                f"{nr.get('coalesce_factor', 0.0):.2f}"
+            )
+        ok = _drift_ok(r.get("p50_us", 0.0), nr.get("p50_us", 0.0), max_drift)
+        if not ok:
+            _fail(
+                f"service p50 drift > {max_drift}x: {label} "
+                f"{r['p50_us']:.1f}us -> {nr['p50_us']:.1f}us"
+            )
+        print(
+            f"regression_check,service,{label},"
+            f"coalesce_factor,{nr.get('coalesce_factor', 0.0):.2f},"
+            f"p50_us,{nr.get('p50_us', 0.0):.1f},"
+            f"baseline_us,{r.get('p50_us', 0.0):.1f},ok,{int(ok)}"
+        )
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline-fusion", help="committed BENCH_fusion.json")
+    ap.add_argument("--fusion", help="freshly written BENCH_fusion.json")
+    ap.add_argument("--baseline-service", help="committed BENCH_service.json")
+    ap.add_argument("--service", help="freshly written BENCH_service.json")
+    ap.add_argument(
+        "--max-drift", type=float, default=2.0,
+        help="fail when a latency grows past this factor (default 2.0)",
+    )
+    ap.add_argument(
+        "--require-per-round", action="store_true",
+        help="fail when the fresh fusion report lacks a per_round section",
+    )
+    args = ap.parse_args(argv)
+    if not args.baseline_fusion and not args.baseline_service:
+        ap.error("nothing to check; pass --baseline-fusion/--baseline-service")
+    if args.baseline_fusion:
+        base = _load(args.baseline_fusion)
+        new = _load(args.fusion or args.baseline_fusion)
+        if base is not None and new is not None:
+            check_fusion(
+                base, new, args.max_drift,
+                require_per_round=args.require_per_round,
+            )
+    if args.baseline_service:
+        base = _load(args.baseline_service)
+        new = _load(args.service or args.baseline_service)
+        if base is not None and new is not None:
+            check_service(base, new, args.max_drift)
+    print(
+        f"check_regression_summary,ok,{int(not _FAILED)},"
+        f"max_drift,{args.max_drift}"
+    )
+    if _FAILED:
+        return 1
+    print("ALL-OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

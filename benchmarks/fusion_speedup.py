@@ -11,16 +11,28 @@ optimized descriptors through ``OffloadEngine.profile_offload`` so the
 reported latency includes a measured (profiler-sourced) per-schedule device
 time from ``EngineTelemetry.snapshot()`` — not just the cost model.
 
+A third section answers the ROADMAP wall-clock question *where does the
+per-round constant live*: each plan is re-lowered through the **traced
+eager interpreter** (``lower_sim(plan, traced=True)`` under a collecting
+:mod:`repro.obs.tracing` tracer), whose backend blocks after every
+``permute`` — so each ``round`` span's duration is one round's real host
+dispatch cost. The breakdown ranks rounds per (coll, mesh, raw|fused) and
+names the top-cost round, turning the wall-clock mystery into an ordered
+list.
+
 CSV sections:
   fusion_speedup,coll,sizes,msg_bytes,raw_rounds,fused_rounds,raw_us,fused_us,speedup,bitwise
   fusion_device,coll,sizes,device_us,wall_us,source,events
+  fusion_per_round,coll,sizes,msg_bytes,variant,phase,round,dur_us
+  fusion_per_round_top,coll,sizes,variant,phase,round,dur_us,total,T
   fusion_summary,bitwise_equal,B,rounds_reduced,R,device_latency,D,mean_speedup,S
 
 ``--report-json`` (default ``benchmarks/BENCH_fusion.json``) writes the
-grid + device timings + summary for the perf trajectory; ``scripts/ci.sh``
-gates on the summary row: the fused plan must never regress the unfused
-bitwise check, and SCAN/EXSCAN must need fewer rounds on every benched
-multi-axis mesh.
+grid + device timings + per-round attribution + summary for the perf
+trajectory; ``--per-round`` runs only the span-derived attribution and
+merges it into the existing report. ``scripts/ci.sh`` gates on the summary
+row: the fused plan must never regress the unfused bitwise check, and
+SCAN/EXSCAN must need fewer rounds on every benched multi-axis mesh.
 """
 
 from __future__ import annotations
@@ -69,6 +81,109 @@ def _time_fn(fn, arg, iters: int) -> float:
         times.append(time.perf_counter() - t0)
     times.sort()
     return times[len(times) // 2]
+
+
+def _per_round_profile(plan, x, iters: int) -> List[Dict]:
+    """Median per-round host latency from the traced eager interpreter.
+
+    ``lower_sim(plan, traced=True)`` runs under a private collecting
+    tracer, so every backend ``permute`` emits a ``round`` span whose
+    duration (the backend blocks on the permuted result) is that round's
+    host dispatch cost. One warmup run keeps primitive compilation out of
+    the samples; the reported number is the per-round median over
+    ``iters`` runs.
+    """
+    from repro.obs import tracing as obs_tracing
+
+    fn = lower_sim(plan, traced=True)
+    samples: Dict[Tuple[str, int], List[float]] = {}
+    order: List[Tuple[str, int]] = []
+    with obs_tracing.tracing(obs_tracing.Tracer()) as tracer:
+        fn(x)  # warmup
+        for _ in range(max(1, iters)):
+            tracer.clear()
+            fn(x)
+            for s in tracer.spans():
+                if s.cat != "round":
+                    continue
+                key = (str(s.args.get("phase")), int(s.args.get("round", 0)))
+                if key not in samples:
+                    samples[key] = []
+                    order.append(key)
+                samples[key].append(s.dur_us)
+    rounds: List[Dict] = []
+    for phase, rnd in order:
+        durs = sorted(samples[(phase, rnd)])
+        rounds.append(
+            {"phase": phase, "round": rnd, "dur_us": durs[len(durs) // 2]}
+        )
+    return rounds
+
+
+def per_round(
+    *,
+    topologies: Sequence[Tuple[int, ...]] = DEFAULT_TOPOLOGIES,
+    payloads: Sequence[int] = (1024,),
+    colls: Sequence[str] = DEFAULT_COLLS,
+    iters: int = 5,
+    stats_out: Optional[list] = None,
+) -> List[str]:
+    """Span-derived per-round latency attribution, raw vs fused.
+
+    Only the first payload is profiled: the per-round host constant this
+    section attributes is dispatch overhead, not bandwidth, so it is flat
+    in payload at benchmark sizes (the grid section covers payload
+    scaling).
+    """
+    rows: List[str] = []
+    entries: List[Dict] = []
+    payload = int(payloads[0])
+    for sizes in topologies:
+        sizes = tuple(int(s) for s in sizes)
+        p = int(np.prod(sizes))
+        n = max(1, payload // 4)
+        rng = np.random.default_rng(p * 31 + payload)
+        x = jnp.asarray(
+            rng.integers(-6, 7, size=(p, n)).astype(np.float32)
+        )
+        shape = "x".join(map(str, sizes))
+        for coll in colls:
+            raw = build_plan(
+                coll, sizes, "sum", payload,
+                order=tuple(range(len(sizes))),
+            )
+            for variant, plan in (("raw", raw), ("fused", optimize_plan(raw))):
+                rounds = _per_round_profile(plan, x, iters)
+                total = sum(r["dur_us"] for r in rounds)
+                top = (
+                    max(rounds, key=lambda r: r["dur_us"]) if rounds else None
+                )
+                for r in rounds:
+                    rows.append(
+                        f"fusion_per_round,{coll},{shape},{payload},"
+                        f"{variant},{r['phase']},{r['round']},"
+                        f"{r['dur_us']:.1f}"
+                    )
+                if top is not None:
+                    rows.append(
+                        f"fusion_per_round_top,{coll},{shape},{variant},"
+                        f"{top['phase']},{top['round']},{top['dur_us']:.1f},"
+                        f"total,{total:.1f}"
+                    )
+                entries.append(
+                    {
+                        "coll": coll,
+                        "sizes": list(sizes),
+                        "payload_bytes": payload,
+                        "variant": variant,
+                        "rounds": rounds,
+                        "total_us": total,
+                        "top_round": top,
+                    }
+                )
+    if stats_out is not None:
+        stats_out.append(entries)
+    return rows
 
 
 def run(
@@ -170,6 +285,19 @@ def run(
     mean_speedup = (
         float(np.mean(speedups)) if speedups else 0.0
     )
+
+    # span-derived per-round attribution (raw vs fused, traced interpreter)
+    per_round_stats: list = []
+    rows.extend(
+        per_round(
+            topologies=topologies,
+            payloads=payloads,
+            colls=colls,
+            iters=iters,
+            stats_out=per_round_stats,
+        )
+    )
+
     rows.append(
         f"fusion_summary,bitwise_equal,{int(all_bitwise)},"
         f"rounds_reduced,{int(all_reduced)},"
@@ -180,6 +308,7 @@ def run(
             {
                 "grid": grid,
                 "device_latency": device,
+                "per_round": per_round_stats[0] if per_round_stats else [],
                 "telemetry": {
                     "device_latency_by_coll_us": snap[
                         "device_latency_by_coll_us"
@@ -215,7 +344,9 @@ def write_report(path: Path, stats: list, mode: str) -> None:
         "benchmark": "fusion_speedup",
         "mode": mode,
         "columns": "rounds + measured us per (coll, sizes, payload); "
-        "device latency is profiler-sourced where source == 'profiler'",
+        "device latency is profiler-sourced where source == 'profiler'; "
+        "per_round is the span-derived host cost of each communication "
+        "round (traced eager interpreter, median us)",
         **(stats[0] if stats else {}),
     }
     path.write_text(json.dumps(payload, indent=2) + "\n")
@@ -226,6 +357,13 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true", help="fewer iters")
     ap.add_argument(
+        "--per-round",
+        action="store_true",
+        help="only the span-derived per-round attribution (traced eager "
+        "interpreter); with --report-json, merges a 'per_round' section "
+        "into the existing artifact instead of rewriting it",
+    )
+    ap.add_argument(
         "--report-json",
         nargs="?",
         const=str(DEFAULT_REPORT_PATH),
@@ -235,12 +373,32 @@ def main() -> None:
         f"{DEFAULT_REPORT_PATH.name})",
     )
     args = ap.parse_args()
+    iters = 3 if args.quick else 5
+    if args.per_round:
+        print(
+            "fusion_per_round,coll,sizes,msg_bytes,variant,phase,round,"
+            "dur_us"
+        )
+        pr_stats: list = []
+        for row in per_round(iters=iters, stats_out=pr_stats):
+            print(row)
+        if args.report_json:
+            path = Path(args.report_json)
+            payload = (
+                json.loads(path.read_text())
+                if path.exists()
+                else {"benchmark": "fusion_speedup"}
+            )
+            payload["per_round"] = pr_stats[0] if pr_stats else []
+            path.write_text(json.dumps(payload, indent=2) + "\n")
+            print(f"# per-round attribution merged into {path}")
+        return
     stats: list = []
     print(
         "fusion_speedup,coll,sizes,msg_bytes,raw_rounds,fused_rounds,"
         "raw_us,fused_us,speedup,bitwise"
     )
-    for row in run(iters=3 if args.quick else 5, stats_out=stats):
+    for row in run(iters=iters, stats_out=stats):
         print(row)
     if args.report_json:
         write_report(Path(args.report_json), stats, "full")

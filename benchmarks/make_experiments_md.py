@@ -8,7 +8,15 @@ from __future__ import annotations
 import json
 from pathlib import Path
 
-from benchmarks.report import ART, dryrun_table, fit_report, fmt_s, load, roofline_table
+from benchmarks.report import (
+    ART,
+    dryrun_table,
+    fit_report,
+    fmt_s,
+    load,
+    per_round_table,
+    roofline_table,
+)
 
 REPO = Path(__file__).resolve().parents[1]
 
@@ -263,6 +271,19 @@ branch redundantly-but-locally. Rule shipped in the config guidance: enable
 explicit_tp only when num_kv_heads divides the model axis. granite's row
 above uses its per-arch flags (remat-only: collective -19%, bottleneck flips
 collective->memory).
+""")
+    print("\n## Per-round latency attribution (offload observability)\n")
+    print(per_round_table())
+    print("""
+Each row re-lowers one planned collective through the traced eager sim
+interpreter (`lower_sim(plan, traced=True)` under `repro.obs.tracing`):
+every communication round emits a span whose duration is that round's
+real host dispatch cost, so the table names the single round where the
+host-side constant concentrates — per (coll, mesh, raw|fused) — instead
+of one opaque wall-clock number. Regenerate the underlying section with
+`python -m benchmarks.fusion_speedup --per-round --report-json`; full
+host+device Perfetto timelines come from
+`python -m repro.launch.offload_runtime --trace OUT.json`.
 """)
     print("""
 ## Multi-pod note

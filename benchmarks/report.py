@@ -12,6 +12,7 @@ from pathlib import Path
 from typing import Dict, List
 
 ART = Path(__file__).resolve().parent / "artifacts" / "dryrun"
+BENCH_FUSION = Path(__file__).resolve().parent / "BENCH_fusion.json"
 HBM_PER_CHIP = 16e9  # v5e
 
 
@@ -103,6 +104,48 @@ def fit_report(mesh: str = "single") -> str:
     return "\n".join(lines) if lines else "  - all cells fit in 16GB/chip"
 
 
+def per_round_table() -> str:
+    """Span-derived per-round attribution table from BENCH_fusion.json.
+
+    Each row is one (coll, mesh, raw|fused) traced lowering: how many
+    communication rounds the eager interpreter dispatched, the summed
+    host cost, and which single round dominates — the ranked answer to
+    the ROADMAP wall-clock question of where the per-round constant
+    lives.
+    """
+    if not BENCH_FUSION.exists():
+        return (
+            "(no BENCH_fusion.json; run `python -m benchmarks.run "
+            "--smoke --report-json`)"
+        )
+    rep = json.loads(BENCH_FUSION.read_text())
+    entries = rep.get("per_round", [])
+    if not entries:
+        return (
+            "(BENCH_fusion.json has no per_round section; run "
+            "`python -m benchmarks.fusion_speedup --per-round "
+            "--report-json`)"
+        )
+    rows = [
+        "| coll | mesh | variant | rounds | host total | top round "
+        "| top phase | top cost | share |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for e in entries:
+        top = e.get("top_round") or {}
+        total = e.get("total_us", 0.0)
+        share = top.get("dur_us", 0.0) / total if total else 0.0
+        rows.append(
+            f"| {e['coll']} | {'x'.join(map(str, e['sizes']))} "
+            f"| {e['variant']} | {len(e.get('rounds', []))} "
+            f"| {fmt_s(total * 1e-6)} | {top.get('round', '-')} "
+            f"| {top.get('phase', '-')} "
+            f"| {fmt_s(top.get('dur_us', 0.0) * 1e-6)} "
+            f"| {share * 100:.0f}% |"
+        )
+    return "\n".join(rows)
+
+
 def main() -> None:
     print("## Dry-run (single pod, 16x16)\n")
     print(dryrun_table("single"))
@@ -112,6 +155,8 @@ def main() -> None:
     print(roofline_table("single"))
     print("\n## Memory fit\n")
     print(fit_report("single"))
+    print("\n## Per-round latency attribution (traced sim interpreter)\n")
+    print(per_round_table())
 
 
 if __name__ == "__main__":

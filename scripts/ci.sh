@@ -20,8 +20,15 @@
 # The service check (repro.testing.service_check) then exercises the broker
 # in driver mode on a real 2x2 mesh: 4 concurrent tenant streams, bitwise
 # equality, backpressure isolation, and registry split-winner inheritance.
-# Regressions in the offload/planner/service subsystems fail CI even when
-# no unit test covers them yet.
+# The observability check (repro.testing.obs_check) proves the tracing
+# layer: a traced 2x2 dispatch is bitwise-identical to the untraced one
+# and yields >= 1 phase span plus the declared round spans per comm phase,
+# with host+device trace merge and Prometheus rendering. Finally,
+# benchmarks.check_regression diffs the freshly-written BENCH artifacts
+# against the committed baselines (snapshotted BEFORE the smoke run
+# overwrites them): lost grid rows, lost bitwise/coalesce proofs, or > 2x
+# latency drift fail CI. Regressions in the offload/planner/service
+# subsystems fail CI even when no unit test covers them yet.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -34,6 +41,11 @@ echo
 echo "=== offload-engine + planner + service smoke benchmark ==="
 SMOKE_OUT="$(mktemp -t repro_smoke.XXXXXX.csv)"
 trap 'rm -f "$SMOKE_OUT"' EXIT
+# snapshot the committed BENCH baselines before --report-json rewrites them
+BASE_DIR="$(mktemp -d -t repro_bench_base.XXXXXX)"
+trap 'rm -f "$SMOKE_OUT"; rm -rf "$BASE_DIR"' EXIT
+cp benchmarks/BENCH_fusion.json "$BASE_DIR/BENCH_fusion.json"
+cp benchmarks/BENCH_service.json "$BASE_DIR/BENCH_service.json"
 python -m benchmarks.run --smoke --report-json | tee "$SMOKE_OUT"
 grep -q "^planned_smoke_summary," "$SMOKE_OUT" \
   || { echo "CI FAIL: planned 3D smoke section missing"; exit 1; }
@@ -54,6 +66,29 @@ grep -q "^service_check_summary,bitwise_equal,1,coalesce_gt1,1," "$SVC_OUT" \
   || { echo "CI FAIL: service check not bitwise or not coalescing"; exit 1; }
 grep -q "^ALL-OK$" "$SVC_OUT" \
   || { echo "CI FAIL: service check did not pass"; exit 1; }
+
+echo
+echo "=== observability check (traced dispatch: spans + metrics + merge) ==="
+OBS_OUT="$(mktemp -t repro_obs.XXXXXX.log)"
+trap 'rm -f "$SMOKE_OUT" "$SVC_OUT" "$OBS_OUT"; rm -rf "$BASE_DIR"' EXIT
+python -m repro.testing.obs_check 2 2 | tee "$OBS_OUT"
+grep -q "^obs_check_summary,bitwise_equal,1," "$OBS_OUT" \
+  || { echo "CI FAIL: traced dispatch not bitwise-identical"; exit 1; }
+grep -q "^ALL-OK$" "$OBS_OUT" \
+  || { echo "CI FAIL: observability check did not pass"; exit 1; }
+
+echo
+echo "=== benchmark regression gate (fresh BENCH vs committed baseline) ==="
+REG_OUT="$(mktemp -t repro_reg.XXXXXX.log)"
+trap 'rm -f "$SMOKE_OUT" "$SVC_OUT" "$OBS_OUT" "$REG_OUT"; rm -rf "$BASE_DIR"' EXIT
+python -m benchmarks.check_regression \
+  --baseline-fusion "$BASE_DIR/BENCH_fusion.json" \
+  --fusion benchmarks/BENCH_fusion.json \
+  --baseline-service "$BASE_DIR/BENCH_service.json" \
+  --service benchmarks/BENCH_service.json \
+  --require-per-round | tee "$REG_OUT"
+grep -q "^ALL-OK$" "$REG_OUT" \
+  || { echo "CI FAIL: benchmark regression gate did not pass"; exit 1; }
 
 echo
 echo "CI OK"

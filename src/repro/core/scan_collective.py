@@ -161,10 +161,17 @@ def sim_scan(
     *,
     algorithm: str,
     inclusive: bool = True,
+    backend: "alg.Backend | None" = None,
 ) -> PyTree:
-    """Run a schedule on stacked (p, ...) arrays without any mesh."""
+    """Run a schedule on stacked (p, ...) arrays without any mesh.
+
+    ``backend`` overrides the default :class:`~repro.core.algorithms.
+    SimBackend` — used by the traced plan interpreter to inject a
+    round-counting wrapper; it must behave like a SimBackend of size ``p``.
+    """
     op = get_operator(op)
-    backend = alg.SimBackend(p)
+    if backend is None:
+        backend = alg.SimBackend(p)
     if inclusive:
         return alg.get_algorithm(algorithm)(backend, stacked, op)
     identity = op.identity_like(stacked)

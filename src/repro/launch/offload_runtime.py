@@ -27,6 +27,14 @@ Every launcher that issues collective descriptors goes through here:
     winners via ``--splits``) and reuse it across launches via
     ``$REPRO_TUNING_TABLE``; add ``--registry DIR`` to also merge it into a
     shared registry keyed by backend fingerprint.
+  * Observability: ``build_offload_engine(tracing=True)`` (or
+    ``$REPRO_TRACE=1``) installs a collecting span tracer
+    (:mod:`repro.obs.tracing`) before the engine is built, so every
+    dispatch in the launch emits broker/engine/phase/round spans; and
+    ``python -m repro.launch.offload_runtime --trace OUT.json`` runs one
+    traced+profiled smoke dispatch and writes the merged host+device
+    Perfetto trace — the quickest way to *see* where a round's time goes
+    (open the file at https://ui.perfetto.dev).
 """
 
 from __future__ import annotations
@@ -122,6 +130,9 @@ def detach_remesh_hook(engine: OffloadEngine) -> None:
         fault.unregister_remesh_listener(_on_remesh)
 
 
+TRACE_ENV = "REPRO_TRACE"
+
+
 def build_offload_engine(
     *,
     tuning_table: "str | Path | None" = None,
@@ -129,11 +140,26 @@ def build_offload_engine(
     tune_budget_s: float = 30.0,
     retune_on_remesh: bool = True,
     remesh_tune_budget_s: float = 5.0,
+    tracing: Optional[bool] = None,
 ) -> OffloadEngine:
     """Construct the launch's engine, with the tuning table resolved from
     (in order): the explicit argument, ``$REPRO_TUNING_TABLE``, the default
     cache path, or — when ``autotune_if_missing`` — a fresh budgeted tuning
-    run persisted to the default path for the next launch."""
+    run persisted to the default path for the next launch.
+
+    ``tracing=True`` (default: on when ``$REPRO_TRACE`` is a non-empty
+    value other than ``0``) installs a process-wide collecting span tracer
+    before the engine is built; read it back with
+    :func:`repro.obs.tracing.get_tracer` and export via
+    :mod:`repro.obs.export`. The default no-op tracer costs nothing.
+    """
+    if tracing is None:
+        tracing = os.environ.get(TRACE_ENV, "") not in ("", "0", "false")
+    if tracing:
+        from repro.obs import tracing as obs_tracing
+
+        if not obs_tracing.get_tracer().enabled:
+            obs_tracing.install_tracer()
     cache: Optional[TuningCache] = None
     if tuning_table:
         # An explicitly named table must exist: silently falling through to
@@ -245,9 +271,67 @@ def get_service():
     return _SERVICE
 
 
+def write_traced_smoke_trace(
+    out: "str | Path",
+    *,
+    axes: Tuple[int, ...] = (2, 4),
+    payload_floats: int = 256,
+    coll: str = "scan",
+) -> Path:
+    """Run one traced + profiled smoke dispatch and write the merged
+    host+device Perfetto trace to ``out``. The attribution workflow's
+    one-command entry point (see README's Observability section)."""
+    import math as _math
+    import tempfile
+
+    import jax.numpy as jnp
+
+    from repro.obs import export as obs_export
+    from repro.obs import tracing as obs_tracing
+
+    engine = OffloadEngine()
+    desc = engine.make_descriptor(
+        coll, axes=tuple(axes), payload_bytes=payload_floats * 4, op="sum"
+    )
+    p = _math.prod(axes)
+    x = jnp.arange(p * payload_floats, dtype=jnp.float32).reshape(
+        p, payload_floats
+    )
+    with tempfile.TemporaryDirectory() as td:
+        with obs_tracing.tracing() as tracer:
+            timing = engine.profile_offload(desc, x, trace_dir=td)
+        host = obs_export.spans_to_chrome(tracer.spans())
+        if timing.trace_path is not None:
+            merged = obs_export.merge_device_trace(host, timing.trace_path)
+        else:
+            merged = host
+        path = obs_export.write_trace(out, merged)
+    n_spans = len(tracer.spans())
+    print(
+        f"traced {coll} over {tuple(axes)}: {n_spans} host spans, "
+        f"{merged.get('deviceEventsMerged', 0)} device events "
+        f"(aligned={merged.get('deviceClockAligned', False)}, "
+        f"device source={timing.source})"
+    )
+    print(f"merged trace written to {path} — open at https://ui.perfetto.dev")
+    return path
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--tune", action="store_true", help="run the autotuner")
+    ap.add_argument(
+        "--trace",
+        metavar="OUT.json",
+        default=None,
+        help="run one traced smoke dispatch and write the merged "
+        "host+device Perfetto trace",
+    )
+    ap.add_argument(
+        "--trace-axes",
+        default="2,4",
+        help="mesh axes for --trace (comma-separated, default 2,4)",
+    )
     ap.add_argument(
         "--splits",
         action="store_true",
@@ -270,8 +354,13 @@ def main() -> None:
         "(keyed by backend fingerprint) so other workers inherit it",
     )
     args = ap.parse_args()
+    if args.trace:
+        axes = tuple(int(a) for a in args.trace_axes.split(","))
+        write_traced_smoke_trace(args.trace, axes=axes)
+        if not args.tune:
+            return
     if not args.tune:
-        ap.error("nothing to do; pass --tune")
+        ap.error("nothing to do; pass --tune or --trace")
     cache = autotune(
         iters=args.iters, time_budget_s=args.budget_s, verbose=True
     )

@@ -1,0 +1,72 @@
+"""Unified observability: spans, Chrome/Perfetto export, metrics registry.
+
+Three pieces, one subsystem:
+
+* :mod:`repro.obs.tracing` — in-process spans with parent links covering
+  service submit -> broker -> engine dispatch -> plan phase -> comm round;
+  a no-op tracer is installed by default so the instrumented hot paths are
+  zero-cost until :func:`~repro.obs.tracing.install_tracer` (or the
+  :func:`~repro.obs.tracing.tracing` context manager) enables collection.
+* :mod:`repro.obs.export` — spans -> Chrome trace JSON (Perfetto-openable)
+  and the host+device merge with ``jax.profiler`` traces.
+* :mod:`repro.obs.metrics` — counter/gauge/histogram registry with
+  Prometheus text exposition; engine/service telemetry publish here in
+  addition to their existing snapshot dicts.
+"""
+
+from repro.obs.export import (
+    chrome_to_spans,
+    load_chrome_trace,
+    merge_device_trace,
+    spans_to_chrome,
+    write_trace,
+)
+from repro.obs.metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    get_registry,
+    render_prometheus,
+    reset_registry,
+    round_bucket,
+    set_registry,
+)
+# NB: the submodules are the package attributes ``tracing`` / ``metrics`` /
+# ``export``; the tracing() context manager is deliberately NOT re-exported
+# here (it would shadow the submodule) — use ``repro.obs.tracing.tracing``.
+from repro.obs.tracing import (
+    NoopTracer,
+    Span,
+    Tracer,
+    TracingBackend,
+    get_tracer,
+    install_tracer,
+    now_us,
+    set_tracer,
+)
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "NoopTracer",
+    "Span",
+    "Tracer",
+    "TracingBackend",
+    "chrome_to_spans",
+    "get_registry",
+    "get_tracer",
+    "install_tracer",
+    "load_chrome_trace",
+    "merge_device_trace",
+    "now_us",
+    "render_prometheus",
+    "reset_registry",
+    "round_bucket",
+    "set_registry",
+    "set_tracer",
+    "spans_to_chrome",
+    "write_trace",
+]

@@ -75,6 +75,8 @@ from repro.core.reduce_ops import (
 )
 from repro.core.scan_collective import dist_exscan, dist_scan, sim_scan
 from repro.core.selector import select_algorithm
+from repro.obs import metrics as obs_metrics
+from repro.obs import tracing as obs_tracing
 from repro.offload import planner
 
 PyTree = Any
@@ -151,10 +153,20 @@ class EngineTelemetry:
     latency_source_by_coll: Dict[str, str] = dataclasses.field(
         default_factory=dict
     )
+    profiler_fallbacks: int = 0
+    profiler_fallback_reasons: Dict[str, int] = dataclasses.field(
+        default_factory=dict
+    )
 
     def record_dispatch(self, coll: str, latency_s: Optional[float]) -> None:
         self.dispatches += 1
         self.calls_by_coll[coll] = self.calls_by_coll.get(coll, 0) + 1
+        reg = obs_metrics.get_registry()
+        reg.counter(
+            "repro_engine_dispatches_total",
+            "engine offload dispatches",
+            labelnames=("coll",),
+        ).inc(coll=coll)
         if latency_s is not None:
             self.timed_dispatches += 1
             self.total_latency_s += latency_s
@@ -162,6 +174,11 @@ class EngineTelemetry:
             tot, n = self.latency_by_coll.get(coll, (0.0, 0))
             self.latency_by_coll[coll] = (tot + latency_s, n + 1)
             self.latency_source_by_coll.setdefault(coll, "wall")
+            reg.histogram(
+                "repro_engine_dispatch_latency_us",
+                "wall-clock latency of timed engine dispatches",
+                labelnames=("coll",),
+            ).observe(latency_s * 1e6, coll=coll)
 
     def record_device_latency(
         self, coll: str, latency_s: float, *, source: str = "profiler"
@@ -185,6 +202,26 @@ class EngineTelemetry:
             self.latency_source_by_coll[coll] = source
         tot, n = self.device_latency_by_coll.get(coll, (0.0, 0))
         self.device_latency_by_coll[coll] = (tot + latency_s, n + 1)
+        if source == "profiler":
+            obs_metrics.get_registry().histogram(
+                "repro_engine_device_latency_us",
+                "profiler-derived device-side schedule latency",
+                labelnames=("coll",),
+            ).observe(latency_s * 1e6, coll=coll)
+
+    def record_profiler_fallback(self, coll: str, reason: str) -> None:
+        """A ``profile_offload`` run degraded to ``source="wall"`` — count
+        it and the why, so dashboards can alert on profiler degradation
+        instead of quietly trusting wall numbers."""
+        self.profiler_fallbacks += 1
+        self.profiler_fallback_reasons[reason] = (
+            self.profiler_fallback_reasons.get(reason, 0) + 1
+        )
+        obs_metrics.get_registry().counter(
+            "repro_engine_profiler_fallbacks_total",
+            "profile_offload runs that fell back to wall-clock timing",
+            labelnames=("coll", "reason"),
+        ).inc(coll=coll, reason=reason)
 
     @property
     def hit_rate(self) -> float:
@@ -221,6 +258,8 @@ class EngineTelemetry:
                 for coll, (tot, n) in self.device_latency_by_coll.items()
             },
             "latency_source_by_coll": dict(self.latency_source_by_coll),
+            "profiler_fallbacks": self.profiler_fallbacks,
+            "profiler_fallback_reasons": dict(self.profiler_fallback_reasons),
         }
 
 
@@ -487,7 +526,32 @@ class OffloadEngine:
         Passing ``mesh`` (with ``axis_name``) selects driver mode: the
         engine owns the ``jit(shard_map(...))`` program, compiled on first
         dispatch and streamed from the cache afterwards.
+
+        When a collecting tracer is installed (:mod:`repro.obs.tracing`)
+        the dispatch is wrapped in ``engine``-category spans, and planned
+        *sim*-mode requests run the eager traced plan interpreter — cached
+        under a separate key, so the jitted schedule the default path uses
+        is untouched — emitting one span per plan phase and one per
+        communication round. Driver/spmd dispatches only get the host-side
+        spans around the dispatch: inside jit there is no per-round host
+        work to measure. With the default no-op tracer this method's
+        behavior (and the compiled schedule cache) is byte-for-byte the
+        untraced path.
         """
+        tracer = obs_tracing.get_tracer()
+        if not tracer.enabled:
+            return self._offload(descriptor, x, axis_name, mesh, None)
+        with tracer.span("engine.offload", "engine") as span:
+            return self._offload(descriptor, x, axis_name, mesh, span)
+
+    def _offload(
+        self,
+        descriptor: "CollectiveDescriptor | np.ndarray",
+        x: Optional[PyTree],
+        axis_name: AxisSpec,
+        mesh: Any,
+        span: Any,
+    ) -> PyTree:
         try:
             desc = self._as_descriptor(descriptor)
         except Exception:
@@ -497,6 +561,10 @@ class OffloadEngine:
             axis_name = tuple(axis_name) or None
         if mesh is not None and axis_name is None:
             raise ValueError("driver mode (mesh=...) requires axis_name")
+        # planned sim requests run the eager traced interpreter under a
+        # tracer; it lives under its own cache key so the default jitted
+        # schedule is never evicted or shadowed
+        traced = span is not None and axis_name is None and mesh is None
         if len(desc.axes) > 1:
             try:
                 plan, words = self._plan_for(desc)
@@ -504,13 +572,35 @@ class OffloadEngine:
                 self.telemetry.errors += 1
                 raise
             key = self._planned_cache_key(words, plan, axis_name, mesh)
+            if traced:
+                key += b"|traced"
             self._plans.setdefault(key, plan)
         else:
+            traced = False
             key = self._cache_key(desc, axis_name, mesh)
+        if span is not None:
+            span.set(
+                coll=desc.coll_type.name.lower(),
+                mode=self._mode_tag(axis_name, mesh),
+                p=int(desc.comm_size),
+                traced_plan=traced,
+            )
         sched = self._cache.get(key)
         if sched is None:
+            tracer = obs_tracing.get_tracer() if span is not None else None
             try:
-                sched = self._compile(desc, key, axis_name, mesh)
+                if span is not None:
+                    with tracer.span(
+                        "engine.compile", "engine",
+                        coll=desc.coll_type.name.lower(),
+                    ):
+                        sched = self._compile(
+                            desc, key, axis_name, mesh, traced=traced
+                        )
+                else:
+                    sched = self._compile(
+                        desc, key, axis_name, mesh, traced=traced
+                    )
             except Exception:
                 self.telemetry.errors += 1
                 raise
@@ -518,8 +608,22 @@ class OffloadEngine:
             self.telemetry.misses += 1
             self.telemetry.compiles += 1
             self.telemetry.cache_size = len(self._cache)
+            if span is not None:
+                span.set(cache="miss")
+            obs_metrics.get_registry().counter(
+                "repro_engine_cache_events_total",
+                "compiled-schedule cache lookups",
+                labelnames=("event",),
+            ).inc(event="miss")
         else:
             self.telemetry.hits += 1
+            if span is not None:
+                span.set(cache="hit")
+            obs_metrics.get_registry().counter(
+                "repro_engine_cache_events_total",
+                "compiled-schedule cache lookups",
+                labelnames=("event",),
+            ).inc(event="hit")
 
         timed = axis_name is None or mesh is not None
         if desc.coll_type == CollType.BARRIER:
@@ -547,18 +651,21 @@ class OffloadEngine:
         axis_name: AxisSpec = None,
         mesh: Any = None,
         warmup: int = 1,
+        trace_dir: Optional[str] = None,
     ):
         """Dispatch once under a ``jax.profiler`` trace and record the
         device-side schedule time into the telemetry (the SPMD/driver-mode
         latency story: the engine counts hits/misses inside ``shard_map``
         and the profiler owns timing — this wires the profiler's numbers
         back in). Returns a :class:`repro.offload.profiling.DeviceTiming`.
+        Pass ``trace_dir`` to keep the profiler trace on disk (e.g. for
+        :func:`repro.obs.export.merge_device_trace`).
         """
         from repro.offload.profiling import profile_offload as _profile
 
         return _profile(
             self, descriptor, x, axis_name=axis_name, mesh=mesh,
-            warmup=warmup,
+            warmup=warmup, trace_dir=trace_dir,
         )
 
     def cache_size(self) -> int:
@@ -597,6 +704,8 @@ class OffloadEngine:
         key: bytes,
         axis_name: AxisSpec,
         mesh: Any = None,
+        *,
+        traced: bool = False,
     ) -> CompiledSchedule:
         op = get_operator(wire_op_name(desc.operation))
         algo = desc.algo_type
@@ -610,11 +719,14 @@ class OffloadEngine:
 
         if len(desc.axes) > 1:
             fn = self._build_planned(
-                desc, op, axis_name, plan=self._plans.get(key)
+                desc, op, axis_name, plan=self._plans.get(key),
+                traced=traced,
             )
             algo = f"plan{desc.split}:{algo}"
             if desc.optimized:
                 algo = f"opt:{algo}"
+            if traced:
+                algo = f"traced:{algo}"
         elif axis_name is not None:
             one = axis_name
             if not isinstance(one, str):
@@ -700,13 +812,16 @@ class OffloadEngine:
         op: AssocOp,
         axis_name: AxisSpec,
         plan,
+        traced: bool = False,
     ) -> Callable[[PyTree], PyTree]:
         """Lower a multi-axis descriptor through the collective planner.
 
         ``plan`` is the dispatch path's already-built (and, when the
         descriptor is flagged, pass-optimized) plan — ``offload`` stashes
         it under the cache key before compiling, so there is exactly one
-        place plans are constructed (:meth:`_plan_for`).
+        place plans are constructed (:meth:`_plan_for`). ``traced`` builds
+        the *eager* span-emitting sim interpreter (never jitted: its whole
+        point is measuring per-round host time).
         """
         if plan is None:
             raise ValueError(
@@ -714,6 +829,8 @@ class OffloadEngine:
                 "offload(), which builds it via _plan_for"
             )
         if axis_name is None:
+            if traced:
+                return planner.lower_sim(plan, op, traced=True)
             return jax.jit(planner.lower_sim(plan, op))
         if isinstance(axis_name, str) or len(axis_name) != len(desc.axes):
             raise ValueError(

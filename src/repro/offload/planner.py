@@ -690,13 +690,32 @@ def _zero_coord_mask(
     return mask
 
 
-def lower_sim(plan: CollectivePlan, op: "AssocOp | str | None" = None):
+def lower_sim(
+    plan: CollectivePlan,
+    op: "AssocOp | str | None" = None,
+    *,
+    traced: bool = False,
+):
     """Compile a plan to a function over flat stacked ``(p, ...)`` leaves.
 
     The input's leading axis is the flat rank in logical order; internally it
     is reshaped to the logical mesh shape, phases run along single mesh axes,
     and the output is flattened back — directly comparable (bitwise, given
     exact arithmetic) to the flat single-axis reference collective.
+
+    With ``traced=True`` the interpreter emits one ``phase``-category span
+    per plan phase and one ``round``-category span per communication round
+    (every ``backend.permute``, via :class:`repro.obs.tracing.
+    TracingBackend`, which blocks on each permuted result so the span
+    duration is the per-round host constant). The traced interpreter must
+    run *eagerly* — never under ``jax.jit``, where per-round host time does
+    not exist — and resolves the active tracer at call time, so one traced
+    callable serves successive ``tracing()`` contexts. Phase/round
+    latencies also land in the shared metrics registry
+    (``repro_phase_latency_us`` / ``repro_round_latency_us``). The traced
+    path performs the same arithmetic as the untraced one (blocking does
+    not change values), but is only built on request and cached separately
+    by the engine, so the default path is untouched.
 
     Interpreter layouts: the unoptimized path permutes every phase operand
     to the front and back again (two ``moveaxis`` per phase). For an
@@ -717,6 +736,7 @@ def lower_sim(plan: CollectivePlan, op: "AssocOp | str | None" = None):
     k = len(logical)
     p_total = plan.p
     threaded = plan.optimized
+    coll_name = plan.coll.name.lower()
 
     def to_mesh(tree: PyTree) -> PyTree:
         return jax.tree.map(
@@ -752,11 +772,31 @@ def lower_sim(plan: CollectivePlan, op: "AssocOp | str | None" = None):
             )
             return views[layout]
 
+        if traced:
+            from repro.obs import metrics as obs_metrics
+            from repro.obs import tracing as obs_tracing
+
+            tracer = obs_tracing.get_tracer()
+        else:
+            tracer = None
+
         if plan.coll == CollType.BARRIER:
             set_reg("x", jnp.ones(logical, jnp.float32), None)
         else:
             set_reg("x", to_mesh(x), None)
         for ph in plan.phases:
+            phase_name = ph.kind.name
+            if tracer is not None:
+                phase_cm = tracer.span(
+                    f"plan.phase:{phase_name}:L{ph.level}",
+                    "phase",
+                    kind=phase_name,
+                    level=ph.level,
+                    algorithm=ph.algorithm,
+                    coll=coll_name,
+                )
+                phase_span = phase_cm.__enter__()
+                phase_t0 = obs_tracing.now_us()
             if ph.kind == PhaseKind.COMBINE:
                 carry = get_reg(ph.src[0], None)
                 local = get_reg(ph.src[1], None)
@@ -765,16 +805,37 @@ def lower_sim(plan: CollectivePlan, op: "AssocOp | str | None" = None):
                     mask = _zero_coord_mask(logical, ph.guard_levels)
                     merged = alg._bwhere(mask, local, merged)
                 set_reg(ph.dst, merged, None)
+                if tracer is not None:
+                    phase_cm.__exit__(None, None, None)
+                    obs_metrics.observe_phase(
+                        coll_name, phase_name,
+                        obs_tracing.now_us() - phase_t0,
+                    )
                 continue
             if ph.kind == PhaseKind.IDENTITY:
                 set_reg(ph.dst, op.identity_like(get_reg(ph.src[0], None)), None)
+                if tracer is not None:
+                    phase_cm.__exit__(None, None, None)
+                    obs_metrics.observe_phase(
+                        coll_name, phase_name,
+                        obs_tracing.now_us() - phase_t0,
+                    )
                 continue
             p_axis = logical[ph.level]
             backend = alg.SimBackend(p_axis)
+            if tracer is not None:
+                backend = obs_tracing.TracingBackend(
+                    backend,
+                    tracer,
+                    phase=f"{phase_name}:L{ph.level}",
+                    on_round=lambda idx, dur_us, _k=phase_name: (
+                        obs_metrics.observe_round(coll_name, _k, idx, dur_us)
+                    ),
+                )
             if ph.kind == PhaseKind.SCAN:
                 fn = lambda t: sim_scan(  # noqa: E731
                     t, op, p_axis, algorithm=ph.algorithm,
-                    inclusive=ph.inclusive,
+                    inclusive=ph.inclusive, backend=backend,
                 )
             elif ph.kind == PhaseKind.FUSED_SCAN_TOTAL:
                 fn = lambda t: alg.scan_total_schedule(  # noqa: E731
@@ -813,6 +874,12 @@ def lower_sim(plan: CollectivePlan, op: "AssocOp | str | None" = None):
                     set_reg(ph.dst2, out[1], None)
                 else:
                     set_reg(ph.dst, out, None)
+            if tracer is not None:
+                phase_span.set(rounds=getattr(backend, "rounds", 0))
+                phase_cm.__exit__(None, None, None)
+                obs_metrics.observe_phase(
+                    coll_name, phase_name, obs_tracing.now_us() - phase_t0
+                )
         return to_flat(get_reg(plan.result, None))
 
     return run

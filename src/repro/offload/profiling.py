@@ -16,7 +16,20 @@ transfer + sync; the trace sees the collective itself.
 When the runtime cannot produce or parse a trace (a second concurrent
 profiler session, a backend without the chrome-trace export), measurement
 falls back to the annotation's own wall duration and is labeled
-``source="wall"`` so dashboards never mistake it for a device number.
+``source="wall"`` so dashboards never mistake it for a device number —
+and the *reason* for the degradation is recorded
+(:attr:`DeviceTiming.fallback_reason`, counted into
+``EngineTelemetry.snapshot()["profiler_fallback_reasons"]`` and the
+``repro_engine_profiler_fallbacks_total`` metric), so a profiler that has
+silently stopped producing traces shows up on a dashboard instead of
+quietly substituting wall numbers.
+
+When a collecting tracer is installed (:mod:`repro.obs.tracing`), the
+profiled dispatch additionally emits a host-side span *named exactly like
+the TraceAnnotation tag*. The same name then appears in both the host span
+trace and the profiler's chrome trace, which is the anchor
+:func:`repro.obs.export.merge_device_trace` uses to align the two clocks
+into one host+device timeline.
 """
 
 from __future__ import annotations
@@ -56,6 +69,10 @@ class DeviceTiming:
     source: str            # "profiler" (trace-derived) or "wall" (fallback)
     events: int            # device-exec events attributed to the window
     trace_path: Optional[str] = None
+    #: why source degraded to "wall": "trace_start_failed" (most often a
+    #: concurrent profiler session), "stop_failed", "no_trace_file", or
+    #: "parse_failed"; None when the profiler delivered
+    fallback_reason: Optional[str] = None
 
 
 @contextlib.contextmanager
@@ -142,6 +159,8 @@ def profile_offload(
     ``record_device_latency`` and is what puts a measured-on-device source
     behind ``latency_by_coll_us`` in ``EngineTelemetry.snapshot()``.
     """
+    from repro.obs import tracing as obs_tracing
+
     desc = engine._as_descriptor(descriptor)
     coll = desc.coll_type.name.lower()
     for _ in range(max(0, warmup)):
@@ -151,6 +170,8 @@ def profile_offload(
     tmp = tempfile.mkdtemp(prefix="repro_prof_") if owned else trace_dir
     parsed: Optional[Tuple[float, int]] = None
     trace_path: Optional[str] = None
+    fallback_reason: Optional[str] = None
+    span_tracer = obs_tracing.get_tracer()
     try:
         # trace machinery failures (a concurrent profiler session, a
         # backend without the chrome export) degrade to the wall-clock
@@ -160,25 +181,41 @@ def profile_offload(
             tracing = True
         except Exception:
             tracing = False
+            fallback_reason = "trace_start_failed"
         t0 = time.perf_counter()
+        t0_us = obs_tracing.now_us()
         try:
             with jax.profiler.TraceAnnotation(tag) if tracing else _noop():
                 out = engine.offload(desc, x, axis_name=axis_name, mesh=mesh)
                 jax.tree.map(lambda a: a.block_until_ready(), out)
         finally:
             wall_us = (time.perf_counter() - t0) * 1e6
+            if span_tracer.enabled:
+                # host span named exactly like the TraceAnnotation tag —
+                # the clock-alignment anchor for merge_device_trace
+                span_tracer.add_span(
+                    tag, "profile", t0_us, obs_tracing.now_us(),
+                    parent_id=span_tracer.current_span_id(),
+                    coll=coll, annotation=True,
+                )
             if tracing:
                 try:
                     jax.profiler.stop_trace()
                 except Exception:
                     tracing = False
+                    fallback_reason = "stop_failed"
         if tracing:
             try:
                 trace_path = _newest_trace_file(tmp)
-                if trace_path is not None:
+                if trace_path is None:
+                    fallback_reason = "no_trace_file"
+                else:
                     parsed = parse_device_us(trace_path, tag)
+                    if parsed is None:
+                        fallback_reason = "parse_failed"
             except Exception:
                 parsed = None
+                fallback_reason = "parse_failed"
     finally:
         if owned:
             import shutil
@@ -188,9 +225,17 @@ def profile_offload(
     if parsed is not None:
         device_us, n_events = parsed
         source = "profiler"
+        fallback_reason = None
     else:
         device_us, n_events = wall_us, 0
         source = "wall"
+        if fallback_reason is None:
+            fallback_reason = "trace_start_failed"
+        record = getattr(
+            engine.telemetry, "record_profiler_fallback", None
+        )
+        if record is not None:
+            record(coll, fallback_reason)
     engine.telemetry.record_device_latency(
         coll, device_us * 1e-6, source=source
     )
@@ -201,6 +246,7 @@ def profile_offload(
         source=source,
         events=n_events,
         trace_path=trace_path,
+        fallback_reason=fallback_reason,
     )
 
 

@@ -60,6 +60,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.packet import CollType, CollectiveDescriptor
+from repro.obs import tracing as obs_tracing
 from repro.offload.engine import AxisSpec, OffloadEngine
 from repro.service.telemetry import ServiceTelemetry
 
@@ -114,7 +115,7 @@ class ServiceTicket:
 class _Request:
     __slots__ = (
         "tenant", "desc", "payload", "ticket", "submit_t", "flush_at",
-        "deadline_at", "group_key",
+        "deadline_at", "group_key", "submit_span_id", "submit_us",
     )
 
     def __init__(self, tenant, desc, payload, ticket, submit_t, flush_at,
@@ -126,6 +127,11 @@ class _Request:
         self.submit_t = submit_t
         self.flush_at = flush_at
         self.deadline_at = deadline_at
+        # trace linkage: the submitting side's span id and enqueue time on
+        # the tracer clock, so the dispatch thread can retroactively record
+        # this request's broker.queue_wait span with the right parent
+        self.submit_span_id: Optional[int] = None
+        self.submit_us: float = 0.0
         # computed once at submit time: encoding the normalized descriptor
         # and walking the payload pytree per flush cycle would repeat per
         # queued request on every wakeup
@@ -298,6 +304,8 @@ class DescriptorBroker:
     ) -> ServiceTicket:
         desc = OffloadEngine._as_descriptor(descriptor)
         tenant = client.tenant
+        tracer = obs_tracing.get_tracer()
+        submit_t0 = obs_tracing.now_us() if tracer.enabled else 0.0
         with self._cond:
             if self._stopping:
                 raise BrokerStopped("broker is shut down")
@@ -346,6 +354,18 @@ class DescriptorBroker:
                 now + self.flush_interval_s,
                 None if deadline_s is None else now + float(deadline_s),
             )
+            if tracer.enabled:
+                # the span covers admission + any backpressure wait; its id
+                # parents the queue_wait span the dispatch thread records
+                req.submit_us = obs_tracing.now_us()
+                req.submit_span_id = tracer.add_span(
+                    "service.submit", "service",
+                    submit_t0, req.submit_us,
+                    parent_id=tracer.current_span_id(),
+                    tenant=tenant,
+                    coll=desc.coll_type.name.lower(),
+                    seqno=ticket.seqno,
+                )
             self._queue.append(req)
             self.telemetry.record_submit(tenant)
             self._cond.notify_all()
@@ -469,6 +489,26 @@ class DescriptorBroker:
     ) -> None:
         desc = reqs[0].desc
         barrier = desc.coll_type == CollType.BARRIER
+        tracer = obs_tracing.get_tracer()
+        if tracer.enabled:
+            # queue_wait runs from each request's enqueue to this dispatch:
+            # it starts on the client thread and ends here, so it is
+            # recorded retroactively with the submit span as parent
+            dispatch_t0 = obs_tracing.now_us()
+            for req in reqs:
+                tracer.add_span(
+                    "broker.queue_wait", "broker",
+                    req.submit_us or dispatch_t0, dispatch_t0,
+                    parent_id=req.submit_span_id,
+                    tenant=req.tenant,
+                )
+        group_cm = tracer.span(
+            "broker.dispatch_group", "broker",
+            coll=desc.coll_type.name.lower(),
+            group=len(reqs),
+            deadline=deadline,
+        )
+        group_cm.__enter__()
         try:
             # the optimized flag shapes the compiled schedule, so a fused
             # group must agree on it. Normal grouping guarantees this (the
@@ -508,6 +548,8 @@ class DescriptorBroker:
         except Exception as e:  # noqa: BLE001 - reported through tickets
             err = e
             results = [None] * len(reqs)
+        finally:
+            group_cm.__exit__(None, None, None)
         done_t = time.monotonic()
         self.telemetry.record_flush(len(reqs), 1, deadline=deadline)
         with self._cond:

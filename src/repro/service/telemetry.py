@@ -18,6 +18,8 @@ import dataclasses
 import threading
 from typing import Any, Dict, List, Optional
 
+from repro.obs import metrics as obs_metrics
+
 #: histogram bucket upper edges in microseconds (last bucket is open-ended)
 LATENCY_BUCKETS_US = (
     50.0, 100.0, 250.0, 500.0, 1e3, 2.5e3, 5e3, 1e4, 2.5e4, 5e4, 1e5,
@@ -27,7 +29,14 @@ LATENCY_BUCKETS_US = (
 
 @dataclasses.dataclass
 class LatencyHistogram:
-    """Log-bucketed latency histogram with count/sum/max (microseconds)."""
+    """Log-bucketed latency histogram with count/sum/min/max (microseconds).
+
+    Thread-safe on its own: ``record`` and the readers take the instance
+    lock, so a histogram shared across tenant threads (or read by a
+    snapshot mid-record) never shows torn count/sum/bucket state —
+    ``ServiceTelemetry``'s outer lock is then a consistency guarantee
+    across *tenants*, not the histogram's only defense.
+    """
 
     counts: List[int] = dataclasses.field(
         default_factory=lambda: [0] * (len(LATENCY_BUCKETS_US) + 1)
@@ -35,38 +44,59 @@ class LatencyHistogram:
     count: int = 0
     total_us: float = 0.0
     max_us: float = 0.0
+    min_us: float = 0.0
+    _lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False, compare=False
+    )
 
     def record(self, seconds: float) -> None:
         us = seconds * 1e6
-        self.count += 1
-        self.total_us += us
-        self.max_us = max(self.max_us, us)
-        for i, edge in enumerate(LATENCY_BUCKETS_US):
-            if us <= edge:
-                self.counts[i] += 1
-                return
-        self.counts[-1] += 1
+        with self._lock:
+            self.count += 1
+            self.total_us += us
+            self.max_us = max(self.max_us, us)
+            self.min_us = us if self.count == 1 else min(self.min_us, us)
+            for i, edge in enumerate(LATENCY_BUCKETS_US):
+                if us <= edge:
+                    self.counts[i] += 1
+                    return
+            self.counts[-1] += 1
 
     @property
     def mean_us(self) -> float:
-        return self.total_us / self.count if self.count else 0.0
+        with self._lock:
+            return self.total_us / self.count if self.count else 0.0
 
     def percentile_us(self, q: float) -> float:
-        """Bucket-resolution percentile (upper edge of the q-quantile bucket;
-        the open last bucket reports the observed max)."""
+        """Bucket-resolution percentile, clamped to the observed range.
+
+        ``q`` is a quantile in [0, 1]. An empty histogram reports 0.0;
+        ``q=0`` reports the observed minimum; ``q=1`` the observed maximum.
+        In between, the answer is the upper edge of the bucket holding the
+        q-quantile sample, clamped into ``[min_us, max_us]`` — so a single
+        10 µs sample reports 10 at every quantile instead of the 50 µs
+        bucket edge, and no percentile ever exceeds the recorded max (or
+        undercuts the recorded min).
+        """
         if not 0.0 <= q <= 1.0:
             raise ValueError(f"quantile {q} not in [0, 1]")
-        if self.count == 0:
-            return 0.0
-        rank = q * self.count
-        seen = 0
-        for i, c in enumerate(self.counts):
-            seen += c
-            if seen >= rank and c:
-                if i < len(LATENCY_BUCKETS_US):
-                    return LATENCY_BUCKETS_US[i]
-                return self.max_us
-        return self.max_us
+        with self._lock:
+            if self.count == 0:
+                return 0.0
+            if q <= 0.0:
+                return self.min_us
+            rank = q * self.count
+            seen = 0
+            for i, c in enumerate(self.counts):
+                seen += c
+                if seen >= rank and c:
+                    if i < len(LATENCY_BUCKETS_US):
+                        return min(
+                            max(LATENCY_BUCKETS_US[i], self.min_us),
+                            self.max_us,
+                        )
+                    return self.max_us
+            return self.max_us
 
     def snapshot(self) -> Dict[str, float]:
         return {
@@ -75,6 +105,7 @@ class LatencyHistogram:
             "p50_us": self.percentile_us(0.50),
             "p99_us": self.percentile_us(0.99),
             "max_us": self.max_us,
+            "min_us": self.min_us,
         }
 
 
@@ -133,16 +164,26 @@ class ServiceTelemetry:
     # -- recording (all called with the broker holding its own lock or from
     #    the single dispatch thread; the internal lock guards snapshots) ----
 
+    @staticmethod
+    def _requests_counter() -> "obs_metrics.Counter":
+        return obs_metrics.get_registry().counter(
+            "repro_service_requests_total",
+            "service requests by tenant and outcome",
+            labelnames=("tenant", "outcome"),
+        )
+
     def record_submit(self, tenant: str) -> None:
         with self._lock:
             t = self.tenants.setdefault(tenant, TenantStats())
             t.submitted += 1
             t.queue_depth += 1
             t.max_queue_depth = max(t.max_queue_depth, t.queue_depth)
+        self._requests_counter().inc(tenant=tenant, outcome="submitted")
 
     def record_reject(self, tenant: str) -> None:
         with self._lock:
             self.tenants.setdefault(tenant, TenantStats()).rejected += 1
+        self._requests_counter().inc(tenant=tenant, outcome="rejected")
 
     def record_complete(
         self,
@@ -162,6 +203,16 @@ class ServiceTelemetry:
                 t.latency.record(latency_s)
             if deadline_missed:
                 t.deadline_missed += 1
+        self._requests_counter().inc(
+            tenant=tenant, outcome="error" if error else "completed"
+        )
+        if not error:
+            obs_metrics.get_registry().histogram(
+                "repro_service_request_latency_us",
+                "submit-to-result wall-clock latency per tenant",
+                labelnames=("tenant",),
+                buckets=LATENCY_BUCKETS_US,
+            ).observe(latency_s * 1e6, tenant=tenant)
 
     def record_flush(
         self, n_requests: int, n_dispatches: int, *, deadline: bool = False
@@ -172,6 +223,11 @@ class ServiceTelemetry:
             self.fused_dispatches += n_dispatches
             if deadline:
                 self.deadline_flushes += 1
+        obs_metrics.get_registry().counter(
+            "repro_service_flushes_total",
+            "broker flush dispatches",
+            labelnames=("deadline",),
+        ).inc(deadline=str(bool(deadline)).lower())
 
     # -- reading -----------------------------------------------------------
 

@@ -1,0 +1,192 @@
+"""Observability smoke check: traced dispatch -> spans, metrics, merge.
+
+Run:  python -m repro.testing.obs_check [outer inner]
+
+One planned SCAN dispatches through an ``OffloadEngine`` in sim mode over
+an (outer, inner) mesh shape, twice: once with the default no-op tracer
+(the baseline) and once under a collecting :mod:`repro.obs.tracing`
+tracer. The check then asserts the whole observability contract at once:
+
+  * the traced result is **bitwise identical** to the untraced baseline —
+    tracing must never change the computation;
+  * the span tree is well-formed: an ``engine.offload`` root, >= 1
+    ``phase`` span, and for every *communication* phase span (one that
+    reports ``rounds > 0``) at least one ``round`` span whose
+    ``parent_id`` is that phase — exactly as many as the phase reported;
+  * every span nests inside its parent's [start, end] window;
+  * ``EngineTelemetry.snapshot()`` still exposes the pre-observability
+    keys (dispatches/cache_hits/latency sources) — dashboards keep
+    working — plus the new profiler-fallback counters;
+  * the Prometheus rendering contains the engine dispatch counter and the
+    per-round latency histogram that ``observe_round`` feeds;
+  * a profiled dispatch merges with the host spans into one Perfetto
+    trace (device events + clock alignment asserted only when the
+    profiler actually delivered; a wall fallback is reported, not
+    failed — profiling.py's fallback counters own that signal).
+
+Prints an ``obs_check_summary`` CSV row for the CI gate and ALL-OK; exits
+nonzero on any violation. Used by scripts/ci.sh and tests/test_obs.py.
+"""
+
+import sys
+import tempfile
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.obs import export as obs_export
+from repro.obs import metrics as obs_metrics
+from repro.obs import tracing as obs_tracing
+from repro.offload import OffloadEngine
+
+#: snapshot keys that existed before the obs layer; removing one breaks
+#: every dashboard reading engine telemetry
+PRE_OBS_SNAPSHOT_KEYS = (
+    "hits",
+    "misses",
+    "hit_rate",
+    "dispatches",
+    "compiles",
+    "errors",
+    "cache_size",
+    "cache_clears",
+    "calls_by_coll",
+    "mean_latency_us",
+    "last_latency_us",
+    "latency_by_coll_us",
+    "device_latency_by_coll_us",
+    "latency_source_by_coll",
+)
+
+
+def main() -> None:
+    axes = (
+        (int(sys.argv[1]), int(sys.argv[2])) if len(sys.argv) > 2 else (2, 2)
+    )
+    p = int(np.prod(axes))
+    n = 16
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.integers(-5, 6, size=(p, n)).astype(np.float32))
+    failures = 0
+
+    def check(name, ok):
+        nonlocal failures
+        print(f"obs {name:42s} {'OK' if ok else 'FAIL'}")
+        failures += 0 if ok else 1
+
+    eng = OffloadEngine()
+    desc = eng.make_descriptor(
+        "scan", axes=axes, payload_bytes=n * 4, op="sum", optimize=True,
+    )
+
+    # baseline: default no-op tracer, jitted planned path
+    baseline = np.asarray(eng.offload(desc, x))
+    check("noop tracer leaves no spans", isinstance(
+        obs_tracing.get_tracer(), obs_tracing.NoopTracer,
+    ))
+
+    # traced dispatch: collecting tracer -> eager interpreter + spans
+    with obs_tracing.tracing() as tracer:
+        traced = np.asarray(eng.offload(desc, x))
+    check("traced result bitwise == untraced", np.array_equal(
+        traced, baseline,
+    ))
+
+    spans = tracer.spans()
+    by_id = {s.span_id: s for s in spans}
+    engine_spans = [s for s in spans if s.cat == "engine"]
+    phase_spans = [s for s in spans if s.cat == "phase"]
+    round_spans = [s for s in spans if s.cat == "round"]
+    check("engine.offload span present", any(
+        s.name == "engine.offload" for s in engine_spans
+    ))
+    check(">= 1 phase span", len(phase_spans) >= 1)
+    check(">= 1 round span", len(round_spans) >= 1)
+
+    comm_phases = [s for s in phase_spans if s.args.get("rounds", 0) > 0]
+    check(">= 1 communication phase", len(comm_phases) >= 1)
+    rounds_ok = True
+    for ph in comm_phases:
+        children = [
+            r for r in round_spans if r.parent_id == ph.span_id
+        ]
+        if len(children) != ph.args.get("rounds") or not children:
+            rounds_ok = False
+            print(
+                f"  phase {ph.name}: {len(children)} round spans, "
+                f"reported rounds={ph.args.get('rounds')}"
+            )
+    check("each comm phase owns its round spans", rounds_ok)
+
+    nesting_ok = True
+    for s in spans:
+        parent = by_id.get(s.parent_id)
+        if parent is None:
+            continue
+        if not (
+            parent.start_us <= s.start_us
+            and s.end_us <= parent.end_us + 1e-3
+        ):
+            nesting_ok = False
+            print(f"  span {s.name} escapes parent {parent.name}")
+    check("spans nest inside their parents", nesting_ok)
+
+    snap = eng.telemetry.snapshot()
+    check("pre-obs snapshot keys intact", all(
+        k in snap for k in PRE_OBS_SNAPSHOT_KEYS
+    ))
+    check("fallback counters in snapshot", (
+        "profiler_fallbacks" in snap
+        and "profiler_fallback_reasons" in snap
+    ))
+
+    prom = obs_metrics.render_prometheus()
+    check("prometheus: engine dispatch counter", (
+        "repro_engine_dispatches_total" in prom
+    ))
+    check("prometheus: per-round histogram", (
+        "repro_round_latency_us_bucket" in prom
+    ))
+
+    # host+device merge: profile one dispatch while the tracer collects
+    with obs_tracing.tracing() as tracer:
+        with tempfile.TemporaryDirectory() as td:
+            timing = eng.profile_offload(desc, x, trace_dir=td)
+            host = obs_export.spans_to_chrome(tracer.spans())
+            merged = host
+            aligned = False
+            if timing.source == "profiler" and timing.trace_path:
+                device = obs_export.load_chrome_trace(timing.trace_path)
+                merged = obs_export.merge_device_trace(host, device)
+                aligned = bool(merged.get("deviceClockAligned"))
+    n_device = sum(
+        1 for e in merged.get("traceEvents", [])
+        if e.get("pid") == obs_export.DEVICE_PID
+    )
+    check("merged trace has host spans", any(
+        e.get("pid") == obs_export.HOST_PID and e.get("ph") == "X"
+        for e in merged.get("traceEvents", [])
+    ))
+    if timing.source == "profiler":
+        check("merged trace has device events", n_device > 0)
+        check("device clock aligned to host", aligned)
+    else:
+        print(
+            f"obs (profiler unavailable: fallback="
+            f"{timing.fallback_reason}; merge checked host-only)"
+        )
+
+    print(
+        f"obs_check_summary,bitwise_equal,{int(np.array_equal(traced, baseline))},"
+        f"phase_spans,{len(phase_spans)},round_spans,{len(round_spans)},"
+        f"comm_phases,{len(comm_phases)},device_events,{n_device},"
+        f"source,{timing.source}"
+    )
+    if failures:
+        print(f"FAILURES: {failures}")
+        sys.exit(1)
+    print("ALL-OK")
+
+
+if __name__ == "__main__":
+    main()
