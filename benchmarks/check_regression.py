@@ -9,8 +9,11 @@ then runs this check on the (baseline, fresh) pairs. Three failure modes:
      missing from the fresh report. A benchmark silently shrinking its
      grid would otherwise look like a pass.
   2. **Lost proofs** — a fusion row whose ``bitwise`` flag was true goes
-     false, rounds increase on a previously-reduced row, or a coalescing
-     service configuration stops coalescing (factor drops to <= 1).
+     false, rounds increase on a previously-reduced row, a grid point
+     whose tuned schedule previously beat raw (speedup clearly > 1, past
+     a noise guard) regresses to a loss (< 1), the chunking check stops
+     winning (or loses its bitwise proof), or a coalescing service
+     configuration stops coalescing (factor drops to <= 1).
   3. **Latency drift** — a measured latency grows by more than
      ``--max-drift`` (default 2.0x) over the baseline. Timing in CI is
      noisy, so the bar is deliberately loose: 2x is a real regression,
@@ -63,6 +66,19 @@ def _drift_ok(base_us: float, new_us: float, max_drift: float) -> bool:
     return new_us <= base_us * max_drift
 
 
+#: baseline speedups at or below this are treated as measurement-noise
+#: ties, not wins — only clearly-winning baselines arm the speedup floor
+SPEEDUP_NOISE_GUARD = 1.05
+
+
+def _row_speedup(r: Dict) -> float:
+    if "speedup" in r:
+        return float(r["speedup"])
+    fused = float(r.get("fused_us", 0.0))
+    raw = float(r.get("raw_us", 0.0))
+    return raw / fused if fused > 0 else 0.0
+
+
 def check_fusion(
     base: Dict, new: Dict, max_drift: float, *, require_per_round: bool
 ) -> None:
@@ -91,12 +107,48 @@ def check_fusion(
                 f"fusion latency drift > {max_drift}x: {label} "
                 f"{r['fused_us']:.1f}us -> {nr['fused_us']:.1f}us"
             )
+        base_speedup, new_speedup = _row_speedup(r), _row_speedup(nr)
+        floor_ok = not (
+            base_speedup > SPEEDUP_NOISE_GUARD and new_speedup < 1.0
+        )
+        if not floor_ok:
+            _fail(
+                f"fusion speedup floor lost: {label} tuned schedule beat "
+                f"raw at {base_speedup:.3f}x in the baseline but now "
+                f"loses ({new_speedup:.3f}x)"
+            )
         print(
             f"regression_check,fusion,{label},"
             f"bitwise,{int(bool(nr.get('bitwise')))},"
             f"fused_us,{nr.get('fused_us', 0.0):.1f},"
-            f"baseline_us,{r.get('fused_us', 0.0):.1f},ok,{int(ok)}"
+            f"baseline_us,{r.get('fused_us', 0.0):.1f},"
+            f"speedup,{new_speedup:.3f},baseline_speedup,"
+            f"{base_speedup:.3f},ok,{int(ok and floor_ok)}"
         )
+    bc = base.get("chunking_check") or {}
+    nc = new.get("chunking_check") or {}
+    if bc:
+        if not nc:
+            _fail("chunking check section lost")
+        else:
+            if bc.get("bitwise") and not nc.get("bitwise"):
+                _fail("chunking check bitwise proof lost")
+            if bc.get("win") and not nc.get("win"):
+                _fail(
+                    "chunking check stopped winning: best chunked "
+                    f"schedule was {bc.get('c1_us', 0.0):.0f}us -> "
+                    f"{bc.get('best_us', 0.0):.0f}us in the baseline, now "
+                    f"{nc.get('c1_us', 0.0):.0f}us -> "
+                    f"{nc.get('best_us', 0.0):.0f}us"
+                )
+            print(
+                f"regression_check,chunking,"
+                f"{'x'.join(map(str, nc.get('sizes', [])))},"
+                f"{nc.get('payload_bytes', 0)},"
+                f"bitwise,{int(bool(nc.get('bitwise')))},"
+                f"win,{int(bool(nc.get('win')))},"
+                f"best_chunks,{nc.get('best_chunks', 1)}"
+            )
     for coll, d in base.get("device_latency", {}).items():
         nd = new.get("device_latency", {}).get(coll)
         if nd is None:

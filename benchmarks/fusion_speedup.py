@@ -1,43 +1,61 @@
-"""Fused vs unfused planned collectives: communication rounds + measured µs.
+"""Tuned vs raw planned collectives: rounds, measured µs, chunked streaming.
 
 For each (coll, mesh shape, payload) grid point the same plan is lowered
-twice — raw (``build_plan``) and through the plan-optimizer pass pipeline
-(``optimize_plan``: SCAN+TOTAL fusion, dead-phase elimination, permute
-threading) — and the benchmark reports the round counts
-(``plan_comm_rounds``), the measured sim-backend wall latency of each form,
-and a **bitwise** comparison of their outputs (integer payloads, so any
-combine association must produce identical bits). A second section runs
-optimized descriptors through ``OffloadEngine.profile_offload`` so the
-reported latency includes a measured (profiler-sourced) per-schedule device
-time from ``EngineTelemetry.snapshot()`` — not just the cost model.
+across the full schedule grid — (raw, pass-optimized) x chunk count — and
+every variant is measured with the amortized timer
+(``time_planned_collective`` with an inner ``fori_loop``, so the
+per-dispatch floor does not drown the schedule) and recorded into an
+in-process :class:`~repro.offload.tuning_cache.TuningCache` via
+``record_schedule``, exactly the way ``tune_schedule`` writes the
+persisted table. The reported ``fused_us`` is the **measured winner** of
+that grid (``TuningCache.schedule_winner``), and the winner is then
+*exercised* end-to-end: ``make_descriptor(optimize="auto",
+chunks="auto")`` against the activated cache must resolve to the measured
+winner, and the engine dispatch of that descriptor must be **bitwise**
+equal to the raw lowering (integer payloads, so any combine association
+must produce identical bits). Every (form, chunk) variant is also
+bitwise-checked against raw — the chunked pipeline is a pure reordering.
+
+A second section runs optimized descriptors through
+``OffloadEngine.profile_offload`` so the reported latency includes a
+measured (profiler-sourced) per-schedule device time from
+``EngineTelemetry.snapshot()`` — not just the cost model.
 
 A third section answers the ROADMAP wall-clock question *where does the
 per-round constant live*: each plan is re-lowered through the **traced
 eager interpreter** (``lower_sim(plan, traced=True)`` under a collecting
 :mod:`repro.obs.tracing` tracer), whose backend blocks after every
 ``permute`` — so each ``round`` span's duration is one round's real host
-dispatch cost. The breakdown ranks rounds per (coll, mesh, raw|fused) and
-names the top-cost round, turning the wall-clock mystery into an ordered
-list.
+dispatch cost. Chunked variants carry the pipeline coordinates on every
+span, so the breakdown attributes cost per (round, chunk) cell.
+
+A fourth section is the **chunking check**: at a payload past the
+pipelining threshold (default 1 MiB on a (2, 8) mesh) the best chunked
+schedule must be bitwise-identical to C=1 *and* beat it on wall-clock.
 
 CSV sections:
-  fusion_speedup,coll,sizes,msg_bytes,raw_rounds,fused_rounds,raw_us,fused_us,speedup,bitwise
+  fusion_speedup,coll,sizes,msg_bytes,raw_rounds,fused_rounds,raw_us,fused_us,speedup,bitwise,tuned_opt,tuned_chunks
   fusion_device,coll,sizes,device_us,wall_us,source,events
   fusion_per_round,coll,sizes,msg_bytes,variant,phase,round,dur_us
+  fusion_per_round_chunk,coll,sizes,msg_bytes,phase,round,chunk,chunk_round,dur_us
   fusion_per_round_top,coll,sizes,variant,phase,round,dur_us,total,T
-  fusion_summary,bitwise_equal,B,rounds_reduced,R,device_latency,D,mean_speedup,S
+  chunking_check,coll,sizes,msg_bytes,c1_us,U,best_chunks,C,best_us,V,bitwise,B,win,W
+  fusion_summary,bitwise_equal,B,rounds_reduced,R,device_latency,D,mean_speedup,S,chunked_win,W
 
 ``--report-json`` (default ``benchmarks/BENCH_fusion.json``) writes the
-grid + device timings + per-round attribution + summary for the perf
-trajectory; ``--per-round`` runs only the span-derived attribution and
-merges it into the existing report. ``scripts/ci.sh`` gates on the summary
-row: the fused plan must never regress the unfused bitwise check, and
-SCAN/EXSCAN must need fewer rounds on every benched multi-axis mesh.
+grid + device timings + per-round attribution + chunking check + summary
+for the perf trajectory; ``--per-round`` runs only the span-derived
+attribution and merges it into the existing report. ``scripts/ci.sh``
+gates on the summary row (the tuned plan must never regress the raw
+bitwise check, SCAN/EXSCAN must need fewer rounds on every benched
+multi-axis mesh) and on the ``chunking_check`` row (bitwise + wall-clock
+win at the chunked grid point).
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
 from pathlib import Path
@@ -49,10 +67,14 @@ import numpy as np
 
 from repro.offload import (
     OffloadEngine,
+    TuningCache,
+    amortize_inner,
     build_plan,
+    deactivate,
     lower_sim,
     optimize_plan,
     plan_comm_rounds,
+    time_planned_collective,
 )
 
 DEFAULT_REPORT_PATH = Path(__file__).resolve().parent / "BENCH_fusion.json"
@@ -68,19 +90,32 @@ DEFAULT_TOPOLOGIES: Tuple[Tuple[int, ...], ...] = (
 )
 DEFAULT_PAYLOADS: Tuple[int, ...] = (1024, 65536)
 DEFAULT_COLLS: Tuple[str, ...] = ("scan", "exscan")
+#: chunk counts the grid measures per (raw, optimized) form
+DEFAULT_CHUNK_GRID: Tuple[int, ...] = (1, 2, 4, 8)
+SMOKE_CHUNK_GRID: Tuple[int, ...] = (1, 2, 4)
+
+#: the chunking-check point: past the pipelining threshold, where the
+#: serialized link term dominates the extra pipeline-fill alphas
+CHUNK_CHECK_SIZES: Tuple[int, ...] = (2, 8)
+CHUNK_CHECK_PAYLOAD: int = 1 << 20
+CHUNK_CHECK_CHUNKS: Tuple[int, ...] = (2, 4)
 
 
-def _time_fn(fn, arg, iters: int) -> float:
-    out = fn(arg)
-    jax.tree.map(lambda a: a.block_until_ready(), out)  # warm the jit
-    times = []
-    for _ in range(max(1, iters)):
-        t0 = time.perf_counter()
-        out = fn(arg)
-        jax.tree.map(lambda a: a.block_until_ready(), out)
-        times.append(time.perf_counter() - t0)
-    times.sort()
-    return times[len(times) // 2]
+def _grid_payload(p: int, payload: int) -> jnp.ndarray:
+    n = max(1, payload // 4)
+    rng = np.random.default_rng(p * 31 + payload)
+    # integer-valued floats: bitwise comparison must not trip over the
+    # -0.0 / rounding hazards of real-valued sums
+    return jnp.asarray(rng.integers(-6, 7, size=(p, n)).astype(np.float32))
+
+
+def _variant_plans(raw, opt, chunk_grid: Sequence[int]):
+    """Every (optimized, chunks) schedule variant of one plan, C=1 first."""
+    for optimized, plan in ((False, raw), (True, opt)):
+        for c in chunk_grid:
+            yield optimized, c, (
+                plan if c == 1 else dataclasses.replace(plan, chunking=c)
+            )
 
 
 def _per_round_profile(plan, x, iters: int) -> List[Dict]:
@@ -89,15 +124,17 @@ def _per_round_profile(plan, x, iters: int) -> List[Dict]:
     ``lower_sim(plan, traced=True)`` runs under a private collecting
     tracer, so every backend ``permute`` emits a ``round`` span whose
     duration (the backend blocks on the permuted result) is that round's
-    host dispatch cost. One warmup run keeps primitive compilation out of
-    the samples; the reported number is the per-round median over
-    ``iters`` runs.
+    host dispatch cost. Chunked plans label each span with its pipeline
+    coordinates (``chunk``, ``chunk_round``), which propagate into the
+    returned dicts. One warmup run keeps primitive compilation out of the
+    samples; the reported number is the per-round median over ``iters``
+    runs.
     """
     from repro.obs import tracing as obs_tracing
 
     fn = lower_sim(plan, traced=True)
-    samples: Dict[Tuple[str, int], List[float]] = {}
-    order: List[Tuple[str, int]] = []
+    samples: Dict[Tuple, List[float]] = {}
+    order: List[Tuple] = []
     with obs_tracing.tracing(obs_tracing.Tracer()) as tracer:
         fn(x)  # warmup
         for _ in range(max(1, iters)):
@@ -106,17 +143,25 @@ def _per_round_profile(plan, x, iters: int) -> List[Dict]:
             for s in tracer.spans():
                 if s.cat != "round":
                     continue
-                key = (str(s.args.get("phase")), int(s.args.get("round", 0)))
+                key = (
+                    str(s.args.get("phase")),
+                    int(s.args.get("round", 0)),
+                    int(s.args.get("chunk", -1)),
+                    int(s.args.get("chunk_round", -1)),
+                )
                 if key not in samples:
                     samples[key] = []
                     order.append(key)
                 samples[key].append(s.dur_us)
     rounds: List[Dict] = []
-    for phase, rnd in order:
-        durs = sorted(samples[(phase, rnd)])
-        rounds.append(
-            {"phase": phase, "round": rnd, "dur_us": durs[len(durs) // 2]}
-        )
+    for key in order:
+        durs = sorted(samples[key])
+        phase, rnd, chunk, chunk_round = key
+        entry = {"phase": phase, "round": rnd, "dur_us": durs[len(durs) // 2]}
+        if chunk >= 0:
+            entry["chunk"] = chunk
+            entry["chunk_round"] = chunk_round
+        rounds.append(entry)
     return rounds
 
 
@@ -126,14 +171,16 @@ def per_round(
     payloads: Sequence[int] = (1024,),
     colls: Sequence[str] = DEFAULT_COLLS,
     iters: int = 5,
+    chunked_c: int = 4,
     stats_out: Optional[list] = None,
 ) -> List[str]:
-    """Span-derived per-round latency attribution, raw vs fused.
+    """Span-derived per-round latency attribution: raw, fused, chunked.
 
     Only the first payload is profiled: the per-round host constant this
     section attributes is dispatch overhead, not bandwidth, so it is flat
     in payload at benchmark sizes (the grid section covers payload
-    scaling).
+    scaling). The ``chunked`` variant is the fused plan at C=chunked_c;
+    its rounds carry (chunk, chunk_round) pipeline coordinates.
     """
     rows: List[str] = []
     entries: List[Dict] = []
@@ -141,29 +188,37 @@ def per_round(
     for sizes in topologies:
         sizes = tuple(int(s) for s in sizes)
         p = int(np.prod(sizes))
-        n = max(1, payload // 4)
-        rng = np.random.default_rng(p * 31 + payload)
-        x = jnp.asarray(
-            rng.integers(-6, 7, size=(p, n)).astype(np.float32)
-        )
+        x = _grid_payload(p, payload)
         shape = "x".join(map(str, sizes))
         for coll in colls:
             raw = build_plan(
                 coll, sizes, "sum", payload,
                 order=tuple(range(len(sizes))),
             )
-            for variant, plan in (("raw", raw), ("fused", optimize_plan(raw))):
+            fused = optimize_plan(raw)
+            chunked = dataclasses.replace(fused, chunking=int(chunked_c))
+            for variant, plan in (
+                ("raw", raw), ("fused", fused), ("chunked", chunked)
+            ):
                 rounds = _per_round_profile(plan, x, iters)
                 total = sum(r["dur_us"] for r in rounds)
                 top = (
                     max(rounds, key=lambda r: r["dur_us"]) if rounds else None
                 )
                 for r in rounds:
-                    rows.append(
-                        f"fusion_per_round,{coll},{shape},{payload},"
-                        f"{variant},{r['phase']},{r['round']},"
-                        f"{r['dur_us']:.1f}"
-                    )
+                    if "chunk" in r:
+                        rows.append(
+                            f"fusion_per_round_chunk,{coll},{shape},"
+                            f"{payload},{r['phase']},{r['round']},"
+                            f"{r['chunk']},{r['chunk_round']},"
+                            f"{r['dur_us']:.1f}"
+                        )
+                    else:
+                        rows.append(
+                            f"fusion_per_round,{coll},{shape},{payload},"
+                            f"{variant},{r['phase']},{r['round']},"
+                            f"{r['dur_us']:.1f}"
+                        )
                 if top is not None:
                     rows.append(
                         f"fusion_per_round_top,{coll},{shape},{variant},"
@@ -176,6 +231,8 @@ def per_round(
                         "sizes": list(sizes),
                         "payload_bytes": payload,
                         "variant": variant,
+                        "chunks": int(chunked_c) if variant == "chunked"
+                        else 1,
                         "rounds": rounds,
                         "total_us": total,
                         "top_round": top,
@@ -186,11 +243,106 @@ def per_round(
     return rows
 
 
+def chunking_check(
+    *,
+    sizes: Tuple[int, ...] = CHUNK_CHECK_SIZES,
+    payload: int = CHUNK_CHECK_PAYLOAD,
+    chunks: Sequence[int] = CHUNK_CHECK_CHUNKS,
+    coll: str = "scan",
+    iters: int = 5,
+    stats_out: Optional[list] = None,
+) -> List[str]:
+    """Bitwise + wall-clock proof that chunked streaming engages and wins.
+
+    At the check point the payload is big enough that pipelining the
+    chunks across the doubling rounds beats paying the full serialized
+    payload per round: the best C > 1 schedule must measure faster than
+    C=1 on the same raw plan, and every chunked lowering must be
+    bitwise-identical to the unchunked one.
+
+    Timing is interleaved: one amortized sample per variant per sweep, the
+    per-variant minimum over all sweeps taken as the score. Sequential
+    per-variant blocks are vulnerable to machine-load drift (whichever
+    variant runs during a slow window loses regardless of merit); the
+    round-robin minimum cancels the drift and keeps this CI gate stable.
+    """
+    sizes = tuple(int(s) for s in sizes)
+    order = tuple(range(len(sizes)))
+    p = int(np.prod(sizes))
+    shape = "x".join(map(str, sizes))
+    inner = amortize_inner(payload)
+    raw = build_plan(coll, sizes, "sum", payload, order=order)
+    x = _grid_payload(p, payload)
+
+    def _sampler(plan):
+        run = lower_sim(plan)
+        fn = jax.jit(
+            lambda t: jax.lax.fori_loop(0, inner, lambda _i, a: run(a), t)
+        )
+        jax.tree.map(lambda a: a.block_until_ready(), fn(x))  # warm the jit
+
+        def sample() -> float:
+            t0 = time.perf_counter()
+            jax.tree.map(lambda a: a.block_until_ready(), fn(x))
+            return (time.perf_counter() - t0) / inner
+
+        return sample
+
+    grid = [1] + [int(c) for c in chunks]
+    samplers = {
+        c: _sampler(
+            raw if c == 1 else dataclasses.replace(raw, chunking=c)
+        )
+        for c in grid
+    }
+    best: Dict[int, float] = {c: float("inf") for c in grid}
+    for _ in range(max(int(iters), 5)):
+        for c, sample in samplers.items():
+            best[c] = min(best[c], sample())
+    t1 = best[1]
+    best_c, best_t = min(best.items(), key=lambda kv: (kv[1], kv[0]))
+    timings = {c: t * 1e6 for c, t in best.items()}
+    y1 = np.asarray(jax.jit(lower_sim(raw))(x))
+    bitwise = all(
+        np.array_equal(
+            np.asarray(
+                jax.jit(
+                    lower_sim(dataclasses.replace(raw, chunking=int(c)))
+                )(x)
+            ),
+            y1,
+        )
+        for c in chunks
+    )
+    win = best_c > 1 and best_t < t1
+    rows = [
+        f"chunking_check,{coll},{shape},{payload},c1_us,{t1 * 1e6:.1f},"
+        f"best_chunks,{best_c},best_us,{best_t * 1e6:.1f},"
+        f"bitwise,{int(bitwise)},win,{int(win)}"
+    ]
+    if stats_out is not None:
+        stats_out.append(
+            {
+                "coll": coll,
+                "sizes": list(sizes),
+                "payload_bytes": payload,
+                "timings_us": timings,
+                "c1_us": t1 * 1e6,
+                "best_chunks": best_c,
+                "best_us": best_t * 1e6,
+                "bitwise": bitwise,
+                "win": win,
+            }
+        )
+    return rows
+
+
 def run(
     *,
     topologies: Sequence[Tuple[int, ...]] = DEFAULT_TOPOLOGIES,
     payloads: Sequence[int] = DEFAULT_PAYLOADS,
     colls: Sequence[str] = DEFAULT_COLLS,
+    chunk_grid: Sequence[int] = DEFAULT_CHUNK_GRID,
     iters: int = 5,
     profile_axes: Tuple[int, ...] = (2, 2, 2),
     stats_out: Optional[list] = None,
@@ -200,40 +352,76 @@ def run(
     all_bitwise = True
     all_reduced = True
     speedups: List[float] = []
+    cache = TuningCache()
+    eng = OffloadEngine()
     for sizes in topologies:
         sizes = tuple(int(s) for s in sizes)
         p = int(np.prod(sizes))
+        order = tuple(range(len(sizes)))
         for payload in payloads:
-            n = max(1, payload // 4)
-            rng = np.random.default_rng(p * 31 + payload)
-            x = jnp.asarray(
-                rng.integers(-6, 7, size=(p, n)).astype(np.float32)
-            )
+            x = _grid_payload(p, payload)
+            inner = amortize_inner(payload)
             for coll in colls:
-                raw = build_plan(
-                    coll, sizes, "sum", payload,
-                    order=tuple(range(len(sizes))),
-                )
+                raw = build_plan(coll, sizes, "sum", payload, order=order)
                 opt = optimize_plan(raw)
                 rr, fr = plan_comm_rounds(raw), plan_comm_rounds(opt)
-                fn_raw = jax.jit(lower_sim(raw))
-                fn_opt = jax.jit(lower_sim(opt))
-                bitwise = bool(
-                    np.array_equal(
-                        np.asarray(fn_opt(x)), np.asarray(fn_raw(x))
+                y_raw = np.asarray(jax.jit(lower_sim(raw))(x))
+                # every (form, chunk) variant is a bitwise-identical
+                # reordering of the raw schedule; measure each one the way
+                # tune_schedule would and record it into the cache
+                bitwise = True
+                t_raw = None
+                for optimized, c, plan in _variant_plans(
+                    raw, opt, chunk_grid
+                ):
+                    if not (optimized is False and c == 1):
+                        bitwise &= bool(
+                            np.array_equal(
+                                np.asarray(jax.jit(lower_sim(plan))(x)),
+                                y_raw,
+                            )
+                        )
+                    t = time_planned_collective(
+                        coll, sizes, order, payload, iters=iters,
+                        optimized=optimized, chunking=c, inner=inner,
                     )
+                    cache.record_schedule(
+                        coll, sizes, optimized, c, payload, t
+                    )
+                    if optimized is False and c == 1:
+                        t_raw = t
+                winner = cache.schedule_winner(coll, sizes, payload)
+                w_opt, w_c = winner if winner is not None else (False, 1)
+                t_best = min(
+                    m.seconds
+                    for m in cache.fusion_measurements
+                    if m.coll == coll and m.sizes == sizes
+                    and m.payload_bytes == payload
                 )
-                t_raw = _time_fn(fn_raw, x, iters)
-                t_opt = _time_fn(fn_opt, x, iters)
-                speedup = t_raw / t_opt if t_opt > 0 else 0.0
-                all_bitwise &= bitwise
+                # exercise the winner end-to-end: make_descriptor must
+                # resolve it from the activated cache, and the engine
+                # dispatch of that descriptor must match raw bitwise
+                cache.activate()
+                try:
+                    desc = eng.make_descriptor(
+                        coll, axes=sizes, payload_bytes=payload, op="sum",
+                        split=order,
+                    )
+                finally:
+                    deactivate()
+                resolved = (desc.optimized, desc.chunks) == (w_opt, w_c)
+                bitwise &= bool(
+                    np.array_equal(np.asarray(eng.offload(desc, x)), y_raw)
+                )
+                speedup = t_raw / t_best if t_best > 0 else 0.0
+                all_bitwise &= bitwise and resolved
                 all_reduced &= fr < rr
                 speedups.append(speedup)
                 shape = "x".join(map(str, sizes))
                 rows.append(
                     f"fusion_speedup,{coll},{shape},{payload},{rr},{fr},"
-                    f"{t_raw*1e6:.1f},{t_opt*1e6:.1f},{speedup:.3f},"
-                    f"{int(bitwise)}"
+                    f"{t_raw * 1e6:.1f},{t_best * 1e6:.1f},{speedup:.3f},"
+                    f"{int(bitwise)},{int(w_opt)},{w_c}"
                 )
                 grid.append(
                     {
@@ -243,14 +431,16 @@ def run(
                         "raw_rounds": rr,
                         "fused_rounds": fr,
                         "raw_us": t_raw * 1e6,
-                        "fused_us": t_opt * 1e6,
+                        "fused_us": t_best * 1e6,
                         "speedup": speedup,
                         "bitwise": bitwise,
+                        "tuned_optimized": w_opt,
+                        "tuned_chunks": w_c,
+                        "winner_resolved": resolved,
                     }
                 )
 
     # profiler-sourced per-schedule device latency through the engine
-    eng = OffloadEngine()
     device: Dict[str, Dict] = {}
     p = int(np.prod(profile_axes))
     rng = np.random.default_rng(0)
@@ -258,7 +448,7 @@ def run(
     for coll in colls:
         desc = eng.make_descriptor(
             coll, axes=profile_axes, payload_bytes=64 * 4, op="sum",
-            optimize=True,
+            optimize=True, chunks=1,
         )
         t = eng.profile_offload(desc, xp)
         shape = "x".join(map(str, profile_axes))
@@ -286,7 +476,7 @@ def run(
         float(np.mean(speedups)) if speedups else 0.0
     )
 
-    # span-derived per-round attribution (raw vs fused, traced interpreter)
+    # span-derived per-round attribution (raw/fused/chunked, traced)
     per_round_stats: list = []
     rows.extend(
         per_round(
@@ -298,10 +488,19 @@ def run(
         )
     )
 
+    # chunked streaming must engage and win past the payload threshold
+    chunk_stats: list = []
+    rows.extend(chunking_check(iters=iters, stats_out=chunk_stats))
+    chunk_entry = chunk_stats[0] if chunk_stats else {}
+    chunked_win = bool(
+        chunk_entry.get("win") and chunk_entry.get("bitwise")
+    )
+
     rows.append(
         f"fusion_summary,bitwise_equal,{int(all_bitwise)},"
         f"rounds_reduced,{int(all_reduced)},"
-        f"device_latency,{int(has_device)},mean_speedup,{mean_speedup:.3f}"
+        f"device_latency,{int(has_device)},mean_speedup,{mean_speedup:.3f},"
+        f"chunked_win,{int(chunked_win)}"
     )
     if stats_out is not None:
         stats_out.append(
@@ -309,6 +508,7 @@ def run(
                 "grid": grid,
                 "device_latency": device,
                 "per_round": per_round_stats[0] if per_round_stats else [],
+                "chunking_check": chunk_entry,
                 "telemetry": {
                     "device_latency_by_coll_us": snap[
                         "device_latency_by_coll_us"
@@ -322,6 +522,7 @@ def run(
                     "rounds_reduced": all_reduced,
                     "device_latency": has_device,
                     "mean_speedup": mean_speedup,
+                    "chunked_win": chunked_win,
                 },
             }
         )
@@ -334,7 +535,8 @@ def smoke(stats_out: Optional[list] = None) -> List[str]:
         topologies=((2, 4), (2, 2, 2)),
         payloads=(1024,),
         colls=("scan", "exscan"),
-        iters=2,
+        chunk_grid=SMOKE_CHUNK_GRID,
+        iters=3,
         stats_out=stats_out,
     )
 
@@ -344,9 +546,13 @@ def write_report(path: Path, stats: list, mode: str) -> None:
         "benchmark": "fusion_speedup",
         "mode": mode,
         "columns": "rounds + measured us per (coll, sizes, payload); "
-        "device latency is profiler-sourced where source == 'profiler'; "
-        "per_round is the span-derived host cost of each communication "
-        "round (traced eager interpreter, median us)",
+        "fused_us is the measured winner of the (raw, optimized) x chunks "
+        "schedule grid (amortized timer); device latency is "
+        "profiler-sourced where source == 'profiler'; per_round is the "
+        "span-derived host cost of each communication round (traced eager "
+        "interpreter, median us; chunked rounds carry (chunk, chunk_round) "
+        "pipeline coordinates); chunking_check proves the chunked "
+        "schedule wins wall-clock past the payload threshold",
         **(stats[0] if stats else {}),
     }
     path.write_text(json.dumps(payload, indent=2) + "\n")
@@ -396,7 +602,7 @@ def main() -> None:
     stats: list = []
     print(
         "fusion_speedup,coll,sizes,msg_bytes,raw_rounds,fused_rounds,"
-        "raw_us,fused_us,speedup,bitwise"
+        "raw_us,fused_us,speedup,bitwise,tuned_opt,tuned_chunks"
     )
     for row in run(iters=iters, stats_out=stats):
         print(row)

@@ -40,13 +40,22 @@ def fmt_b(x) -> str:
     return f"{x:.0f}B"
 
 
+_NO_DRYRUN = (
+    "(no dry-run artifacts under benchmarks/artifacts/dryrun; run "
+    "`python -m repro.launch.dryrun --all` to populate this table)"
+)
+
+
 def roofline_table(mesh: str = "single") -> str:
+    recs = load(mesh)
+    if not recs:
+        return _NO_DRYRUN
     rows = [
         "| arch | shape | t_compute | t_memory | t_collective | bottleneck "
         "| useful/HLO | MFU@bound |",
         "|---|---|---|---|---|---|---|---|",
     ]
-    for r in load(mesh):
+    for r in recs:
         ro = r["roofline"]
         tb = max(ro["t_compute_s"], ro["t_memory_s"], ro["t_collective_s"])
         mfu = (
@@ -65,12 +74,15 @@ def roofline_table(mesh: str = "single") -> str:
 
 
 def dryrun_table(mesh: str) -> str:
+    recs = load(mesh)
+    if not recs:
+        return _NO_DRYRUN
     rows = [
         "| arch | shape | chips | compile | args/dev | temps/dev | "
         "collectives (AR/AG/RS/A2A/CP) | coll wire bytes |",
         "|---|---|---|---|---|---|---|---|",
     ]
-    for r in load(mesh):
+    for r in recs:
         m = r["memory"]
         c = r["collectives"]["counts"]
         n = r["n_chips"]
@@ -107,11 +119,12 @@ def fit_report(mesh: str = "single") -> str:
 def per_round_table() -> str:
     """Span-derived per-round attribution table from BENCH_fusion.json.
 
-    Each row is one (coll, mesh, raw|fused) traced lowering: how many
-    communication rounds the eager interpreter dispatched, the summed
+    Each row is one (coll, mesh, raw|fused|chunked) traced lowering: how
+    many communication rounds the eager interpreter dispatched, the summed
     host cost, and which single round dominates — the ranked answer to
     the ROADMAP wall-clock question of where the per-round constant
-    lives.
+    lives. Chunked variants attribute cost per (round, chunk) pipeline
+    cell, so the top-round column names the exact pipeline slot.
     """
     if not BENCH_FUSION.exists():
         return (
@@ -127,21 +140,77 @@ def per_round_table() -> str:
             "--report-json`)"
         )
     rows = [
-        "| coll | mesh | variant | rounds | host total | top round "
-        "| top phase | top cost | share |",
-        "|---|---|---|---|---|---|---|---|---|",
+        "| coll | mesh | variant | chunks | rounds | host total "
+        "| top round | top phase | top cost | share |",
+        "|---|---|---|---|---|---|---|---|---|---|",
     ]
     for e in entries:
         top = e.get("top_round") or {}
         total = e.get("total_us", 0.0)
         share = top.get("dur_us", 0.0) / total if total else 0.0
+        top_round = top.get("round", "-")
+        if "chunk" in top:
+            # pipeline cell: slot index plus its (chunk, per-chunk round)
+            top_round = (
+                f"{top_round} (c{top['chunk']} r{top.get('chunk_round', 0)})"
+            )
         rows.append(
             f"| {e['coll']} | {'x'.join(map(str, e['sizes']))} "
-            f"| {e['variant']} | {len(e.get('rounds', []))} "
-            f"| {fmt_s(total * 1e-6)} | {top.get('round', '-')} "
+            f"| {e['variant']} | {e.get('chunks', 1)} "
+            f"| {len(e.get('rounds', []))} "
+            f"| {fmt_s(total * 1e-6)} | {top_round} "
             f"| {top.get('phase', '-')} "
             f"| {fmt_s(top.get('dur_us', 0.0) * 1e-6)} "
             f"| {share * 100:.0f}% |"
+        )
+    return "\n".join(rows)
+
+
+def chunking_table() -> str:
+    """Chunked-streaming evidence from BENCH_fusion.json: the tuned
+    schedule winner per grid point and the chunking-check wall-clock
+    proof at the payload past the pipelining threshold."""
+    if not BENCH_FUSION.exists():
+        return (
+            "(no BENCH_fusion.json; run `python -m benchmarks.run "
+            "--smoke --report-json`)"
+        )
+    rep = json.loads(BENCH_FUSION.read_text())
+    rows = [
+        "| coll | mesh | payload | tuned schedule | speedup vs raw "
+        "| bitwise |",
+        "|---|---|---|---|---|---|",
+    ]
+    for r in rep.get("grid", []):
+        sched = (
+            f"{'fused' if r.get('tuned_optimized') else 'raw'}"
+            f", C={r.get('tuned_chunks', 1)}"
+        )
+        rows.append(
+            f"| {r['coll']} | {'x'.join(map(str, r['sizes']))} "
+            f"| {fmt_b(r['payload_bytes'])} | {sched} "
+            f"| {r.get('speedup', 0.0):.2f}x "
+            f"| {'yes' if r.get('bitwise') else 'NO'} |"
+        )
+    cc = rep.get("chunking_check") or {}
+    if cc:
+        timings = cc.get("timings_us", {})
+        cells = ", ".join(
+            f"C={c}: {float(t) / 1e3:.1f}ms"
+            for c, t in sorted(timings.items(), key=lambda kv: int(kv[0]))
+        )
+        gain = (
+            cc.get("c1_us", 0.0) / cc.get("best_us", 1.0)
+            if cc.get("best_us") else 0.0
+        )
+        rows.append("")
+        rows.append(
+            f"Chunking check — {cc.get('coll', '?')} on "
+            f"{'x'.join(map(str, cc.get('sizes', [])))} at "
+            f"{fmt_b(cc.get('payload_bytes', 0))}: {cells}. Best C="
+            f"{cc.get('best_chunks', 1)} beats unchunked by {gain:.2f}x "
+            f"(bitwise {'holds' if cc.get('bitwise') else 'FAILS'}, "
+            f"win={'yes' if cc.get('win') else 'no'})."
         )
     return "\n".join(rows)
 

@@ -13,10 +13,11 @@
   service_throughput            -- multi-tenant broker requests/sec and
                                    p50/p99 latency vs client count, with
                                    coalescing on/off
-  fusion_speedup                -- plan-optimizer fused vs unfused planned
-                                   collectives: communication rounds +
-                                   measured us + bitwise proof + profiler-
-                                   sourced per-schedule device latency
+  fusion_speedup                -- tuned schedule grid (fused x chunked
+                                   streaming) vs raw planned collectives:
+                                   communication rounds + measured us +
+                                   bitwise proof + chunking check +
+                                   profiler-sourced device latency
   roofline (report)             -- dry-run derived roofline tables
 
 Prints ``name,...,derived`` CSV sections. Run:
@@ -115,12 +116,12 @@ def main() -> None:
             print(row)
         print()
         print(
-            "# === Fusion smoke: plan-optimizer fused vs unfused "
-            "(rounds + bitwise + profiler-sourced device latency) ==="
+            "# === Fusion smoke: tuned schedule grid vs raw "
+            "(rounds + bitwise + chunked streaming + device latency) ==="
         )
         print(
             "fusion_speedup,coll,sizes,msg_bytes,raw_rounds,fused_rounds,"
-            "raw_us,fused_us,speedup,bitwise"
+            "raw_us,fused_us,speedup,bitwise,tuned_opt,tuned_chunks"
         )
         fusion_stats: list = []
         for row in fusion_speedup.smoke(stats_out=fusion_stats):
@@ -202,10 +203,10 @@ def main() -> None:
         _write_report(Path(args.report_json), service_stats, "full")
 
     print()
-    print("# === Fusion speedup: plan-optimizer fused vs unfused ===")
+    print("# === Fusion speedup: tuned schedule grid vs raw ===")
     print(
         "fusion_speedup,coll,sizes,msg_bytes,raw_rounds,fused_rounds,"
-        "raw_us,fused_us,speedup,bitwise"
+        "raw_us,fused_us,speedup,bitwise,tuned_opt,tuned_chunks"
     )
     fusion_stats: list = []
     for row in fusion_speedup.run(

@@ -16,7 +16,10 @@
 # bitwise equal to direct engine dispatch with a coalesce factor > 1, and
 # proves the plan-optimizer pass pipeline: fused plans bitwise-equal to
 # unfused, fewer SCAN/EXSCAN communication rounds on multi-axis meshes, and
-# a profiler-sourced per-schedule device latency in the engine telemetry.
+# a profiler-sourced per-schedule device latency in the engine telemetry,
+# plus the chunked-streaming check: every chunked lowering bitwise-equal to
+# the unchunked schedule and the tuned chunked plan beating C=1 wall-clock
+# past the payload threshold.
 # The service check (repro.testing.service_check) then exercises the broker
 # in driver mode on a real 2x2 mesh: 4 concurrent tenant streams, bitwise
 # equality, backpressure isolation, and registry split-winner inheritance.
@@ -55,7 +58,10 @@ grep -q "^service_smoke_summary,bitwise_equal,1,coalesce_gt1,1," "$SMOKE_OUT" \
   || { echo "CI FAIL: service smoke missing, not bitwise, or not coalescing"; exit 1; }
 grep -q "^fusion_summary,bitwise_equal,1,rounds_reduced,1,device_latency,1," "$SMOKE_OUT" \
   || { echo "CI FAIL: plan-optimizer smoke missing, fused plan regressed the bitwise check, or rounds/device-latency not reported"; exit 1; }
+grep -Eq "^chunking_check,.*,bitwise,1,win,1$" "$SMOKE_OUT" \
+  || { echo "CI FAIL: chunked streaming check missing, not bitwise, or the tuned chunked plan no longer beats C=1 wall-clock"; exit 1; }
 echo "fusion speedup: $(grep '^fusion_summary,' "$SMOKE_OUT")"
+echo "chunked streaming: $(grep '^chunking_check,' "$SMOKE_OUT")"
 
 echo
 echo "=== multi-tenant service check (driver mode, 2x2 mesh) ==="

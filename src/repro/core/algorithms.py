@@ -39,7 +39,7 @@ Fidelity notes (paper section III):
 from __future__ import annotations
 
 import math
-from typing import Any, List, Sequence, Tuple
+from typing import Any, Callable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -49,6 +49,18 @@ from repro.core.operators import AssocOp
 
 PyTree = Any
 Perm = List[Tuple[int, int]]
+
+#: schedules whose chunked (pipelined) form is implemented round-by-round;
+#: other algorithms chunk at whole-schedule granularity (chunk-major).
+DOUBLING_ALGORITHMS = frozenset({"hillis_steele", "invertible_doubling"})
+
+#: per-leaf byte ceiling for the contiguous-shift permute fast path. The
+#: padded-copy realization moves the *whole* block (p rows) where the
+#: dynamic-update-slice chain moves only the p-d shifted rows in place, so
+#: pad wins while the per-op dispatch constant dominates (small blocks) and
+#: loses once the copy is bandwidth-bound (big blocks) — measured crossover
+#: on the sim backend sits near 64 KiB.
+SHIFT_FAST_PATH_MAX_BYTES = 65536
 
 
 # ---------------------------------------------------------------------------
@@ -124,12 +136,44 @@ class SpmdBackend(Backend):
         return out
 
 
+def as_contiguous_shift(perm: Perm, p: int) -> Optional[int]:
+    """Recognize ``perm`` as a dense shift of the rank range.
+
+    Returns ``d`` when ``perm`` is exactly ``[(i, i + d) for i in
+    range(p - d)]`` (``d > 0``, shift toward higher ranks) or ``[(i, i + d)
+    for i in range(-d, p)]`` (``d < 0``, shift toward lower ranks) in any
+    pair order, else ``None``. Every doubling-schedule round and every
+    structural EXSCAN shift is of this form.
+    """
+    if not perm:
+        return None
+    deltas = {dst - src for src, dst in perm}
+    if len(deltas) != 1:
+        return None
+    d = deltas.pop()
+    if d == 0:
+        return None
+    srcs = sorted(src for src, _ in perm)
+    want = list(range(p - d)) if d > 0 else list(range(-d, p))
+    if srcs != want or len(perm) != len(srcs):
+        return None
+    return d
+
+
 class SimBackend(Backend):
     """Single-device simulator: every pytree leaf carries a leading rank axis.
 
     Semantically identical to SpmdBackend (missing in-edges deliver zeros);
     used by property tests and by the host-orchestrated baseline, where each
     ``permute`` models one host-driven message hop.
+
+    Contiguous shifts (every doubling round, every structural EXSCAN shift)
+    take a streaming fast path: one padded block copy instead of a chain of
+    per-pair dynamic-update-slices — the software analogue of the NIC
+    DMA-ing one contiguous segment. Values are identical either way (same
+    permutation, same zero fill); the fast path is gated to small blocks
+    (:data:`SHIFT_FAST_PATH_MAX_BYTES`) where the per-op constant, not the
+    copy bandwidth, dominates.
     """
 
     def __init__(self, p: int):
@@ -139,7 +183,17 @@ class SimBackend(Backend):
         return jnp.arange(self.p, dtype=jnp.int32)
 
     def permute(self, tree: PyTree, perm: Perm) -> PyTree:
+        d = as_contiguous_shift(list(perm), self.p)
+
         def shuffle(a):
+            if (
+                d is not None
+                and a.size * a.dtype.itemsize <= SHIFT_FAST_PATH_MAX_BYTES
+            ):
+                tail = [(0, 0)] * (a.ndim - 1)
+                if d > 0:
+                    return jnp.pad(a[: self.p - d], [(d, 0)] + tail)
+                return jnp.pad(a[-d:], [(0, -d)] + tail)
             out = jnp.zeros_like(a)
             for src, dst in perm:
                 out = out.at[dst].set(a[src])
@@ -428,6 +482,27 @@ def scan_total_schedule(
     if p == 1:
         y = x if inclusive else op.identity_like(x)
         return y, x
+    if op.zero_identity:
+        # zero-fill *is* the identity: both streams run flag-free, exactly
+        # like hillis_steele's fast path. Halves the wire payload (no flag
+        # leaves) and drops every mask select from the compiled schedule.
+        if inclusive:
+            pre = x
+        else:
+            pre = backend.permute(x, [(i, i + 1) for i in range(p - 1)])
+        suf = x
+        for k in range(num_steps(p)):
+            d = 1 << k
+            rv = backend.permute(pre, [(i, i + d) for i in range(p - d)])
+            pre = op.combine(rv, pre)
+            sv = backend.permute(suf, [(i + d, i) for i in range(p - d)])
+            suf = op.combine(suf, sv)
+        if inclusive:
+            sv = backend.permute(suf, [(i + 1, i) for i in range(p - 1)])
+            return pre, op.combine(pre, sv)
+        total = op.combine(pre, suf)
+        rank = backend.rank()
+        return _bwhere(rank != 0, pre, op.identity_like(x)), total
     one = _ones_flag(backend)
     if inclusive:
         pre_v, pre_f = x, one
@@ -464,6 +539,297 @@ def scan_total_schedule(
 def scan_total_step_count(p: int) -> int:
     """Rounds of the fused schedule (the planner's cost-model alpha term)."""
     return num_steps(p) + 1 if p > 1 else 0
+
+
+# ---------------------------------------------------------------------------
+# Chunked payload streaming: split the payload into C contiguous chunks and
+# software-pipeline them across exchange steps. Chunk c runs round r at
+# pipeline step t = c + r, so chunk k's round-r exchange is issued alongside
+# chunk k-1's round-(r+1) combine — on a real backend (SPMD ppermutes) the
+# independent per-chunk exchanges overlap; on the simulator the interleaved
+# issue order is the rehearsal of the same pipeline. Each chunk runs the
+# *identical* per-round schedule on its slice, and every registered operator
+# combines elementwise across payload dims, so the concatenated chunked
+# result is bitwise-equal to the unchunked schedule for any operator, any
+# CollType, and any chunk count.
+# ---------------------------------------------------------------------------
+
+
+def chunk_bounds(n: int, chunks: int) -> List[int]:
+    """Contiguous chunk boundaries: ``chunks + 1`` offsets into ``range(n)``."""
+    return [n * c // chunks for c in range(chunks + 1)]
+
+
+def chunkable(tree: PyTree, chunks: int, *, min_ndim: int = 1) -> bool:
+    """True when every leaf can be split into ``chunks`` nonempty contiguous
+    blocks along its last axis and all leaves agree on that axis size
+    (keeps cross-leaf broadcasting in pytree operators aligned).
+
+    ``min_ndim`` guards against chunking the wrong axis: the sim backend
+    stacks a leading rank axis onto every leaf, so a scalar-per-rank payload
+    is a 1-D leaf whose *last* axis is the rank axis — callers there pass
+    ``min_ndim=2`` so such payloads fall back to the unchunked schedule.
+    """
+    if chunks <= 1:
+        return False
+    leaves = jax.tree.leaves(tree)
+    if not leaves:
+        return False
+    if any(leaf.ndim < min_ndim for leaf in leaves):
+        return False
+    lens = {leaf.shape[-1] for leaf in leaves}
+    return len(lens) == 1 and lens.pop() >= chunks
+
+
+def split_chunks(tree: PyTree, chunks: int) -> List[PyTree]:
+    """Split every leaf along its last axis into ``chunks`` contiguous slices."""
+    n = jax.tree.leaves(tree)[0].shape[-1]
+    bounds = chunk_bounds(n, chunks)
+    return [
+        jax.tree.map(lambda a, c=c: a[..., bounds[c]:bounds[c + 1]], tree)
+        for c in range(chunks)
+    ]
+
+
+def concat_chunks(parts: Sequence[PyTree]) -> PyTree:
+    """Inverse of :func:`split_chunks`: concatenate along the last axis."""
+    if len(parts) == 1:
+        return parts[0]
+    return jax.tree.map(
+        lambda *leaves: jnp.concatenate(leaves, axis=-1), *parts
+    )
+
+
+def _set_chunk_context(backend: Backend, chunk: int, rnd: int) -> None:
+    """Tag the backend's next permutes with (chunk, per-chunk round) — the
+    tracing backend picks this up for per-(round, chunk) span attribution."""
+    setter = getattr(backend, "set_chunk_context", None)
+    if setter is not None:
+        setter(chunk, rnd)
+
+
+def _pipeline(
+    backend: Backend,
+    states: List[Any],
+    round_fns: Sequence[Callable[[Any, int], Any]],
+) -> List[Any]:
+    """Run every chunk through ``round_fns`` in software-pipeline order.
+
+    ``states[c]`` is chunk c's schedule state; ``round_fns[r](state, c)``
+    advances one chunk by one round (issuing that round's exchanges). Step t
+    serves chunk c at round ``t - c``: the first round of chunk c overlaps
+    the later rounds of chunks ``< c``, including the entry/exit structural
+    shifts that ride the round list like any other exchange.
+    """
+    chunks = len(states)
+    rounds = len(round_fns)
+    for t in range(rounds + chunks - 1):
+        for c in range(max(0, t - rounds + 1), min(chunks, t + 1)):
+            r = t - c
+            _set_chunk_context(backend, c, r)
+            states[c] = round_fns[r](states[c], c)
+    _set_chunk_context(backend, -1, -1)
+    return states
+
+
+def chunked_scan_schedule(
+    backend: Backend,
+    x: PyTree,
+    op: AssocOp,
+    *,
+    chunks: int,
+    shift_first: bool = False,
+    identity: Optional[PyTree] = None,
+) -> PyTree:
+    """Chunked, pipelined doubling scan (hillis_steele round structure).
+
+    Runs the inclusive distance-doubling schedule per chunk; with
+    ``shift_first`` the structural EXSCAN shift is the first pipelined round
+    (chunk c's shift is issued alongside chunk c-1's first exchange, so the
+    shift never costs a standalone step). ``identity`` (non-zero-identity
+    operators only) replaces rank 0's shifted-in zeros before the doubling
+    rounds, mirroring ``sim_scan``/``dist_exscan``. Callers apply any final
+    rank-0 masking to the concatenated result — it is elementwise, so
+    per-chunk and whole-payload application are bitwise-identical.
+    """
+    p = backend.p
+    if p == 1 or chunks <= 1 or not chunkable(x, chunks):
+        raise ValueError(
+            "chunked_scan_schedule needs p > 1 and a chunkable payload; "
+            "callers fall back to the unchunked schedule"
+        )
+    lg = num_steps(p)
+    rank = backend.rank()
+    masked = not op.zero_identity
+
+    def shift_round(state, c):
+        # mirrors sim_scan/dist_exscan: the structural shift moves the bare
+        # value tree; masked ops then fill rank 0 with the identity and the
+        # doubling rounds restart with all-ones flags (ident_parts is bound
+        # by the time the pipeline calls this).
+        perm = [(i, i + 1) for i in range(p - 1)]
+        if not masked:
+            return backend.permute(state, perm)
+        val, flag = state
+        val = backend.permute(val, perm)
+        val = _bwhere(rank != 0, val, ident_parts[c])
+        return val, flag
+
+    def doubling(k: int):
+        d = 1 << k
+        perm = [(i, i + d) for i in range(p - d)]
+
+        def rnd(state, c):
+            if masked:
+                rv, rf = backend.permute(state, perm)
+                return _combine_lr(op, rv, rf, state[0], state[1])
+            recv = backend.permute(state, perm)
+            return op.combine(recv, state)
+
+        return rnd
+
+    if masked and shift_first and identity is None:
+        raise ValueError(
+            "non-zero-identity shift_first needs the identity tree to fill "
+            "rank 0 (sim_scan always provides it)"
+        )
+    parts = split_chunks(x, chunks)
+    ident_parts = (
+        split_chunks(identity, chunks) if identity is not None else None
+    )
+    if masked:
+        one = _ones_flag(backend)
+        states: List[Any] = [(part, one) for part in parts]
+    else:
+        states = list(parts)
+    round_fns: List[Callable[[Any, int], Any]] = []
+    if shift_first:
+        round_fns.append(shift_round)
+    round_fns.extend(doubling(k) for k in range(lg))
+    states = _pipeline(backend, states, round_fns)
+    if masked:
+        states = [v for v, _ in states]
+    return concat_chunks(states)
+
+
+def chunked_scan_total_schedule(
+    backend: Backend,
+    x: PyTree,
+    op: AssocOp,
+    *,
+    chunks: int,
+    inclusive: bool = True,
+) -> Tuple[PyTree, PyTree]:
+    """Chunked, pipelined form of :func:`scan_total_schedule`.
+
+    Per chunk the round list is exactly the fused schedule's: the exclusive
+    form's entry shift and the inclusive form's exit suffix-fetch are
+    pipelined rounds, so they overlap neighboring chunks' doubling
+    exchanges instead of serializing. Returns ``(scan, total)`` bitwise
+    equal to the unchunked fused schedule.
+    """
+    p = backend.p
+    if p == 1 or chunks <= 1 or not chunkable(x, chunks):
+        raise ValueError(
+            "chunked_scan_total_schedule needs p > 1 and a chunkable "
+            "payload; callers fall back to the unchunked schedule"
+        )
+    lg = num_steps(p)
+    rank = backend.rank()
+    lean = op.zero_identity
+    one = None if lean else _ones_flag(backend)
+
+    # state per chunk: (prefix stream, suffix stream); each stream is a bare
+    # tree (lean) or a (value, flag) pair (masked).
+    def entry_shift(state, c):
+        pre, suf = state
+        perm = [(i, i + 1) for i in range(p - 1)]
+        return backend.permute(pre, perm), suf
+
+    def doubling(k: int):
+        d = 1 << k
+        up = [(i, i + d) for i in range(p - d)]
+        down = [(i + d, i) for i in range(p - d)]
+
+        def rnd(state, c):
+            pre, suf = state
+            if lean:
+                pre = op.combine(backend.permute(pre, up), pre)
+                suf = op.combine(suf, backend.permute(suf, down))
+            else:
+                rv, rf = backend.permute(pre, up)
+                pre = _combine_lr(op, rv, rf, pre[0], pre[1])
+                sv, sf = backend.permute(suf, down)
+                suf = _combine_lr(op, suf[0], suf[1], sv, sf)
+            return pre, suf
+
+        return rnd
+
+    def exit_fetch(state, c):
+        # inclusive only: total_r = prefix[0..r] (+) suffix[r+1..]
+        pre, suf = state
+        perm = [(i + 1, i) for i in range(p - 1)]
+        if lean:
+            total = op.combine(pre, backend.permute(suf, perm))
+        else:
+            sv, sf = backend.permute(suf, perm)
+            total, _ = _combine_lr(op, pre[0], pre[1], sv, sf)
+        return pre, total
+
+    parts = split_chunks(x, chunks)
+    if lean:
+        states: List[Any] = [(part, part) for part in parts]
+    else:
+        states = [((part, one), (part, one)) for part in parts]
+    round_fns: List[Callable[[Any, int], Any]] = []
+    if not inclusive:
+        round_fns.append(entry_shift)
+    round_fns.extend(doubling(k) for k in range(lg))
+    if inclusive:
+        round_fns.append(exit_fetch)
+    states = _pipeline(backend, states, round_fns)
+
+    if inclusive:
+        if lean:
+            scans = [pre for pre, _ in states]
+        else:
+            scans = [pre_vf[0] for pre_vf, _ in states]
+        totals = [total for _, total in states]
+        return concat_chunks(scans), concat_chunks(totals)
+    # exclusive: prefix covers [0..r-1]; same-rank suffix covers [r..p-1]
+    scans, totals = [], []
+    for pre, suf in states:
+        if lean:
+            totals.append(op.combine(pre, suf))
+            scans.append(pre)
+        else:
+            total, _ = _combine_lr(op, pre[0], pre[1], suf[0], suf[1])
+            totals.append(total)
+            scans.append(pre[0])
+    scan = concat_chunks(scans)
+    y = _bwhere(rank != 0, scan, op.identity_like(x))
+    return y, concat_chunks(totals)
+
+
+def run_chunked(
+    fn: Callable[[PyTree], PyTree],
+    tree: PyTree,
+    chunks: int,
+    *,
+    min_ndim: int = 1,
+) -> PyTree:
+    """Chunk-major fallback: run a whole schedule per chunk and concatenate.
+
+    Each chunk runs the identical schedule on its slice, so bitwise equality
+    with the unchunked form holds for the same reason as the pipelined path
+    — but the per-round constant is paid ``chunks`` times over, so the plan
+    lowerings do *not* use this for phases without a pipelined variant (they
+    run those phases whole); it exists for tests and host-side callers that
+    want chunk-granular scheduling regardless.
+    """
+    if chunks <= 1 or not chunkable(tree, chunks, min_ndim=min_ndim):
+        return fn(tree)
+    return concat_chunks([fn(part) for part in split_chunks(tree, chunks)])
 
 
 ALGORITHMS = {

@@ -20,9 +20,11 @@ the whole request, topology included, round-trips through ``encode``/
 ``decode`` and cache-keys the compiled schedule. The 16th word is the
 ``optimized`` flag: 1 iff the plan-optimizer pass pipeline
 (``repro.offload.passes``) runs for this request, so brokered, cached, and
-remote dispatches agree on the compiled schedule's shape. Legacy 10-word
-descriptors (no topology) decode as single-axis requests; 15-word
-descriptors (topology, pre-optimizer) decode with the flag off.
+remote dispatches agree on the compiled schedule's shape. When chunked
+streaming is requested (``chunks > 1``) a 17th word carries the payload
+chunk count; unchunked descriptors keep the 16-word encoding unchanged.
+Legacy 10-word descriptors (no topology) decode as single-axis requests;
+15-word descriptors (topology, pre-optimizer) decode with the flag off.
 """
 
 from __future__ import annotations
@@ -86,11 +88,13 @@ class WireDType(enum.IntEnum):
 #: most mesh axes a descriptor can encode (inner, outer, pod)
 MAX_AXES = 3
 
-#: encoded word counts: legacy single-axis, topology-carrying, and the
-#: optimizer-flagged layout (one extra flag word; see ``encode``)
+#: encoded word counts: legacy single-axis, topology-carrying, the
+#: optimizer-flagged layout, and the chunked-streaming layout (each one
+#: extra word; see ``encode``)
 _LEGACY_WORDS = 10
 _TOPO_WORDS = _LEGACY_WORDS + MAX_AXES + 2  # n_axes + sizes + split index
 _OPT_WORDS = _TOPO_WORDS + 1                # + "optimized" flag word
+_CHUNK_WORDS = _OPT_WORDS + 1               # + payload chunk count word
 
 
 def split_index(order: "tuple[int, ...]") -> int:
@@ -152,12 +156,23 @@ class CollectiveDescriptor:
     axes: "tuple[int, ...]" = ()
     split: "tuple[int, ...]" = ()
     optimized: bool = False
+    #: payload chunk count for chunked streaming (1 = whole-payload rounds;
+    #: the wire layout only grows the extra word when chunks > 1, so every
+    #: pre-chunking descriptor keeps its exact byte encoding)
+    chunks: int = 1
 
     def __post_init__(self):
         if self.optimized and not self.axes:
             raise ValueError(
                 "optimized flag requires a multi-axis topology (the plan "
                 "optimizer runs on planned collectives only)"
+            )
+        if self.chunks < 1:
+            raise ValueError(f"chunks must be >= 1, got {self.chunks}")
+        if self.chunks > 1 and not self.axes:
+            raise ValueError(
+                "chunked streaming requires a multi-axis (planned) "
+                "descriptor; single-axis requests always run unchunked"
             )
         if self.axes:
             if len(self.axes) > MAX_AXES:
@@ -208,37 +223,41 @@ class CollectiveDescriptor:
         "optimized" flag word (1 iff the plan-optimizer pass pipeline runs
         for this request — brokered and cached dispatches must agree on it,
         so it travels on the wire like every other schedule-shaping field).
+        When ``chunks > 1`` a 17th word carries the chunk count; unchunked
+        requests keep the 16-word layout byte-for-byte, so existing logged
+        and cached encodings stay valid.
         """
         sizes = list(self.axes) + [0] * (MAX_AXES - len(self.axes))
         split = split_index(self.split) if self.axes else 0
-        return np.asarray(
-            [
-                self.comm_id,
-                self.comm_size,
-                int(self.coll_type),
-                int(_ALGO_IDS[self.algo_type]),
-                self.rank,
-                self.root,
-                int(self.operation),
-                int(self.data_type),
-                self.count,
-                int(self.msg_type),
-                len(self.axes),
-                *sizes,
-                split,
-                int(self.optimized),
-            ],
-            dtype=np.uint32,
-        )
+        words = [
+            self.comm_id,
+            self.comm_size,
+            int(self.coll_type),
+            int(_ALGO_IDS[self.algo_type]),
+            self.rank,
+            self.root,
+            int(self.operation),
+            int(self.data_type),
+            self.count,
+            int(self.msg_type),
+            len(self.axes),
+            *sizes,
+            split,
+            int(self.optimized),
+        ]
+        if self.chunks > 1:
+            words.append(self.chunks)
+        return np.asarray(words, dtype=np.uint32)
 
     @staticmethod
     def decode(words: np.ndarray) -> "CollectiveDescriptor":
         w = [int(v) for v in np.asarray(words, dtype=np.uint32)]
-        if len(w) not in (_LEGACY_WORDS, _TOPO_WORDS, _OPT_WORDS):
+        if len(w) not in (_LEGACY_WORDS, _TOPO_WORDS, _OPT_WORDS,
+                          _CHUNK_WORDS):
             raise ValueError(
                 f"descriptor must be {_LEGACY_WORDS} (legacy), "
-                f"{_TOPO_WORDS} (topology), or {_OPT_WORDS} (optimizer "
-                f"flag) words; got {len(w)}"
+                f"{_TOPO_WORDS} (topology), {_OPT_WORDS} (optimizer "
+                f"flag), or {_CHUNK_WORDS} (chunked) words; got {len(w)}"
             )
         axes: "tuple[int, ...]" = ()
         split: "tuple[int, ...]" = ()
@@ -246,7 +265,8 @@ class CollectiveDescriptor:
             n = w[_LEGACY_WORDS]
             axes = tuple(w[_LEGACY_WORDS + 1 : _LEGACY_WORDS + 1 + n])
             split = split_from_index(w[_LEGACY_WORDS + 1 + MAX_AXES], n)
-        optimized = bool(w[_OPT_WORDS - 1]) if len(w) == _OPT_WORDS else False
+        optimized = bool(w[_OPT_WORDS - 1]) if len(w) >= _OPT_WORDS else False
+        chunks = max(1, w[_CHUNK_WORDS - 1]) if len(w) == _CHUNK_WORDS else 1
         return CollectiveDescriptor(
             comm_id=w[0],
             comm_size=w[1],
@@ -261,4 +281,5 @@ class CollectiveDescriptor:
             axes=axes,
             split=split,
             optimized=optimized,
+            chunks=chunks,
         )

@@ -343,6 +343,14 @@ def main() -> None:
         help="also measure plan-optimizer fused-vs-unfused winners per "
         "mesh shape (feeds make_descriptor's optimize='auto')",
     )
+    ap.add_argument(
+        "--chunks",
+        metavar="C,C,...",
+        default=None,
+        help="with --fusion, widen the measured grid to these chunked-"
+        "streaming chunk counts per (fused, unfused) schedule (e.g. "
+        "1,2,4,8 — feeds make_descriptor's chunks='auto')",
+    )
     ap.add_argument("--out", default=str(DEFAULT_TABLE_PATH))
     ap.add_argument("--budget-s", type=float, default=60.0)
     ap.add_argument("--iters", type=int, default=5)
@@ -371,10 +379,18 @@ def main() -> None:
             cache=cache,
             verbose=True,
         )
+    if args.chunks and not args.fusion:
+        ap.error("--chunks widens the --fusion grid; pass --fusion too")
     if args.fusion:
-        from repro.offload import tune_fusion
+        from repro.offload import tune_schedule
 
-        tune_fusion(
+        chunk_grid = (
+            tuple(int(c) for c in args.chunks.split(","))
+            if args.chunks
+            else (1,)
+        )
+        tune_schedule(
+            chunks=chunk_grid,
             iters=args.iters,
             time_budget_s=args.budget_s,
             cache=cache,
@@ -401,6 +417,11 @@ def main() -> None:
         print(f"axis-split winners: {len(cache.split_winners)} shapes")
     if cache.fusion_winners:
         print(f"fusion winners: {len(cache.fusion_winners)} shapes")
+        chunked = sum(
+            1 for _opt, c in cache.schedule_winners.values() if c > 1
+        )
+        if chunked:
+            print(f"chunked-streaming winners: {chunked} grid points")
     print(f"export {TUNING_TABLE_ENV}={out}  # to use it in later launches")
 
 

@@ -307,6 +307,14 @@ class TracingBackend:
     wants attributed. Only meaningful on the eager sim backend: inside jit
     there is no per-round host work to measure, and this wrapper must never
     be used there.
+
+    Chunked-streaming schedules (:func:`repro.core.algorithms._pipeline`)
+    announce the (chunk, schedule-round) coordinates of each pipeline slot
+    via :meth:`set_chunk_context` before issuing its permute; while set,
+    round spans carry ``chunk`` and ``chunk_round`` args, so the per-round
+    cost table can attribute time per (round, chunk) cell. Unchunked
+    schedules never call it and their spans are arg-for-arg what they were
+    before chunking existed.
     """
 
     def __init__(
@@ -322,6 +330,8 @@ class TracingBackend:
         self.phase = phase
         self.on_round = on_round
         self.rounds = 0
+        self._chunk = -1
+        self._chunk_round = -1
 
     @property
     def p(self) -> int:
@@ -330,9 +340,17 @@ class TracingBackend:
     def rank(self):
         return self.inner.rank()
 
+    def set_chunk_context(self, chunk: int, rnd: int) -> None:
+        """Label subsequent rounds with pipeline coordinates (-1 clears)."""
+        self._chunk = int(chunk)
+        self._chunk_round = int(rnd)
+
     def permute(self, tree: Any, perm: Any) -> Any:
         idx = self.rounds
         self.rounds += 1
+        extra: Dict[str, Any] = {}
+        if self._chunk >= 0:
+            extra = {"chunk": self._chunk, "chunk_round": self._chunk_round}
         t0 = now_us()
         with self.tracer.span(
             f"plan.round:{idx}",
@@ -340,6 +358,7 @@ class TracingBackend:
             round=idx,
             phase=self.phase,
             messages=len(perm),
+            **extra,
         ):
             out = self.inner.permute(tree, perm)
             out = _block(out)

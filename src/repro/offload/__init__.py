@@ -28,12 +28,15 @@ from repro.offload.hierarchical import (
     sim_hierarchical_scan,
 )
 from repro.offload.passes import (
+    CHUNK_CANDIDATES,
     PASS_NAMES,
     choose_optimization,
+    choose_schedule,
     eliminate_dead_phases,
     fuse_scan_total,
     optimize_plan,
     plan_comm_rounds,
+    select_chunking,
 )
 from repro.offload.planner import (
     CollectivePlan,
@@ -54,13 +57,16 @@ from repro.offload.profiling import (
     profile_offload,
 )
 from repro.offload.tuner import (
+    DEFAULT_CHUNKS,
     DEFAULT_PAYLOADS,
     DEFAULT_PS,
     DEFAULT_TOPOLOGIES,
+    amortize_inner,
     autotune,
     time_planned_collective,
     time_sim_collective,
     tune_fusion,
+    tune_schedule,
     tune_splits,
 )
 from repro.offload.tuning_cache import (
@@ -74,9 +80,11 @@ from repro.offload.tuning_cache import (
 )
 
 __all__ = [
+    "CHUNK_CANDIDATES",
     "COLL_KIND",
     "CollectivePlan",
     "CompiledSchedule",
+    "DEFAULT_CHUNKS",
     "DEFAULT_PAYLOADS",
     "DEFAULT_PS",
     "DEFAULT_TOPOLOGIES",
@@ -92,9 +100,11 @@ __all__ = [
     "SplitMeasurement",
     "TUNING_TABLE_ENV",
     "TuningCache",
+    "amortize_inner",
     "autotune",
     "build_plan",
     "choose_optimization",
+    "choose_schedule",
     "deactivate",
     "dist_hierarchical_scan",
     "eliminate_dead_phases",
@@ -111,10 +121,12 @@ __all__ = [
     "plan_layout",
     "plan_layout_moves",
     "profile_offload",
+    "select_chunking",
     "sim_hierarchical_scan",
     "time_planned_collective",
     "time_sim_collective",
     "tune_fusion",
+    "tune_schedule",
     "tune_splits",
     "wire_dtype",
     "wire_op_id",

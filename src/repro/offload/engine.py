@@ -359,6 +359,12 @@ class OffloadEngine:
                 from repro.offload import passes
 
                 plan = passes.optimize_plan(plan)
+            if desc.chunks > 1:
+                # the descriptor's chunk word is authoritative — resolved
+                # at make_descriptor time (winner table or cost model), it
+                # must not be re-derived here or brokered/cached dispatches
+                # could disagree on the compiled schedule's shape
+                plan = dataclasses.replace(plan, chunking=int(desc.chunks))
             self._plan_memo[words] = plan
         return plan, words
 
@@ -389,25 +395,27 @@ class OffloadEngine:
                 names_l = names
         digest = self._fp_memo.get((words, names_l))
         if digest is None:
-            fp = repr(
-                (
-                    plan.coll.name,
-                    plan.op_name,
-                    plan.logical_sizes,
-                    plan.result,
-                    plan.optimized,
-                    names_l,
-                    tuple(
-                        (
-                            int(ph.kind), ph.level, ph.algorithm,
-                            ph.inclusive, ph.root, ph.src, ph.dst, ph.dst2,
-                            ph.guard_levels,
-                        )
-                        for ph in plan.phases
-                    ),
-                )
+            fields = (
+                plan.coll.name,
+                plan.op_name,
+                plan.logical_sizes,
+                plan.result,
+                plan.optimized,
+                names_l,
+                tuple(
+                    (
+                        int(ph.kind), ph.level, ph.algorithm,
+                        ph.inclusive, ph.root, ph.src, ph.dst, ph.dst2,
+                        ph.guard_levels,
+                    )
+                    for ph in plan.phases
+                ),
             )
-            digest = hashlib.blake2s(fp.encode("utf-8")).digest()
+            # chunked plans get an extra fingerprint field; C=1 keeps the
+            # pre-chunking digest bit-for-bit (cache-key stability)
+            if plan.chunking > 1:
+                fields = fields + (("chunks", int(plan.chunking)),)
+            digest = hashlib.blake2s(repr(fields).encode("utf-8")).digest()
             self._fp_memo[(words, names_l)] = digest
         mode = self._mode_tag(axis_name, mesh)
         return b"plan|" + digest + b"|" + mode.encode("utf-8")
@@ -427,6 +435,7 @@ class OffloadEngine:
         axes: Optional[Sequence[int]] = None,
         split: "str | Sequence[int]" = "auto",
         optimize: "str | bool" = "auto",
+        chunks: "str | int" = "auto",
     ) -> CollectiveDescriptor:
         """Build an offload request, resolving ``algorithm="auto"`` through
         the (tuning-table-aware) selector — the host-side half of the paper's
@@ -444,6 +453,13 @@ class OffloadEngine:
         (:func:`~repro.offload.passes.choose_optimization`), True/False
         force it. The resolved flag is encoded on the wire (word 16) so
         brokered and cached dispatches agree on whether passes ran.
+        ``chunks`` is the chunked-streaming chunk count: ``"auto"``
+        resolves through the measured schedule winner / pipelined cost
+        model (:func:`~repro.offload.passes.choose_schedule` when
+        ``optimize`` is also auto, :func:`~repro.offload.passes.
+        select_chunking` otherwise), an int forces it; the resolved count
+        travels as the 17th wire word when > 1 (single-axis requests
+        always run unchunked).
         """
         if isinstance(coll, str):
             coll = CollType[coll.upper()]
@@ -456,15 +472,37 @@ class OffloadEngine:
             raise ValueError("either p or axes is required")
         order: "tuple[int, ...]" = ()
         optimized = False
+        chunk_count = 1
         if axes is not None and len(axes) > 1:
-            if optimize == "auto":
-                from repro.offload import passes
+            from repro.offload import passes
 
-                optimized = passes.choose_optimization(
+            if optimize == "auto" and chunks == "auto":
+                # one resolution for both schedule halves: the measured
+                # schedule winner (when tuned) or the cost model decides
+                # fusion and chunk count together
+                optimized, chunk_count = passes.choose_schedule(
                     coll, axes, payload_bytes, op
                 )
             else:
-                optimized = bool(optimize)
+                if optimize == "auto":
+                    optimized = passes.choose_optimization(
+                        coll, axes, payload_bytes, op
+                    )
+                else:
+                    optimized = bool(optimize)
+                if chunks == "auto":
+                    plan = planner.build_plan(
+                        coll, axes, op, payload_bytes, optimize=optimized
+                    )
+                    chunk_count = (
+                        plan.chunking
+                        if optimized
+                        else passes.select_chunking(
+                            plan, payload_bytes
+                        ).chunking
+                    )
+                else:
+                    chunk_count = int(chunks)
             order = (
                 planner.plan_axis_order(
                     coll, axes, payload_bytes, op, optimize=optimized
@@ -478,10 +516,16 @@ class OffloadEngine:
                 algorithm = select_algorithm(
                     inner_p, payload_bytes, op, coll=COLL_KIND[coll]
                 )
-        elif algorithm == "auto":
-            algorithm = select_algorithm(
-                p, payload_bytes, op, coll=COLL_KIND[coll]
-            )
+        else:
+            if chunks != "auto" and int(chunks) > 1:
+                raise ValueError(
+                    "chunked streaming requires a multi-axis (planned) "
+                    f"request; got chunks={chunks} without axes"
+                )
+            if algorithm == "auto":
+                algorithm = select_algorithm(
+                    p, payload_bytes, op, coll=COLL_KIND[coll]
+                )
         itemsize = jnp.dtype(wire_dtype(data_type)).itemsize
         if count is None:
             count = max(1, payload_bytes // itemsize)
@@ -505,6 +549,7 @@ class OffloadEngine:
             axes=axes if (axes is not None and len(axes) > 1) else (),
             split=order,
             optimized=optimized,
+            chunks=chunk_count,
         )
 
     # -- dispatch ----------------------------------------------------------
@@ -725,6 +770,8 @@ class OffloadEngine:
             algo = f"plan{desc.split}:{algo}"
             if desc.optimized:
                 algo = f"opt:{algo}"
+            if desc.chunks > 1:
+                algo = f"chunk{desc.chunks}:{algo}"
             if traced:
                 algo = f"traced:{algo}"
         elif axis_name is not None:

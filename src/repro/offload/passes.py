@@ -49,6 +49,7 @@ import dataclasses
 from typing import Dict, Optional, Sequence, Set, Tuple
 
 from repro.core.algorithms import (
+    DOUBLING_ALGORITHMS,
     algorithm_step_count,
     num_steps,
     scan_total_step_count,
@@ -64,12 +65,17 @@ from repro.offload.planner import (
     plan_cost,
 )
 
-#: the pipeline, in application order
+#: the pipeline, in application order (chunk_selection needs the request's
+#: payload size, so it only runs when ``optimize_plan`` is given one)
 PASS_NAMES: Tuple[str, ...] = (
     "dead_phase_elimination",
     "scan_total_fusion",
     "permute_threading",
+    "chunk_selection",
 )
+
+#: chunk counts the selection pass prices and the tuner measures
+CHUNK_CANDIDATES: Tuple[int, ...] = (1, 2, 4, 8)
 
 #: algorithm tag rendered for fused phases (not a per-step schedule name —
 #: the fused lowering dispatches on the phase kind)
@@ -250,6 +256,59 @@ def fuse_scan_total(plan: CollectivePlan) -> CollectivePlan:
 
 
 # ---------------------------------------------------------------------------
+# Chunk selection
+# ---------------------------------------------------------------------------
+
+
+def _has_pipelined_phase(plan: CollectivePlan) -> bool:
+    """Does any phase have a round-pipelined chunked form worth pricing?"""
+    logical = plan.logical_sizes
+    for ph in plan.phases:
+        if ph.kind == PhaseKind.FUSED_SCAN_TOTAL and logical[ph.level] > 1:
+            return True
+        if (
+            ph.kind == PhaseKind.SCAN
+            and ph.algorithm in DOUBLING_ALGORITHMS
+            and logical[ph.level] > 1
+        ):
+            return True
+    return False
+
+
+def select_chunking(
+    plan: CollectivePlan,
+    payload_bytes: int,
+    *,
+    candidates: Sequence[int] = CHUNK_CANDIDATES,
+) -> CollectivePlan:
+    """Pick the cheapest chunk count for one plan under the active cost
+    model — the chunk-selection pass.
+
+    Each candidate C prices the pipelined phases as ``(R + C - 1) *
+    (alpha + B*beta/C)`` (see :func:`~repro.offload.planner.plan_cost`), so
+    C > 1 only wins above the payload threshold where the serialized link
+    term outweighs the extra pipeline-fill alphas; ties keep the smaller C
+    (C=1 is the exact legacy lowering, byte-stable on the wire). Plans with
+    no pipelined phase (pure reductions, non-doubling scan algorithms) stay
+    at C=1 unconditionally.
+    """
+    if not _has_pipelined_phase(plan):
+        return plan if plan.chunking == 1 else dataclasses.replace(
+            plan, chunking=1
+        )
+    best: Optional[Tuple[float, int]] = None
+    for c in sorted({max(1, int(c)) for c in candidates}):
+        cand = dataclasses.replace(plan, chunking=c)
+        key = (plan_cost(cand, payload_bytes), c)
+        if best is None or key < best:
+            best = key
+    chosen = best[1]
+    if chosen == plan.chunking:
+        return plan
+    return dataclasses.replace(plan, chunking=chosen)
+
+
+# ---------------------------------------------------------------------------
 # The pipeline
 # ---------------------------------------------------------------------------
 
@@ -258,6 +317,7 @@ def optimize_plan(
     plan: CollectivePlan,
     *,
     passes: Sequence[str] = PASS_NAMES,
+    payload_bytes: Optional[int] = None,
 ) -> CollectivePlan:
     """Run the pass pipeline over one plan; idempotent.
 
@@ -266,6 +326,8 @@ def optimize_plan(
     ``lower_sim`` to the layout-threading interpreter (permute
     elimination) and (b) marks the wire flag ``make_descriptor`` encodes so
     brokered and cached dispatches agree on whether passes ran.
+    ``chunk_selection`` needs the request's payload size to price the
+    pipeline, so it only runs when ``payload_bytes`` is given.
     """
     unknown = set(passes) - set(PASS_NAMES)
     if unknown:
@@ -278,6 +340,8 @@ def optimize_plan(
         plan = fuse_scan_total(plan)
     if "permute_threading" in passes and not plan.optimized:
         plan = dataclasses.replace(plan, optimized=True)
+    if "chunk_selection" in passes and payload_bytes is not None:
+        plan = select_chunking(plan, payload_bytes)
     return plan
 
 
@@ -367,12 +431,54 @@ def choose_optimization(
     return plan_cost(opt, payload_bytes) <= plan_cost(raw, payload_bytes)
 
 
+def choose_schedule(
+    coll: "CollType | str",
+    sizes: Sequence[int],
+    payload_bytes: int,
+    op: "AssocOp | str" = "sum",
+) -> Tuple[bool, int]:
+    """The full (optimize?, chunk count) schedule decision for one request
+    — what ``make_descriptor``'s ``optimize="auto"`` / ``chunks="auto"``
+    resolves through.
+
+    Resolution mirrors the selector: a measured schedule winner from the
+    active tuning table (``TuningCache.schedule_winner``, written by
+    ``tune_schedule``) rules when one exists for this (coll, sizes) at a
+    nearby payload; otherwise the pass pipeline's own cost pricing decides
+    both halves (fusion via the fused-vs-raw comparison, chunking via
+    :func:`select_chunking` on whichever form won).
+    """
+    if isinstance(coll, str):
+        coll = CollType[coll.upper()]
+    op = get_operator(op)
+    sizes = tuple(int(s) for s in sizes)
+
+    tuning = get_active_tuning()
+    if tuning is not None:
+        winner = getattr(tuning, "schedule_winner", lambda *a, **k: None)(
+            coll.name.lower(), sizes, payload_bytes
+        )
+        if winner is not None:
+            return bool(winner[0]), max(1, int(winner[1]))
+
+    raw = build_plan(coll, sizes, op, payload_bytes, order="auto")
+    opt = optimize_plan(raw, payload_bytes=payload_bytes)
+    if opt.phases != raw.phases and plan_cost(
+        opt, payload_bytes
+    ) <= plan_cost(raw, payload_bytes):
+        return True, opt.chunking
+    return False, select_chunking(raw, payload_bytes).chunking
+
+
 __all__ = [
+    "CHUNK_CANDIDATES",
     "FUSED_ALGORITHM",
     "PASS_NAMES",
     "choose_optimization",
+    "choose_schedule",
     "eliminate_dead_phases",
     "fuse_scan_total",
     "optimize_plan",
     "plan_comm_rounds",
+    "select_chunking",
 ]

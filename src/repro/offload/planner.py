@@ -126,6 +126,12 @@ class CollectivePlan:
     phases: Tuple[PlanPhase, ...]
     result: str = "y"
     optimized: bool = False
+    #: payload chunk count. 1 = the classic whole-payload schedule (the
+    #: lowerings take the exact legacy code path). C > 1 splits the payload
+    #: into C contiguous chunks along its innermost dim and pipelines them
+    #: across exchange rounds (sPIN-style streaming); values are bitwise
+    #: identical, only the round interleave changes.
+    chunking: int = 1
 
     @property
     def logical_sizes(self) -> Tuple[int, ...]:
@@ -150,6 +156,8 @@ class CollectivePlan:
         )
         if self.optimized:
             header += " [optimized]"
+        if self.chunking > 1:
+            header += f" [chunked x{self.chunking}]"
         lines = [header]
         for ph in self.phases:
             if ph.kind == PhaseKind.COMBINE:
@@ -535,7 +543,7 @@ def build_plan(
     if optimize:
         from repro.offload.passes import optimize_plan
 
-        plan = optimize_plan(plan)
+        plan = optimize_plan(plan, payload_bytes=payload_bytes)
     return plan
 
 
@@ -569,13 +577,31 @@ def plan_cost(
     rounds, one payload traversal) against the unfused pair (the alpha term
     halves; the beta term gains one extra payload, so huge messages can
     still prefer the unfused plan).
+
+    Chunked plans (``plan.chunking > 1``) price their pipelined phases as
+    ``(R + C - 1) * (alpha + B*beta/C)``: R rounds of per-round payload B
+    split into C chunks, with chunk c's round r overlapping chunk c+1's
+    round r-1, so the pipeline is R + C - 1 steps each carrying one chunk.
+    At C=1 this reduces exactly to the unchunked ``R*alpha + R*B*beta``.
+    Chunking therefore wins only when the serialized link term ``B*beta``
+    outweighs the extra pipeline-fill alphas — i.e. above a payload
+    threshold near ``(C/(C-1)) * (C-1)/(R-1) * alpha/beta`` — which is what
+    keeps small payloads at C=1.
     """
     if model is None:
         tuning = get_active_tuning()
         fitted = tuning.fitted_model() if tuning is not None else None
         model = fitted if fitted is not None else TPU_V5E
     logical = plan.logical_sizes
+    C = max(1, int(plan.chunking))
     total = 0.0
+
+    def pipelined(rounds: int, nbytes: int, hops: float) -> float:
+        return (
+            (rounds + C - 1) * (model.alpha + nbytes * model.beta / C)
+            + hops * model.gamma
+        )
+
     for ph in plan.phases:
         if ph.kind in (PhaseKind.COMBINE, PhaseKind.IDENTITY):
             continue
@@ -591,14 +617,23 @@ def plan_cost(
                     min(1 << i, p_axis - (1 << i)) if model.ring else 1 << i
                     for i in range(lg)
                 )
-                steps = lg + 1.0
-                nbytes = (lg + 1) * payload_bytes
-                hops = up_hops + 1.0
-                total += (
-                    steps * model.alpha
-                    + nbytes * model.beta
-                    + hops * model.gamma
-                )
+                total += pipelined(lg + 1, payload_bytes, up_hops + 1.0)
+            continue
+        if (
+            ph.kind == PhaseKind.SCAN
+            and C > 1
+            and ph.algorithm in alg.DOUBLING_ALGORITHMS
+            and p_axis > 1
+        ):
+            # the pipelined doubling form; the exclusive structural shift
+            # rides the pipeline as one extra round
+            lg = alg.num_steps(p_axis)
+            shift = 0 if ph.inclusive else 1
+            hops = float(shift) + sum(
+                min(1 << i, p_axis - (1 << i)) if model.ring else 1 << i
+                for i in range(lg)
+            )
+            total += pipelined(lg + shift, payload_bytes, hops)
             continue
         nbytes = 4 if ph.kind == PhaseKind.BARRIER else payload_bytes
         total += estimate_cost(ph.algorithm, p_axis, nbytes, model)
@@ -665,6 +700,117 @@ def plan_axis_order(
 # ---------------------------------------------------------------------------
 # Lowering: sim (stacked arrays) and SPMD (shard_map) interpreters
 # ---------------------------------------------------------------------------
+
+
+def _sim_scan_chunked(
+    backend: "alg.Backend",
+    stacked: PyTree,
+    op: AssocOp,
+    p: int,
+    *,
+    algorithm: str,
+    inclusive: bool,
+    chunks: int,
+) -> PyTree:
+    """Chunked ``sim_scan``: identical values, pipelined exchange rounds.
+
+    Only the doubling family has a round-pipelined form; other algorithms
+    (and payloads that cannot be split — e.g. scalar-per-rank leaves, whose
+    last axis on the sim backend is the *rank* axis) fall back to the plain
+    whole-payload schedule. The exclusive handling mirrors ``sim_scan``
+    line for line: the inverse-op trick where applicable, else the
+    structural shift (riding the pipeline as round 0) with rank 0's
+    identity fill, and always the final rank-0 mask — applied to the
+    concatenated result, which is bitwise the same as per-chunk application
+    because every mask is elementwise.
+    """
+    if (
+        p == 1
+        or algorithm not in alg.DOUBLING_ALGORITHMS
+        or not alg.chunkable(stacked, chunks, min_ndim=2)
+    ):
+        return sim_scan(
+            stacked, op, p, algorithm=algorithm, inclusive=inclusive,
+            backend=backend,
+        )
+    if inclusive:
+        return alg.chunked_scan_schedule(backend, stacked, op, chunks=chunks)
+    identity = op.identity_like(stacked)
+    rank = backend.rank()
+    if (
+        algorithm == "invertible_doubling"
+        and op.inverse is not None
+        and op.commutative
+    ):
+        inc = alg.chunked_scan_schedule(backend, stacked, op, chunks=chunks)
+        ex = op.combine(inc, op.inverse(stacked))
+        return alg._bwhere(rank != 0, ex, identity)
+    out = alg.chunked_scan_schedule(
+        backend, stacked, op, chunks=chunks, shift_first=True,
+        identity=None if op.zero_identity else identity,
+    )
+    return alg._bwhere(rank != 0, out, identity)
+
+
+def _spmd_scan_chunked(
+    backend: "alg.SpmdBackend",
+    x: PyTree,
+    op: AssocOp,
+    *,
+    algorithm: str,
+    inclusive: bool,
+    chunks: int,
+) -> PyTree:
+    """Chunked ``dist_scan``/``dist_exscan`` body over one named axis.
+
+    Mirrors those functions exactly (including the exclusive form's
+    *absence* of a final rank-0 mask on the structural path — the shifted
+    identity fill already leaves rank 0 holding the identity).
+    """
+    p = backend.p
+    if (
+        p == 1
+        or algorithm not in alg.DOUBLING_ALGORITHMS
+        or not alg.chunkable(x, chunks)
+    ):
+        if inclusive:
+            return dist_scan(x, op, backend.axis_name, algorithm=algorithm)
+        return dist_exscan(x, op, backend.axis_name, algorithm=algorithm)
+    if inclusive:
+        return alg.chunked_scan_schedule(backend, x, op, chunks=chunks)
+    identity = op.identity_like(x)
+    if algorithm == "invertible_doubling" and op.inverse is not None:
+        if not op.commutative:
+            raise ValueError(
+                "inverse-based exscan requires a commutative operator; "
+                f"{op.name!r} is not"
+            )
+        inc = alg.chunked_scan_schedule(backend, x, op, chunks=chunks)
+        ex = op.combine(inc, op.inverse(x))
+        rank = backend.rank()
+        return alg._bwhere(rank == 0, identity, ex)
+    return alg.chunked_scan_schedule(
+        backend, x, op, chunks=chunks, shift_first=True,
+        identity=None if op.zero_identity else identity,
+    )
+
+
+def _chunked_scan_total(
+    backend: "alg.Backend",
+    tree: PyTree,
+    op: AssocOp,
+    *,
+    inclusive: bool,
+    chunks: int,
+    min_ndim: int = 1,
+) -> Tuple[PyTree, PyTree]:
+    """Fused scan+total with the pipelined chunked schedule when the payload
+    splits, else the plain fused schedule."""
+    if backend.p == 1 or not alg.chunkable(tree, chunks, min_ndim=min_ndim):
+        return alg.scan_total_schedule(backend, tree, op, inclusive=inclusive)
+    return alg.chunked_scan_total_schedule(
+        backend, tree, op, chunks=chunks, inclusive=inclusive
+    )
 
 
 def _along_axis(tree: PyTree, axis: int, fn: Callable[[PyTree], PyTree]) -> PyTree:
@@ -736,6 +882,7 @@ def lower_sim(
     k = len(logical)
     p_total = plan.p
     threaded = plan.optimized
+    chunks = max(1, int(plan.chunking))
     coll_name = plan.coll.name.lower()
 
     def to_mesh(tree: PyTree) -> PyTree:
@@ -833,14 +980,26 @@ def lower_sim(
                     ),
                 )
             if ph.kind == PhaseKind.SCAN:
-                fn = lambda t: sim_scan(  # noqa: E731
-                    t, op, p_axis, algorithm=ph.algorithm,
-                    inclusive=ph.inclusive, backend=backend,
-                )
+                if chunks > 1:
+                    fn = lambda t: _sim_scan_chunked(  # noqa: E731
+                        backend, t, op, p_axis, algorithm=ph.algorithm,
+                        inclusive=ph.inclusive, chunks=chunks,
+                    )
+                else:
+                    fn = lambda t: sim_scan(  # noqa: E731
+                        t, op, p_axis, algorithm=ph.algorithm,
+                        inclusive=ph.inclusive, backend=backend,
+                    )
             elif ph.kind == PhaseKind.FUSED_SCAN_TOTAL:
-                fn = lambda t: alg.scan_total_schedule(  # noqa: E731
-                    backend, t, op, inclusive=ph.inclusive
-                )
+                if chunks > 1:
+                    fn = lambda t: _chunked_scan_total(  # noqa: E731
+                        backend, t, op, inclusive=ph.inclusive,
+                        chunks=chunks, min_ndim=2,
+                    )
+                else:
+                    fn = lambda t: alg.scan_total_schedule(  # noqa: E731
+                        backend, t, op, inclusive=ph.inclusive
+                    )
             elif ph.kind == PhaseKind.TOTAL:
                 fn = lambda t: allreduce_schedule(  # noqa: E731
                     backend, t, op, algorithm=ph.algorithm
@@ -905,6 +1064,7 @@ def lower_spmd(
             f"plan spans {len(plan.sizes)} axes; got names {axis_names}"
         )
     names_l = tuple(axis_names[i] for i in plan.order)
+    chunks = max(1, int(plan.chunking))
 
     def run(x: Optional[PyTree]) -> PyTree:
         regs: Dict[str, PyTree] = {}
@@ -931,14 +1091,25 @@ def lower_spmd(
             name = names_l[ph.level]
             backend = alg.SpmdBackend(name, plan.logical_sizes[ph.level])
             if ph.kind == PhaseKind.FUSED_SCAN_TOTAL:
-                y, t = alg.scan_total_schedule(
-                    backend, src, op, inclusive=ph.inclusive
-                )
+                if chunks > 1:
+                    y, t = _chunked_scan_total(
+                        backend, src, op, inclusive=ph.inclusive,
+                        chunks=chunks,
+                    )
+                else:
+                    y, t = alg.scan_total_schedule(
+                        backend, src, op, inclusive=ph.inclusive
+                    )
                 regs[ph.dst] = y
                 regs[ph.dst2] = t
                 continue
             if ph.kind == PhaseKind.SCAN:
-                if ph.inclusive:
+                if chunks > 1:
+                    out = _spmd_scan_chunked(
+                        backend, src, op, algorithm=ph.algorithm,
+                        inclusive=ph.inclusive, chunks=chunks,
+                    )
+                elif ph.inclusive:
                     out = dist_scan(src, op, name, algorithm=ph.algorithm)
                 else:
                     out = dist_exscan(src, op, name, algorithm=ph.algorithm)

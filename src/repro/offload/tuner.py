@@ -159,6 +159,21 @@ def autotune(
     return cache
 
 
+def amortize_inner(payload_bytes: int, cap: int = 16) -> int:
+    """How many schedule runs to fold into one jitted dispatch.
+
+    Per-dispatch wall clock at small payloads measures the Python/runtime
+    dispatch floor (~tens of us), not the schedule: two schedules whose true
+    costs differ 3x time identically. Chaining ``inner`` runs inside one
+    ``fori_loop`` amortizes the floor away; large payloads keep ``inner``
+    small so one sample stays cheap."""
+    if payload_bytes <= 4096:
+        return cap
+    if payload_bytes <= 65536:
+        return min(cap, 4)
+    return min(cap, 2)
+
+
 def time_planned_collective(
     coll: str,
     sizes: Sequence[int],
@@ -169,10 +184,20 @@ def time_planned_collective(
     iters: int = 5,
     seed: int = 0,
     optimized: bool = False,
+    chunking: int = 1,
+    inner: int = 1,
 ) -> float:
     """Median wall-clock seconds of one whole planner-lowered collective on
     the sim backend, for a fixed logical axis order (``optimized=True``
-    times the pass-pipeline form of the same plan)."""
+    times the pass-pipeline form of the same plan; ``chunking`` > 1 times
+    the chunked-streaming lowering of it).
+
+    ``inner`` > 1 chains that many schedule runs inside one jitted
+    ``fori_loop`` dispatch and divides the wall time by ``inner``, so the
+    per-dispatch floor is amortized out of the sample (the schedule output
+    feeds the next iteration's input, keeping every run data-dependent —
+    XLA cannot elide or overlap them)."""
+    import dataclasses
     import math
 
     from repro.offload.passes import optimize_plan
@@ -186,7 +211,18 @@ def time_planned_collective(
     plan = build_plan(coll, sizes, op, payload_bytes, order=tuple(order))
     if optimized:
         plan = optimize_plan(plan)
-    fused = jax.jit(lower_sim(plan, op))
+    if chunking != 1:
+        plan = dataclasses.replace(plan, chunking=int(chunking))
+    run = lower_sim(plan, op)
+    inner = max(1, int(inner))
+    if coll.lower() == "barrier":
+        inner = 1  # the fence takes no payload to thread through iterations
+    if inner > 1:
+        fused = jax.jit(
+            lambda t: jax.lax.fori_loop(0, inner, lambda _i, a: run(a), t)
+        )
+    else:
+        fused = jax.jit(run)
     arg = None if coll.lower() == "barrier" else x
     out = fused(arg)
     jax.tree.map(lambda a: a.block_until_ready(), out)  # warm the jit
@@ -195,7 +231,7 @@ def time_planned_collective(
         t0 = time.perf_counter()
         out = fused(arg)
         jax.tree.map(lambda a: a.block_until_ready(), out)
-        times.append(time.perf_counter() - t0)
+        times.append((time.perf_counter() - t0) / inner)
     times.sort()
     return times[len(times) // 2]
 
@@ -247,6 +283,75 @@ def tune_splits(
     return cache
 
 
+DEFAULT_CHUNKS: Tuple[int, ...] = (1, 2, 4, 8)
+
+
+def tune_schedule(
+    *,
+    topologies: Sequence[Sequence[int]] = DEFAULT_TOPOLOGIES,
+    payloads: Sequence[int] = (1024, 65536),
+    colls: Sequence[str] = ("scan", "exscan"),
+    chunks: Sequence[int] = DEFAULT_CHUNKS,
+    op: "AssocOp | str" = "sum",
+    iters: int = 3,
+    time_budget_s: Optional[float] = None,
+    cache: Optional[TuningCache] = None,
+    verbose: bool = False,
+) -> TuningCache:
+    """Measure the full (fused, unfused) x chunk-count schedule grid per
+    (coll, mesh shape, payload) point — the generalized form of the old
+    fused-vs-unfused tuner. The recorded winners feed
+    ``TuningCache.schedule_winner``, which ``choose_schedule`` (and through
+    it ``make_descriptor``'s ``optimize="auto"`` / ``chunks="auto"``)
+    consults before the plan cost model, so both the fusion decision and
+    the chunk count are made per *measured* winner wherever one exists.
+
+    Samples use amortized timing (:func:`amortize_inner`): ``inner``
+    schedule runs chained inside one jitted dispatch, so small-payload
+    points measure the schedule rather than the dispatch floor."""
+    op = get_operator(op)
+    cache = cache if cache is not None else TuningCache()
+    chunk_grid = tuple(dict.fromkeys(int(c) for c in chunks)) or (1,)
+    t_start = time.perf_counter()
+    skipped = 0
+    for sizes in topologies:
+        sizes = tuple(int(s) for s in sizes)
+        order = tuple(range(len(sizes)))
+        for payload in payloads:
+            inner = amortize_inner(payload)
+            for coll in colls:
+                # budget-check once per grid point: a half-measured grid
+                # would record a categorical "winner" that was never
+                # actually compared against its alternatives
+                if (
+                    time_budget_s is not None
+                    and time.perf_counter() - t_start > time_budget_s
+                ):
+                    skipped += 1
+                    continue
+                for optimized in (False, True):
+                    for c in chunk_grid:
+                        t = time_planned_collective(
+                            coll, sizes, order, payload, op,
+                            iters=iters, optimized=optimized,
+                            chunking=c, inner=inner,
+                        )
+                        cache.record_schedule(
+                            coll, sizes, optimized, c, payload, t
+                        )
+                        if verbose:
+                            tag = "opt" if optimized else "raw"
+                            print(
+                                f"tune-schedule {coll:9s} {str(sizes):12s} "
+                                f"{tag} C={c} bytes={payload:8d} "
+                                f"{t*1e6:10.1f}us"
+                            )
+    if verbose and skipped:
+        print(f"tune-schedule: time budget hit, skipped {skipped} points")
+    _ = cache.schedule_winners
+    return cache
+
+
 def tune_fusion(
     *,
     topologies: Sequence[Sequence[int]] = DEFAULT_TOPOLOGIES,
@@ -259,42 +364,10 @@ def tune_fusion(
     verbose: bool = False,
 ) -> TuningCache:
     """Measure each planned collective with the plan-optimizer passes on
-    and off — the fused-vs-unfused half of the topology autotuner. The
-    recorded winners feed ``TuningCache.fusion_winner``, which
-    ``choose_optimization`` (and through it ``make_descriptor``'s
-    ``optimize="auto"``) consults before the plan cost model, so the
-    fusion decision is made per *measured* winner wherever one exists."""
-    op = get_operator(op)
-    cache = cache if cache is not None else TuningCache()
-    t_start = time.perf_counter()
-    skipped = 0
-    for sizes in topologies:
-        sizes = tuple(int(s) for s in sizes)
-        order = tuple(range(len(sizes)))
-        for payload in payloads:
-            for coll in colls:
-                # budget-check once per grid point: a half-measured pair
-                # would record a categorical "winner" that was never
-                # actually compared against its alternative
-                if (
-                    time_budget_s is not None
-                    and time.perf_counter() - t_start > time_budget_s
-                ):
-                    skipped += 1
-                    continue
-                for optimized in (False, True):
-                    t = time_planned_collective(
-                        coll, sizes, order, payload, op,
-                        iters=iters, optimized=optimized,
-                    )
-                    cache.record_fusion(coll, sizes, optimized, payload, t)
-                    if verbose:
-                        tag = "opt" if optimized else "raw"
-                        print(
-                            f"tune-fusion {coll:9s} {str(sizes):12s} "
-                            f"{tag} bytes={payload:8d} {t*1e6:10.1f}us"
-                        )
-    if verbose and skipped:
-        print(f"tune-fusion: time budget hit, skipped {skipped} points")
-    _ = cache.fusion_winners
-    return cache
+    and off — :func:`tune_schedule` restricted to the unchunked schedule,
+    kept as the cheap fusion-only entry point."""
+    return tune_schedule(
+        topologies=topologies, payloads=payloads, colls=colls,
+        chunks=(1,), op=op, iters=iters, time_budget_s=time_budget_s,
+        cache=cache, verbose=verbose,
+    )

@@ -111,16 +111,21 @@ class SplitMeasurement:
 
 @dataclasses.dataclass(frozen=True)
 class FusionMeasurement:
-    """One plan-optimizer sample: median seconds of a whole planned
-    collective with the pass pipeline on (``optimized=True``) or off, for
-    one (coll, mesh shape, payload). The reduction over these is the
-    measured fused-vs-unfused winner ``choose_optimization`` consults."""
+    """One plan-schedule sample: median seconds of a whole planned
+    collective with the pass pipeline on (``optimized=True``) or off and a
+    specific payload chunk count, for one (coll, mesh shape, payload). The
+    reduction over these is the measured (fused, chunks) schedule winner
+    that ``choose_schedule``/``choose_optimization`` consult.
+
+    ``chunks`` defaults to 1 so tables written before chunked streaming
+    existed load unchanged (same schema version)."""
 
     coll: str
     sizes: Tuple[int, ...]
     optimized: bool
     payload_bytes: int
     seconds: float
+    chunks: int = 1
 
     def to_json(self) -> dict:
         d = dataclasses.asdict(self)
@@ -135,6 +140,7 @@ class FusionMeasurement:
             optimized=bool(d["optimized"]),
             payload_bytes=int(d["payload_bytes"]),
             seconds=float(d["seconds"]),
+            chunks=int(d.get("chunks", 1)),
         )
 
 
@@ -152,6 +158,9 @@ class TuningCache:
         ] = {}
         self._fusion_winners: Dict[
             Tuple[str, Tuple[int, ...], int], bool
+        ] = {}
+        self._schedule_winners: Dict[
+            Tuple[str, Tuple[int, ...], int], Tuple[bool, int]
         ] = {}
         self._fitted: Optional[LinkModel] = None
 
@@ -192,6 +201,7 @@ class TuningCache:
         optimized: bool,
         payload_bytes: int,
         seconds: float,
+        chunks: int = 1,
     ) -> None:
         self.fusion_measurements.append(
             FusionMeasurement(
@@ -200,9 +210,26 @@ class TuningCache:
                 bool(optimized),
                 int(payload_bytes),
                 float(seconds),
+                int(chunks),
             )
         )
         self._fusion_winners = {}  # invalidate
+        self._schedule_winners = {}
+
+    def record_schedule(
+        self,
+        coll: str,
+        sizes: Sequence[int],
+        optimized: bool,
+        chunks: int,
+        payload_bytes: int,
+        seconds: float,
+    ) -> None:
+        """One (fused?, chunks) schedule variant sample — the generalized
+        form of :meth:`record_fusion` the chunk-aware tuner writes."""
+        self.record_fusion(
+            coll, sizes, optimized, payload_bytes, seconds, chunks=chunks
+        )
 
     # -- merging -----------------------------------------------------------
 
@@ -243,10 +270,10 @@ class TuningCache:
                 best_split[key] = s
         self.split_measurements = [best_split[k] for k in sorted(best_split)]
         best_fusion: Dict[
-            Tuple[str, Tuple[int, ...], bool, int], FusionMeasurement
+            Tuple[str, Tuple[int, ...], bool, int, int], FusionMeasurement
         ] = {}
         for f in (*self.fusion_measurements, *other.fusion_measurements):
-            key = (f.coll, f.sizes, f.optimized, f.payload_bytes)
+            key = (f.coll, f.sizes, f.optimized, f.chunks, f.payload_bytes)
             cur = best_fusion.get(key)
             if cur is None or f.seconds < cur.seconds:
                 best_fusion[key] = f
@@ -256,6 +283,7 @@ class TuningCache:
         self._winners = {}
         self._split_winners = {}
         self._fusion_winners = {}
+        self._schedule_winners = {}
         self._fitted = None
         return self
 
@@ -293,27 +321,62 @@ class TuningCache:
         return self._split_winners
 
     @property
-    def fusion_winners(
+    def schedule_winners(
         self,
-    ) -> Dict[Tuple[str, Tuple[int, ...], int], bool]:
-        """(coll, sizes, payload) -> measured-fastest optimizer setting.
+    ) -> Dict[Tuple[str, Tuple[int, ...], int], Tuple[bool, int]]:
+        """(coll, sizes, payload) -> measured-fastest (optimized, chunks).
 
-        Ties break toward the optimized form: the pass pipeline never adds
-        communication rounds, so equal measurements favor fewer rounds."""
-        if not self._fusion_winners and self.fusion_measurements:
+        Ties break toward the optimized form (the pass pipeline never adds
+        communication rounds), then toward fewer chunks (the simpler
+        schedule; C=1 is the exact legacy lowering)."""
+        if not self._schedule_winners and self.fusion_measurements:
             best: Dict[
-                Tuple[str, Tuple[int, ...], int], Tuple[float, int]
+                Tuple[str, Tuple[int, ...], int], Tuple[float, int, int]
             ] = {}
             for m in self.fusion_measurements:
                 key = (m.coll, m.sizes, m.payload_bytes)
-                cand = (m.seconds, 0 if m.optimized else 1)
+                cand = (m.seconds, 0 if m.optimized else 1, m.chunks)
                 cur = best.get(key)
                 if cur is None or cand < cur:
                     best[key] = cand
+            self._schedule_winners = {
+                k: (flag == 0, chunks)
+                for k, (_, flag, chunks) in best.items()
+            }
+        return self._schedule_winners
+
+    @property
+    def fusion_winners(
+        self,
+    ) -> Dict[Tuple[str, Tuple[int, ...], int], bool]:
+        """(coll, sizes, payload) -> the fused half of the schedule winner
+        (kept for callers that only care about the optimizer flag)."""
+        if not self._fusion_winners and self.fusion_measurements:
             self._fusion_winners = {
-                k: flag == 0 for k, (_, flag) in best.items()
+                k: opt for k, (opt, _) in self.schedule_winners.items()
             }
         return self._fusion_winners
+
+    def schedule_winner(
+        self, coll: str, sizes: Sequence[int], payload_bytes: int
+    ) -> Optional[Tuple[bool, int]]:
+        """Measured-fastest (optimized, chunks) schedule for this exact mesh
+        shape at the nearest measured payload (log2 distance), or None when
+        the shape was never schedule-tuned — ``choose_schedule`` then falls
+        back to the plan cost model."""
+        sizes = tuple(int(s) for s in sizes)
+        best: Optional[Tuple[float, Tuple[bool, int]]] = None
+        for (c, gs, gm), win in self.schedule_winners.items():
+            if c != coll or gs != sizes:
+                continue
+            dist = abs(
+                math.log2(max(payload_bytes, 1)) - math.log2(max(gm, 1))
+            )
+            if best is None or dist < best[0]:
+                best = (dist, win)
+        if best is None or best[0] > 4 * _MAX_GRID_DISTANCE:
+            return None
+        return best[1]
 
     def fusion_winner(
         self, coll: str, sizes: Sequence[int], payload_bytes: int
@@ -322,19 +385,8 @@ class TuningCache:
         the nearest measured payload (log2 distance), or None when the
         shape was never fusion-tuned — ``choose_optimization`` then falls
         back to the plan cost model."""
-        sizes = tuple(int(s) for s in sizes)
-        best: Optional[Tuple[float, bool]] = None
-        for (c, gs, gm), flag in self.fusion_winners.items():
-            if c != coll or gs != sizes:
-                continue
-            dist = abs(
-                math.log2(max(payload_bytes, 1)) - math.log2(max(gm, 1))
-            )
-            if best is None or dist < best[0]:
-                best = (dist, flag)
-        if best is None or best[0] > 4 * _MAX_GRID_DISTANCE:
-            return None
-        return best[1]
+        win = self.schedule_winner(coll, sizes, payload_bytes)
+        return None if win is None else win[0]
 
     def fitted_model(self) -> Optional[LinkModel]:
         """Least-squares (alpha, beta, gamma) over the inclusive-scan

@@ -12,6 +12,7 @@ import pytest
 
 from repro.core import CollType, CollectiveDescriptor
 from repro.core.packet import (
+    _CHUNK_WORDS,
     _LEGACY_WORDS,
     _OPT_WORDS,
     _TOPO_WORDS,
@@ -23,9 +24,10 @@ from repro.core.packet import (
     split_index,
 )
 
-assert _LEGACY_WORDS == 10 and _TOPO_WORDS == 15 and _OPT_WORDS == 16, (
-    "wire layout changed"
-)
+assert (
+    _LEGACY_WORDS == 10 and _TOPO_WORDS == 15 and _OPT_WORDS == 16
+    and _CHUNK_WORDS == 17
+), "wire layout changed"
 
 
 def _legacy_words(**over):
@@ -125,7 +127,7 @@ def test_split_index_is_lexicographic_and_invertible():
         split_from_index(6, 3)
 
 
-@pytest.mark.parametrize("length", [0, 1, 9, 11, 14, 17, 32])
+@pytest.mark.parametrize("length", [0, 1, 9, 11, 14, 18, 32])
 def test_malformed_length_rejected_with_clear_error(length):
     words = np.ones(length, dtype=np.uint32)
     with pytest.raises(ValueError) as exc:
@@ -134,7 +136,7 @@ def test_malformed_length_rejected_with_clear_error(length):
     # the error must name all accepted lengths and the offending one
     # (delimited match: "1" in "10" must not satisfy the length=1 case)
     assert str(_LEGACY_WORDS) in msg and str(_TOPO_WORDS) in msg
-    assert str(_OPT_WORDS) in msg
+    assert str(_OPT_WORDS) in msg and str(_CHUNK_WORDS) in msg
     assert f"got {length}" in msg
 
 
