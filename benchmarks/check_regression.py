@@ -19,6 +19,11 @@ then runs this check on the (baseline, fresh) pairs. Three failure modes:
      noisy, so the bar is deliberately loose: 2x is a real regression,
      not jitter. Improvements never fail.
 
+Missing, non-JSON, or truncated reports (a row dropped mid-object, a
+section replaced by the wrong type) fail the gate with a message naming
+the offending file — never a KeyError traceback, which would read as the
+*checker* being broken rather than the baseline.
+
 Prints one ``regression_check,...`` CSV row per comparison and ``ALL-OK``
 iff everything passed (exit code 1 otherwise), matching the repo's other
 check modules so ``scripts/ci.sh`` can grep it.
@@ -54,10 +59,49 @@ def _load(path: Optional[str]) -> Optional[Dict]:
         _fail(f"report {p} does not exist")
         return None
     try:
-        return json.loads(p.read_text())
+        data = json.loads(p.read_text())
     except ValueError as e:
-        _fail(f"report {p} is not valid JSON: {e}")
+        _fail(f"report {p} is not valid JSON (truncated?): {e}")
         return None
+    if not isinstance(data, dict):
+        _fail(
+            f"report {p} is malformed: expected a JSON object at top "
+            f"level, got {type(data).__name__}"
+        )
+        return None
+    return data
+
+
+def _valid_rows(
+    report: Dict, section: str, required: Tuple[str, ...], name: str
+) -> List[Dict]:
+    """The well-formed rows of ``report[section]``; every malformed or
+    truncated row fails the check with a message naming the file, instead
+    of surfacing as a KeyError traceback."""
+    rows = report.get(section, [])
+    if not isinstance(rows, list):
+        _fail(
+            f"report {name} is malformed: section {section!r} should be "
+            f"a list, got {type(rows).__name__}"
+        )
+        return []
+    out: List[Dict] = []
+    for i, r in enumerate(rows):
+        if not isinstance(r, dict):
+            _fail(
+                f"report {name} is truncated: {section}[{i}] is not an "
+                f"object"
+            )
+            continue
+        missing = [k for k in required if k not in r]
+        if missing:
+            _fail(
+                f"report {name} is truncated: {section}[{i}] is missing "
+                f"{', '.join(missing)}"
+            )
+            continue
+        out.append(r)
+    return out
 
 
 def _drift_ok(base_us: float, new_us: float, max_drift: float) -> bool:
@@ -79,14 +123,24 @@ def _row_speedup(r: Dict) -> float:
     return raw / fused if fused > 0 else 0.0
 
 
+_FUSION_ROW_KEYS = ("coll", "sizes", "payload_bytes")
+_SERVICE_ROW_KEYS = ("clients", "coalesce")
+
+
 def check_fusion(
-    base: Dict, new: Dict, max_drift: float, *, require_per_round: bool
+    base: Dict,
+    new: Dict,
+    max_drift: float,
+    *,
+    require_per_round: bool,
+    base_name: str = "baseline fusion",
+    new_name: str = "fresh fusion",
 ) -> None:
     by_key: Dict[Tuple, Dict] = {
         (r["coll"], tuple(r["sizes"]), r["payload_bytes"]): r
-        for r in new.get("grid", [])
+        for r in _valid_rows(new, "grid", _FUSION_ROW_KEYS, new_name)
     }
-    for r in base.get("grid", []):
+    for r in _valid_rows(base, "grid", _FUSION_ROW_KEYS, base_name):
         key = (r["coll"], tuple(r["sizes"]), r["payload_bytes"])
         label = f"{key[0]},{'x'.join(map(str, key[1]))},{key[2]}"
         nr = by_key.get(key)
@@ -98,7 +152,7 @@ def check_fusion(
         if nr.get("fused_rounds", 0) > r.get("fused_rounds", 0):
             _fail(
                 f"fusion rounds regressed: {label} "
-                f"{r['fused_rounds']} -> {nr['fused_rounds']}"
+                f"{r.get('fused_rounds', 0)} -> {nr.get('fused_rounds', 0)}"
             )
         ok = _drift_ok(r.get("fused_us", 0.0), nr.get("fused_us", 0.0),
                        max_drift)
@@ -162,11 +216,19 @@ def check_fusion(
         _fail("fusion report has no per_round attribution section")
 
 
-def check_service(base: Dict, new: Dict, max_drift: float) -> None:
+def check_service(
+    base: Dict,
+    new: Dict,
+    max_drift: float,
+    *,
+    base_name: str = "baseline service",
+    new_name: str = "fresh service",
+) -> None:
     by_key: Dict[Tuple, Dict] = {
-        (r["clients"], r["coalesce"]): r for r in new.get("stats", [])
+        (r["clients"], r["coalesce"]): r
+        for r in _valid_rows(new, "stats", _SERVICE_ROW_KEYS, new_name)
     }
-    for r in base.get("stats", []):
+    for r in _valid_rows(base, "stats", _SERVICE_ROW_KEYS, base_name):
         key = (r["clients"], r["coalesce"])
         label = f"clients={key[0]},coalesce={key[1]}"
         nr = by_key.get(key)
@@ -216,17 +278,23 @@ def main(argv: Optional[List[str]] = None) -> int:
         ap.error("nothing to check; pass --baseline-fusion/--baseline-service")
     if args.baseline_fusion:
         base = _load(args.baseline_fusion)
-        new = _load(args.fusion or args.baseline_fusion)
+        new_path = args.fusion or args.baseline_fusion
+        new = _load(new_path)
         if base is not None and new is not None:
             check_fusion(
                 base, new, args.max_drift,
                 require_per_round=args.require_per_round,
+                base_name=args.baseline_fusion, new_name=new_path,
             )
     if args.baseline_service:
         base = _load(args.baseline_service)
-        new = _load(args.service or args.baseline_service)
+        new_path = args.service or args.baseline_service
+        new = _load(new_path)
         if base is not None and new is not None:
-            check_service(base, new, args.max_drift)
+            check_service(
+                base, new, args.max_drift,
+                base_name=args.baseline_service, new_name=new_path,
+            )
     print(
         f"check_regression_summary,ok,{int(not _FAILED)},"
         f"max_drift,{args.max_drift}"

@@ -23,6 +23,11 @@
 # The service check (repro.testing.service_check) then exercises the broker
 # in driver mode on a real 2x2 mesh: 4 concurrent tenant streams, bitwise
 # equality, backpressure isolation, and registry split-winner inheritance.
+# The pallas check (repro.testing.pallas_check) proves the fused-Pallas
+# "NIC" kernel lowering backend on a 1x8 host mesh in interpret mode:
+# SCAN/EXSCAN/BARRIER and both FUSED_SCAN_TOTAL forms bitwise-equal to
+# the op-per-round lower_spmd reference, and non-zero-identity operators
+# cleanly rejected by the capability gate (the engine's fallback path).
 # The observability check (repro.testing.obs_check) proves the tracing
 # layer: a traced 2x2 dispatch is bitwise-identical to the untraced one
 # and yields >= 1 phase span plus the declared round spans per comm phase,
@@ -74,9 +79,19 @@ grep -q "^ALL-OK$" "$SVC_OUT" \
   || { echo "CI FAIL: service check did not pass"; exit 1; }
 
 echo
+echo "=== pallas lowering-backend check (fused kernel vs lower_spmd, 1x8) ==="
+PAL_OUT="$(mktemp -t repro_pallas.XXXXXX.log)"
+trap 'rm -f "$SMOKE_OUT" "$SVC_OUT" "$PAL_OUT"; rm -rf "$BASE_DIR"' EXIT
+python -m repro.testing.pallas_check 8 | tee "$PAL_OUT"
+grep -q "^pallas_check,scan:sum,p,8,bitwise,1$" "$PAL_OUT" \
+  || { echo "CI FAIL: fused pallas kernel not bitwise-equal to lower_spmd"; exit 1; }
+grep -q "^ALL-OK$" "$PAL_OUT" \
+  || { echo "CI FAIL: pallas lowering-backend check did not pass"; exit 1; }
+
+echo
 echo "=== observability check (traced dispatch: spans + metrics + merge) ==="
 OBS_OUT="$(mktemp -t repro_obs.XXXXXX.log)"
-trap 'rm -f "$SMOKE_OUT" "$SVC_OUT" "$OBS_OUT"; rm -rf "$BASE_DIR"' EXIT
+trap 'rm -f "$SMOKE_OUT" "$SVC_OUT" "$PAL_OUT" "$OBS_OUT"; rm -rf "$BASE_DIR"' EXIT
 python -m repro.testing.obs_check 2 2 | tee "$OBS_OUT"
 grep -q "^obs_check_summary,bitwise_equal,1," "$OBS_OUT" \
   || { echo "CI FAIL: traced dispatch not bitwise-identical"; exit 1; }
@@ -86,7 +101,7 @@ grep -q "^ALL-OK$" "$OBS_OUT" \
 echo
 echo "=== benchmark regression gate (fresh BENCH vs committed baseline) ==="
 REG_OUT="$(mktemp -t repro_reg.XXXXXX.log)"
-trap 'rm -f "$SMOKE_OUT" "$SVC_OUT" "$OBS_OUT" "$REG_OUT"; rm -rf "$BASE_DIR"' EXIT
+trap 'rm -f "$SMOKE_OUT" "$SVC_OUT" "$PAL_OUT" "$OBS_OUT" "$REG_OUT"; rm -rf "$BASE_DIR"' EXIT
 python -m benchmarks.check_regression \
   --baseline-fusion "$BASE_DIR/BENCH_fusion.json" \
   --fusion benchmarks/BENCH_fusion.json \

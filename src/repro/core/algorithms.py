@@ -241,6 +241,33 @@ def num_steps(p: int) -> int:
     return max(0, math.ceil(math.log2(p))) if p > 1 else 0
 
 
+def doubling_strides(p: int) -> Tuple[int, ...]:
+    """Exchange distances (1, 2, 4, ...) of one distance-doubling schedule."""
+    return tuple(1 << k for k in range(num_steps(p)))
+
+
+def phase_round_count(kind: str, p: int, *, inclusive: bool = True) -> int:
+    """Communication rounds a single-kernel (fused) lowering of one plan
+    phase performs. Shared by the Pallas backend's kernels and the tracing
+    layer's kernel-sourced round spans, so the declared round structure and
+    the emitted spans can never drift apart.
+
+    ``kind`` is a :class:`repro.offload.planner.PhaseKind` name. SCAN counts
+    the structural entry shift of the exclusive form; FUSED_SCAN_TOTAL
+    counts its entry (exclusive) or exit (inclusive) single-hop shift, i.e.
+    :func:`scan_total_step_count`; TOTAL/BARRIER are the pow2 butterfly.
+    """
+    if p <= 1:
+        return 0
+    if kind == "SCAN":
+        return num_steps(p) + (0 if inclusive else 1)
+    if kind == "FUSED_SCAN_TOTAL":
+        return num_steps(p) + 1
+    if kind in ("TOTAL", "BARRIER"):
+        return num_steps(p)
+    return 0
+
+
 # ---------------------------------------------------------------------------
 # Schedules. Each returns the INCLUSIVE scan; exclusive handling lives in
 # scan_collective (structural shift or inverse-op recovery).

@@ -18,13 +18,16 @@ hierarchical collective — the phase structure is derived from (coll_type,
 axes, split) by ``repro.offload.planner`` — while keeping the wire contract:
 the whole request, topology included, round-trips through ``encode``/
 ``decode`` and cache-keys the compiled schedule. The 16th word is the
-``optimized`` flag: 1 iff the plan-optimizer pass pipeline
-(``repro.offload.passes``) runs for this request, so brokered, cached, and
-remote dispatches agree on the compiled schedule's shape. When chunked
-streaming is requested (``chunks > 1``) a 17th word carries the payload
-chunk count; unchunked descriptors keep the 16-word encoding unchanged.
-Legacy 10-word descriptors (no topology) decode as single-axis requests;
-15-word descriptors (topology, pre-optimizer) decode with the flag off.
+schedule-flags word: bit 0 is the ``optimized`` flag (1 iff the
+plan-optimizer pass pipeline in ``repro.offload.passes`` runs for this
+request) and the remaining bits carry the lowering-backend id
+(:data:`_WIRE_BACKENDS`; 0 = the mode default, so every pre-backend
+encoding keeps its exact bytes), so brokered, cached, and remote
+dispatches agree on the compiled schedule's shape. When chunked streaming
+is requested (``chunks > 1``) a 17th word carries the payload chunk count;
+unchunked descriptors keep the 16-word encoding unchanged. Legacy 10-word
+descriptors (no topology) decode as single-axis requests; 15-word
+descriptors (topology, pre-optimizer) decode with the flags off.
 """
 
 from __future__ import annotations
@@ -93,8 +96,14 @@ MAX_AXES = 3
 #: extra word; see ``encode``)
 _LEGACY_WORDS = 10
 _TOPO_WORDS = _LEGACY_WORDS + MAX_AXES + 2  # n_axes + sizes + split index
-_OPT_WORDS = _TOPO_WORDS + 1                # + "optimized" flag word
+_OPT_WORDS = _TOPO_WORDS + 1                # + schedule-flags word
 _CHUNK_WORDS = _OPT_WORDS + 1               # + payload chunk count word
+
+#: lowering-backend names encodable in the schedule-flags word's high bits
+#: (index = wire id). Id 0 is "" — "whatever the dispatch mode's default
+#: backend is" — so descriptors that don't name a backend encode exactly as
+#: they did before the registry existed. The wire table is append-only.
+_WIRE_BACKENDS = ("", "pallas")
 
 
 def split_index(order: "tuple[int, ...]") -> int:
@@ -160,6 +169,11 @@ class CollectiveDescriptor:
     #: the wire layout only grows the extra word when chunks > 1, so every
     #: pre-chunking descriptor keeps its exact byte encoding)
     chunks: int = 1
+    #: lowering-backend request ("" = the dispatch mode's default). Names
+    #: must be wire-encodable (:data:`_WIRE_BACKENDS`); like ``optimized``
+    #: it shapes the compiled schedule, so it is topology-only and travels
+    #: in the schedule-flags word's high bits.
+    backend: str = ""
 
     def __post_init__(self):
         if self.optimized and not self.axes:
@@ -167,6 +181,17 @@ class CollectiveDescriptor:
                 "optimized flag requires a multi-axis topology (the plan "
                 "optimizer runs on planned collectives only)"
             )
+        if self.backend:
+            if not self.axes:
+                raise ValueError(
+                    "backend request requires a multi-axis (planned) "
+                    "topology; single-axis requests use the mode default"
+                )
+            if self.backend not in _WIRE_BACKENDS:
+                raise ValueError(
+                    f"backend {self.backend!r} is not wire-encodable; "
+                    f"known: {', '.join(n or '<default>' for n in _WIRE_BACKENDS)}"
+                )
         if self.chunks < 1:
             raise ValueError(f"chunks must be >= 1, got {self.chunks}")
         if self.chunks > 1 and not self.axes:
@@ -220,15 +245,21 @@ class CollectiveDescriptor:
 
         Layout: the 10 legacy descriptor words, then [n_axes, size_0,
         size_1, size_2, split_index] (zero-padded past n_axes), then the
-        "optimized" flag word (1 iff the plan-optimizer pass pipeline runs
-        for this request — brokered and cached dispatches must agree on it,
-        so it travels on the wire like every other schedule-shaping field).
-        When ``chunks > 1`` a 17th word carries the chunk count; unchunked
-        requests keep the 16-word layout byte-for-byte, so existing logged
-        and cached encodings stay valid.
+        schedule-flags word: bit 0 is the "optimized" flag (1 iff the
+        plan-optimizer pass pipeline runs for this request) and the high
+        bits the lowering-backend wire id — both shape the compiled
+        schedule, so brokered and cached dispatches must agree on them and
+        they travel on the wire like every other schedule-shaping field.
+        Default-backend requests keep bit 1+ zero, i.e. their exact
+        pre-registry bytes. When ``chunks > 1`` a 17th word carries the
+        chunk count; unchunked requests keep the 16-word layout
+        byte-for-byte, so existing logged and cached encodings stay valid.
         """
         sizes = list(self.axes) + [0] * (MAX_AXES - len(self.axes))
         split = split_index(self.split) if self.axes else 0
+        flags = int(self.optimized) | (
+            _WIRE_BACKENDS.index(self.backend) << 1
+        )
         words = [
             self.comm_id,
             self.comm_size,
@@ -243,7 +274,7 @@ class CollectiveDescriptor:
             len(self.axes),
             *sizes,
             split,
-            int(self.optimized),
+            flags,
         ]
         if self.chunks > 1:
             words.append(self.chunks)
@@ -265,7 +296,14 @@ class CollectiveDescriptor:
             n = w[_LEGACY_WORDS]
             axes = tuple(w[_LEGACY_WORDS + 1 : _LEGACY_WORDS + 1 + n])
             split = split_from_index(w[_LEGACY_WORDS + 1 + MAX_AXES], n)
-        optimized = bool(w[_OPT_WORDS - 1]) if len(w) >= _OPT_WORDS else False
+        flags = w[_OPT_WORDS - 1] if len(w) >= _OPT_WORDS else 0
+        optimized = bool(flags & 1)
+        backend_id = flags >> 1
+        if backend_id >= len(_WIRE_BACKENDS):
+            raise ValueError(
+                f"unknown lowering-backend wire id {backend_id} in the "
+                f"schedule-flags word (know 0..{len(_WIRE_BACKENDS) - 1})"
+            )
         chunks = max(1, w[_CHUNK_WORDS - 1]) if len(w) == _CHUNK_WORDS else 1
         return CollectiveDescriptor(
             comm_id=w[0],
@@ -282,4 +320,5 @@ class CollectiveDescriptor:
             split=split,
             optimized=optimized,
             chunks=chunks,
+            backend=_WIRE_BACKENDS[backend_id],
         )

@@ -1,1 +1,22 @@
 from repro.kernels.ops import flash_attention, prefix_scan, ssd_scan
+
+_PALLAS_COLLECTIVE = (
+    "lower_pallas", "supports_plan", "kernel_round_structure", "on_tpu",
+)
+
+
+def __getattr__(name):
+    # Lazy: pallas_collective imports repro.offload.planner, and the offload
+    # package imports repro.kernels through the lowering registry — deferring
+    # the submodule import keeps the cycle unwound regardless of which
+    # package loads first. import_module, not a from-import: the latter
+    # re-enters this __getattr__ through _handle_fromlist before the
+    # submodule is bound on the package.
+    if name in _PALLAS_COLLECTIVE or name == "pallas_collective":
+        import importlib
+
+        module = importlib.import_module("repro.kernels.pallas_collective")
+        if name == "pallas_collective":
+            return module
+        return getattr(module, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,732 @@
+"""Fused Pallas "NIC" kernels: one kernel per schedule, not one op per round.
+
+The source paper's thesis is that MPI_Scan wins when the whole collective
+runs inside the network device. ``lower_sim``/``lower_spmd`` are the
+host-driven op-per-round baseline; this module is the offloaded analogue —
+each communication phase of a :class:`~repro.offload.planner.CollectivePlan`
+lowers to a *single* Pallas kernel that executes every exchange round
+internally with RDMA-style ``make_async_remote_copy`` sends and per-slot DMA
+semaphore waits between rounds (the NIC-triggered-operation model of the
+Quadrics barrier and sPIN handler papers in PAPERS.md).
+
+Two forms share the same round structure:
+
+* **spmd form** (``axis_names`` given): a per-rank kernel run under
+  ``shard_map`` over ONE named mesh axis. Round ``k`` posts a remote copy of
+  the accumulator into the partner's double-buffered receive slot
+  (``recv[k % 2]``), blocks on that slot's DMA semaphores, masks the cyclic
+  wrap back to ``ppermute``'s zero-fill, and folds with the exact operand
+  order of the op-per-round schedule — outputs are bitwise identical to
+  ``lower_spmd``.
+* **sim form** (no ``axis_names``): the single-device rehearsal over stacked
+  ``(p, ...)`` leaves; the same rounds run as local ``make_async_copy``
+  row-block shifts. This is the variant the autotuner races against the
+  op-per-round interpreter and the engine's sim mode dispatches.
+
+Where no TPU is attached the kernels run in Pallas interpret mode, which
+fully discharges the DMAs — CI exercises the real send/wait structure on
+CPU. The interpreter's remote-DMA discharge requires a *scalar* logical
+``device_id``, exactly one named mesh axis in scope, and rounds that are
+full permutations; the kernels honor all three (cyclic sends + receiver
+masking reproduce the partial-permutation zero-fill), and plans outside the
+supported set (multi-axis under shard_map, chunked C > 1, non-doubling scan
+algorithms, non-pow2 butterflies) are reported by :func:`supports_plan` so
+the lowering registry can fall back to the op-per-round default.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import algorithms as alg
+from repro.core.operators import MAX, AssocOp, get_operator
+from repro.core.packet import CollType
+from repro.core.reduce_ops import allreduce_schedule, reduce_schedule
+from repro.core.scan_collective import sim_scan
+from repro.offload.planner import (
+    CollectivePlan,
+    PhaseKind,
+    _along_axis,
+    _zero_coord_mask,
+)
+
+PyTree = Any
+
+#: phase kinds the fused kernels implement on the active (size > 1) level
+_COMM_KINDS = (
+    PhaseKind.SCAN,
+    PhaseKind.FUSED_SCAN_TOTAL,
+    PhaseKind.TOTAL,
+    PhaseKind.BARRIER,
+)
+
+
+def on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:  # pragma: no cover - no backend at all
+        return False
+
+
+def _resolve_interpret(interpret: Optional[bool]) -> bool:
+    return (not on_tpu()) if interpret is None else bool(interpret)
+
+
+def active_level(plan: CollectivePlan) -> Optional[int]:
+    """The single logical level with size > 1, or None if the plan is not
+    effectively single-axis (zero or several non-trivial levels)."""
+    active = [lv for lv, s in enumerate(plan.logical_sizes) if s > 1]
+    return active[0] if len(active) == 1 else None
+
+
+def supports_plan(
+    plan: CollectivePlan, axis_names: Optional[Sequence[str]] = None
+) -> Tuple[bool, str]:
+    """Can the fused-kernel backend lower ``plan``? Returns ``(ok, reason)``
+    with a stable reason token for telemetry when it can't.
+
+    Supported: effectively single-axis plans (one logical level of size
+    > 1; size-1 levels run the identical local shortcuts), whole payloads
+    (chunking == 1), hillis-steele SCAN / FUSED_SCAN_TOTAL over a
+    zero-identity operator, and pow2 TOTAL/BARRIER butterflies. The spmd
+    form additionally requires exactly one named mesh axis (the interpret
+    remote-DMA discharge supports no more).
+    """
+    if plan.chunking > 1:
+        return False, "chunked"
+    if axis_names is not None and (
+        len(axis_names) != 1 or len(plan.sizes) != 1
+    ):
+        return False, "multi_axis_mesh"
+    lv = active_level(plan)
+    if lv is None:
+        return False, "not_single_axis"
+    p = plan.logical_sizes[lv]
+    op = get_operator(plan.op_name)
+    for ph in plan.phases:
+        if ph.kind in (PhaseKind.COMBINE, PhaseKind.IDENTITY):
+            continue
+        if ph.level != lv:
+            continue  # size-1 level: local shortcut, no kernel needed
+        if ph.kind == PhaseKind.SCAN:
+            if ph.algorithm != "hillis_steele":
+                return False, f"algorithm:{ph.algorithm}"
+            if not op.zero_identity:
+                return False, "op_flags"
+        elif ph.kind == PhaseKind.FUSED_SCAN_TOTAL:
+            if not op.zero_identity:
+                return False, "op_flags"
+        elif ph.kind in (PhaseKind.TOTAL, PhaseKind.BARRIER):
+            if p & (p - 1):
+                return False, "non_pow2_butterfly"
+        else:
+            return False, f"phase:{ph.kind.name.lower()}"
+    return True, ""
+
+
+def kernel_round_structure(
+    plan: CollectivePlan,
+) -> Tuple[Tuple[str, int], ...]:
+    """``(phase_kind_name, rounds)`` per fused comm phase, in plan order —
+    the round structure the kernels execute internally, consumed by
+    :func:`repro.obs.tracing.add_kernel_round_spans`."""
+    lv = active_level(plan)
+    out = []
+    if lv is None:
+        return ()
+    p = plan.logical_sizes[lv]
+    for ph in plan.phases:
+        if ph.kind in _COMM_KINDS and ph.level == lv:
+            out.append(
+                (
+                    ph.kind.name,
+                    alg.phase_round_count(
+                        ph.kind.name, p, inclusive=ph.inclusive
+                    ),
+                )
+            )
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# spmd form: per-rank kernels under shard_map, remote DMA rounds
+# ---------------------------------------------------------------------------
+#
+# Every round is issued as a *full* permutation (cyclic shift by +/-d, or the
+# XOR butterfly) so each rank receives exactly one incoming copy per round —
+# the invariant the interpret discharge rule needs — and the receiver masks
+# wrapped rows back to zero, reproducing the op-per-round ``ppermute``
+# zero-fill bit for bit.
+
+
+def _start_rounds(copies):
+    """Issue all of a round's DMAs before waiting on any (full duplex)."""
+    for c in copies:
+        c.start()
+    for c in copies:
+        c.wait()
+
+
+def _masked(tree_leaves, mask):
+    return [jnp.where(mask, v, jnp.zeros_like(v)) for v in tree_leaves]
+
+
+def _spmd_comm_kernel(
+    kind: PhaseKind,
+    p: int,
+    axis_name: str,
+    op: AssocOp,
+    *,
+    inclusive: bool = True,
+    interpret: bool = True,
+):
+    """Build ``fn(tree) -> tree`` (or ``(tree, tree)`` for FUSED_SCAN_TOTAL)
+    running one whole comm phase as a single per-rank Pallas kernel."""
+
+    def run(x: PyTree):
+        leaves, treedef = jax.tree.flatten(x)
+        # scalar leaves (the barrier token) ride as (1, 1) blocks
+        shapes = [l.shape for l in leaves]
+        leaves = [l.reshape((1, 1)) if l.ndim == 0 else l for l in leaves]
+        L = len(leaves)
+        nsteps = alg.num_steps(p)
+        fused = kind == PhaseKind.FUSED_SCAN_TOTAL
+        streams = 2 if fused else 1
+
+        def combine(lhs_leaves, rhs_leaves):
+            merged = op.combine(
+                jax.tree.unflatten(treedef, lhs_leaves),
+                jax.tree.unflatten(treedef, rhs_leaves),
+            )
+            return jax.tree.flatten(merged)[0]
+
+        def body(*refs):
+            ins = refs[:L]
+            outs = refs[L : L * (1 + streams)]
+            scratch = refs[L * (1 + streams):]
+            acc = scratch[: L * streams]
+            recv = scratch[L * streams : 2 * L * streams]
+            send_sem, recv_sem = scratch[2 * L * streams :]
+            rank = lax.axis_index(axis_name)
+            step = 0
+
+            def exchange(dst_rank, stream):
+                """One full-permutation round: remote-copy every leaf of one
+                stream's accumulator into the partner's recv slot. Returns
+                ``(copies, read)``; ``read()`` loads the received leaves and
+                must only run after the copies' ``wait`` (via
+                ``_start_rounds``)."""
+                nonlocal step
+                slot = step & 1
+                step += 1
+                copies = []
+                for li in range(L):
+                    si = stream * L + li
+                    copies.append(
+                        pltpu.make_async_remote_copy(
+                            src_ref=acc[si],
+                            dst_ref=recv[si].at[slot],
+                            send_sem=send_sem.at[slot, si],
+                            recv_sem=recv_sem.at[slot, si],
+                            device_id=dst_rank,
+                            device_id_type=pltpu.DeviceIdType.LOGICAL,
+                        )
+                    )
+                read = lambda: [  # noqa: E731
+                    recv[stream * L + li][slot] for li in range(L)
+                ]
+                return copies, read
+
+            def set_acc(stream, vals):
+                for li in range(L):
+                    acc[stream * L + li][...] = vals[li]
+
+            def get_acc(stream):
+                return [acc[stream * L + li][...] for li in range(L)]
+
+            if kind in (PhaseKind.TOTAL, PhaseKind.BARRIER):
+                # pow2 recursive-doubling butterfly; the XOR rounds are full
+                # permutations so the flag stream of allreduce_schedule is
+                # constantly 1 and _combine_lr reduces to a plain combine.
+                set_acc(0, [r[...] for r in ins])
+                for k in range(nsteps):
+                    d = 1 << k
+                    copies, read = exchange(rank ^ d, 0)
+                    _start_rounds(copies)
+                    rv = read()
+                    partner_lower = (rank & d) != 0
+                    lo = combine(rv, get_acc(0))
+                    hi = combine(get_acc(0), rv)
+                    set_acc(
+                        0,
+                        [
+                            jnp.where(partner_lower, l, h)
+                            for l, h in zip(lo, hi)
+                        ],
+                    )
+                for li in range(L):
+                    outs[li][...] = acc[li][...]
+                return
+
+            # doubling scans: stream 0 = prefix, stream 1 = suffix (fused)
+            set_acc(0, [r[...] for r in ins])
+            if not inclusive:
+                # structural entry shift: rank r starts from x_{r-1}
+                copies, read = exchange(lax.rem(rank + 1, p), 0)
+                _start_rounds(copies)
+                set_acc(0, _masked(read(), rank >= 1))
+            if fused:
+                set_acc(1, [r[...] for r in ins])
+            for k in range(nsteps):
+                d = 1 << k
+                pre_copies, pre_read = exchange(lax.rem(rank + d, p), 0)
+                if fused:
+                    suf_copies, suf_read = exchange(
+                        lax.rem(rank - d + p, p), 1
+                    )
+                    # full duplex: both directions' sends in flight at once
+                    _start_rounds(pre_copies + suf_copies)
+                else:
+                    _start_rounds(pre_copies)
+                pre = combine(_masked(pre_read(), rank >= d), get_acc(0))
+                if fused:
+                    set_acc(
+                        1,
+                        combine(
+                            get_acc(1), _masked(suf_read(), rank < p - d)
+                        ),
+                    )
+                set_acc(0, pre)
+            if not fused:
+                for li in range(L):
+                    outs[li][...] = acc[li][...]
+                return
+            # fused exits (same arithmetic as alg.scan_total_schedule)
+            if inclusive:
+                copies, read = exchange(lax.rem(rank - 1 + p, p), 1)
+                _start_rounds(copies)
+                total = combine(get_acc(0), _masked(read(), rank < p - 1))
+                y = get_acc(0)
+            else:
+                total = combine(get_acc(0), get_acc(1))
+                y = _masked(get_acc(0), rank != 0)
+            for li in range(L):
+                outs[li][...] = y[li]
+                outs[L + li][...] = total[li]
+
+        out_shape = [
+            jax.ShapeDtypeStruct(l.shape, l.dtype) for l in leaves
+        ] * streams
+        scratch_shapes = (
+            [pltpu.VMEM(l.shape, l.dtype) for l in leaves] * streams
+            + [pltpu.VMEM((2,) + l.shape, l.dtype) for l in leaves] * streams
+            + [
+                pltpu.SemaphoreType.DMA((2, L * streams)),
+                pltpu.SemaphoreType.DMA((2, L * streams)),
+            ]
+        )
+        outs = pl.pallas_call(
+            body,
+            out_shape=out_shape,
+            scratch_shapes=scratch_shapes,
+            interpret=interpret,
+        )(*leaves)
+        if streams == 1:
+            outs = [o.reshape(s) for o, s in zip(outs, shapes)]
+            return jax.tree.unflatten(treedef, outs)
+        y = [o.reshape(s) for o, s in zip(outs[:L], shapes)]
+        t = [o.reshape(s) for o, s in zip(outs[L:], shapes)]
+        return (
+            jax.tree.unflatten(treedef, y),
+            jax.tree.unflatten(treedef, t),
+        )
+
+    return run
+
+
+# ---------------------------------------------------------------------------
+# sim form: whole-mesh (p, ...) kernels, local DMA row-block shifts
+# ---------------------------------------------------------------------------
+
+
+def _row_iota(shape) -> jnp.ndarray:
+    return lax.broadcasted_iota(jnp.int32, shape, 0)
+
+
+def _sim_comm_kernel(
+    kind: PhaseKind,
+    p: int,
+    op: AssocOp,
+    *,
+    inclusive: bool = True,
+    interpret: bool = True,
+):
+    """Build the single-device form over stacked ``(p, ...)`` leaves: the
+    same rounds as the spmd kernel, realized as local ``make_async_copy``
+    row-block shifts (rank r's row moves to row r+d), with the uncovered
+    rows masked to zero exactly like ``ppermute``'s zero-fill."""
+
+    def run(x: PyTree):
+        leaves, treedef = jax.tree.flatten(x)
+        L = len(leaves)
+        nsteps = alg.num_steps(p)
+        fused = kind == PhaseKind.FUSED_SCAN_TOTAL
+        streams = 2 if fused else 1
+
+        def combine(lhs_leaves, rhs_leaves):
+            merged = op.combine(
+                jax.tree.unflatten(treedef, lhs_leaves),
+                jax.tree.unflatten(treedef, rhs_leaves),
+            )
+            return jax.tree.flatten(merged)[0]
+
+        def body(*refs):
+            ins = refs[:L]
+            outs = refs[L : L * (1 + streams)]
+            scratch = refs[L * (1 + streams):]
+            acc = scratch[: L * streams]
+            recv = scratch[L * streams : 2 * L * streams]
+            sem = scratch[-1]
+            step = 0
+
+            def shift(srcs, d, stream):
+                """One round: every leaf's rows move by ``d`` (+d = toward
+                higher ranks) into this round's recv slot; rows with no
+                sender are masked to zero by the caller via the row mask."""
+                nonlocal step
+                slot = step & 1
+                step += 1
+                for li in range(L):
+                    si = stream * L + li
+                    src = srcs[li] if srcs is not None else acc[si]
+                    if d > 0:
+                        copy = pltpu.make_async_copy(
+                            src.at[pl.ds(0, p - d)],
+                            recv[si].at[slot, pl.ds(d, p - d)],
+                            sem.at[slot, si],
+                        )
+                    else:
+                        copy = pltpu.make_async_copy(
+                            src.at[pl.ds(-d, p + d)],
+                            recv[si].at[slot, pl.ds(0, p + d)],
+                            sem.at[slot, si],
+                        )
+                    copy.start()
+                    copy.wait()
+                return [recv[stream * L + li][slot] for li in range(L)]
+
+            def bfly(d, stream):
+                """XOR-partner round as 2*(p / 2d) block swaps (full perm)."""
+                nonlocal step
+                slot = step & 1
+                step += 1
+                for li in range(L):
+                    si = stream * L + li
+                    for base in range(0, p, 2 * d):
+                        for (a, b) in ((base, base + d), (base + d, base)):
+                            copy = pltpu.make_async_copy(
+                                acc[si].at[pl.ds(a, d)],
+                                recv[si].at[slot, pl.ds(b, d)],
+                                sem.at[slot, si],
+                            )
+                            copy.start()
+                            copy.wait()
+                return [recv[stream * L + li][slot] for li in range(L)]
+
+            def mask_rows(vals, keep):
+                return [
+                    jnp.where(
+                        keep(_row_iota(v.shape)), v, jnp.zeros_like(v)
+                    )
+                    for v in vals
+                ]
+
+            def set_acc(stream, vals):
+                for li in range(L):
+                    acc[stream * L + li][...] = vals[li]
+
+            def get_acc(stream):
+                return [acc[stream * L + li][...] for li in range(L)]
+
+            if kind in (PhaseKind.TOTAL, PhaseKind.BARRIER):
+                set_acc(0, [r[...] for r in ins])
+                for k in range(nsteps):
+                    d = 1 << k
+                    rv = bfly(d, 0)
+                    partner_lower = (_row_iota((p,)) & d) != 0
+                    lo = combine(rv, get_acc(0))
+                    hi = combine(get_acc(0), rv)
+                    set_acc(
+                        0,
+                        [
+                            jnp.where(
+                                partner_lower.reshape(
+                                    (p,) + (1,) * (l.ndim - 1)
+                                ),
+                                l,
+                                h,
+                            )
+                            for l, h in zip(lo, hi)
+                        ],
+                    )
+                for li in range(L):
+                    outs[li][...] = acc[li][...]
+                return
+
+            if inclusive:
+                set_acc(0, [r[...] for r in ins])
+            else:
+                rv = shift(ins, 1, 0)
+                set_acc(0, mask_rows(rv, lambda r: r >= 1))
+            if fused:
+                set_acc(1, [r[...] for r in ins])
+            for k in range(nsteps):
+                d = 1 << k
+                rv = shift(None, d, 0)
+                pre = combine(
+                    mask_rows(rv, lambda r, _d=d: r >= _d), get_acc(0)
+                )
+                if fused:
+                    sv = shift(None, -d, 1)
+                    set_acc(
+                        1,
+                        combine(
+                            get_acc(1),
+                            mask_rows(sv, lambda r, _d=d: r < p - _d),
+                        ),
+                    )
+                set_acc(0, pre)
+            if not fused:
+                for li in range(L):
+                    outs[li][...] = acc[li][...]
+                return
+            if inclusive:
+                sv = shift(None, -1, 1)
+                total = combine(
+                    get_acc(0), mask_rows(sv, lambda r: r < p - 1)
+                )
+                y = get_acc(0)
+            else:
+                total = combine(get_acc(0), get_acc(1))
+                y = mask_rows(get_acc(0), lambda r: r != 0)
+            for li in range(L):
+                outs[li][...] = y[li]
+                outs[L + li][...] = total[li]
+
+        out_shape = [
+            jax.ShapeDtypeStruct(l.shape, l.dtype) for l in leaves
+        ] * streams
+        scratch_shapes = (
+            [pltpu.VMEM(l.shape, l.dtype) for l in leaves] * streams
+            + [pltpu.VMEM((2,) + l.shape, l.dtype) for l in leaves] * streams
+            + [pltpu.SemaphoreType.DMA((2, L * streams))]
+        )
+        outs = pl.pallas_call(
+            body,
+            out_shape=out_shape,
+            scratch_shapes=scratch_shapes,
+            interpret=interpret,
+        )(*leaves)
+        if streams == 1:
+            return jax.tree.unflatten(treedef, list(outs))
+        return (
+            jax.tree.unflatten(treedef, list(outs[:L])),
+            jax.tree.unflatten(treedef, list(outs[L:])),
+        )
+
+    return run
+
+
+# ---------------------------------------------------------------------------
+# Plan lowering: the same phase loop as lower_sim/lower_spmd, with every
+# comm phase on the active level replaced by one fused kernel
+# ---------------------------------------------------------------------------
+
+
+def _sim_fallback_fn(ph, op, chunks_backend):
+    """The op-per-round functions lower_sim uses — only reached for size-1
+    levels, where they are communication-free local shortcuts."""
+    if ph.kind == PhaseKind.SCAN:
+        return lambda t: sim_scan(
+            t, op, chunks_backend.p, algorithm=ph.algorithm,
+            inclusive=ph.inclusive, backend=chunks_backend,
+        )
+    if ph.kind == PhaseKind.FUSED_SCAN_TOTAL:
+        return lambda t: alg.scan_total_schedule(
+            chunks_backend, t, op, inclusive=ph.inclusive
+        )
+    if ph.kind == PhaseKind.TOTAL:
+        return lambda t: allreduce_schedule(
+            chunks_backend, t, op, algorithm=ph.algorithm
+        )
+    if ph.kind == PhaseKind.REDUCE:
+        return lambda t: reduce_schedule(
+            chunks_backend, t, op, root=ph.root, algorithm=ph.algorithm
+        )
+    if ph.kind == PhaseKind.BARRIER:
+        return lambda t: allreduce_schedule(
+            chunks_backend, t, MAX, algorithm=ph.algorithm
+        )
+    raise ValueError(f"unknown phase kind {ph.kind!r}")
+
+
+def _lower_pallas_sim(
+    plan: CollectivePlan, op: AssocOp, interpret: bool, traced: bool
+):
+    logical = plan.logical_sizes
+    k = len(logical)
+    p_total = plan.p
+    lv_active = active_level(plan)
+    coll_name = plan.coll.name.lower()
+
+    def to_mesh(tree: PyTree) -> PyTree:
+        return jax.tree.map(lambda a: a.reshape(logical + a.shape[1:]), tree)
+
+    def to_flat(tree: PyTree) -> PyTree:
+        return jax.tree.map(
+            lambda a: a.reshape((p_total,) + a.shape[k:]), tree
+        )
+
+    def run(x: Optional[PyTree]) -> PyTree:
+        regs = {}
+        if plan.coll == CollType.BARRIER:
+            regs["x"] = jnp.ones(logical, jnp.float32)
+        else:
+            regs["x"] = to_mesh(x)
+        tracer = None
+        if traced:
+            from repro.obs import tracing as obs_tracing
+
+            tracer = obs_tracing.get_tracer()
+        for ph in plan.phases:
+            if ph.kind == PhaseKind.COMBINE:
+                merged = op.combine(regs[ph.src[0]], regs[ph.src[1]])
+                if ph.guard_levels:
+                    mask = _zero_coord_mask(logical, ph.guard_levels)
+                    merged = alg._bwhere(mask, regs[ph.src[1]], merged)
+                regs[ph.dst] = merged
+                continue
+            if ph.kind == PhaseKind.IDENTITY:
+                regs[ph.dst] = op.identity_like(regs[ph.src[0]])
+                continue
+            p_axis = logical[ph.level]
+            phase_op = MAX if ph.kind == PhaseKind.BARRIER else op
+            if ph.level == lv_active and ph.kind in _COMM_KINDS:
+                fn = _sim_comm_kernel(
+                    ph.kind, p_axis, phase_op,
+                    inclusive=ph.inclusive, interpret=interpret,
+                )
+                rounds = alg.phase_round_count(
+                    ph.kind.name, p_axis, inclusive=ph.inclusive
+                )
+            else:
+                fn = _sim_fallback_fn(ph, op, alg.SimBackend(p_axis))
+                rounds = 0
+            if tracer is not None and rounds:
+                from repro.obs import tracing as obs_tracing
+
+                t0 = obs_tracing.now_us()
+                out = jax.block_until_ready(
+                    _along_axis(regs[ph.src[0]], ph.level, fn)
+                )
+                obs_tracing.add_kernel_round_spans(
+                    tracer,
+                    phase=f"{ph.kind.name}:L{ph.level}",
+                    coll=coll_name,
+                    rounds=rounds,
+                    start_us=t0,
+                    end_us=obs_tracing.now_us(),
+                )
+            else:
+                out = _along_axis(regs[ph.src[0]], ph.level, fn)
+            if ph.kind == PhaseKind.FUSED_SCAN_TOTAL:
+                regs[ph.dst], regs[ph.dst2] = out
+            else:
+                regs[ph.dst] = out
+        return to_flat(regs[plan.result])
+
+    return run
+
+
+def _lower_pallas_spmd(
+    plan: CollectivePlan,
+    op: AssocOp,
+    axis_names: Sequence[str],
+    interpret: bool,
+):
+    name = axis_names[plan.order[0]]
+    p = plan.sizes[0]
+
+    def run(x: Optional[PyTree] = None) -> PyTree:
+        regs = {}
+        if plan.coll == CollType.BARRIER:
+            regs["x"] = jnp.ones((), jnp.float32)
+        else:
+            regs["x"] = x
+        for ph in plan.phases:
+            if ph.kind == PhaseKind.COMBINE:
+                merged = op.combine(regs[ph.src[0]], regs[ph.src[1]])
+                if ph.guard_levels:
+                    keep = jnp.asarray(True)
+                    for lv in ph.guard_levels:
+                        keep = keep & (lax.axis_index(name) == 0)
+                    merged = alg._bwhere(keep, regs[ph.src[1]], merged)
+                regs[ph.dst] = merged
+                continue
+            if ph.kind == PhaseKind.IDENTITY:
+                regs[ph.dst] = op.identity_like(regs[ph.src[0]])
+                continue
+            phase_op = MAX if ph.kind == PhaseKind.BARRIER else op
+            fn = _spmd_comm_kernel(
+                ph.kind, p, name, phase_op,
+                inclusive=ph.inclusive, interpret=interpret,
+            )
+            out = fn(regs[ph.src[0]])
+            if ph.kind == PhaseKind.FUSED_SCAN_TOTAL:
+                regs[ph.dst], regs[ph.dst2] = out
+            else:
+                regs[ph.dst] = out
+        return regs[plan.result]
+
+    return run
+
+
+def lower_pallas(
+    plan: CollectivePlan,
+    op: "AssocOp | str | None" = None,
+    *,
+    axis_names: Optional[Sequence[str]] = None,
+    interpret: Optional[bool] = None,
+    traced: bool = False,
+):
+    """Compile a supported plan to fused-Pallas-kernel schedules.
+
+    Mirrors the :func:`repro.offload.planner.lower_sim` /
+    :func:`~repro.offload.planner.lower_spmd` calling conventions — with
+    ``axis_names`` the result runs per-rank inside ``shard_map`` over one
+    named axis; without, it runs over flat stacked ``(p, ...)`` leaves on a
+    single device. Outputs are bitwise identical to the op-per-round
+    lowerings (same arithmetic, same operand order, same zero-fills).
+
+    ``interpret=None`` auto-selects Pallas interpret mode off-TPU so CI
+    exercises the DMA structure on CPU. Raises ``ValueError`` for plans
+    outside :func:`supports_plan`; callers wanting a soft fallback go
+    through the lowering registry (``repro.offload.backends``).
+    """
+    op = get_operator(plan.op_name if op is None else op)
+    ok, reason = supports_plan(plan, axis_names)
+    if not ok:
+        raise ValueError(
+            f"plan not supported by the pallas backend ({reason}); "
+            f"use the registry default lowering"
+        )
+    inter = _resolve_interpret(interpret)
+    if axis_names is None:
+        return _lower_pallas_sim(plan, op, inter, traced)
+    return _lower_pallas_spmd(plan, op, axis_names, inter)

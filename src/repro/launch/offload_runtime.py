@@ -351,6 +351,16 @@ def main() -> None:
         "streaming chunk counts per (fused, unfused) schedule (e.g. "
         "1,2,4,8 — feeds make_descriptor's chunks='auto')",
     )
+    ap.add_argument(
+        "--backend",
+        metavar="NAME,NAME,...",
+        default=None,
+        help="with --fusion, race each schedule variant across these "
+        "lowering backends ('' or 'default' = the op-per-round default, "
+        "'pallas' = the fused-kernel lowering; e.g. default,pallas — "
+        "feeds make_descriptor's backend='auto'). Variants outside a "
+        "named backend's capabilities are skipped, not mis-measured",
+    )
     ap.add_argument("--out", default=str(DEFAULT_TABLE_PATH))
     ap.add_argument("--budget-s", type=float, default=60.0)
     ap.add_argument("--iters", type=int, default=5)
@@ -381,6 +391,8 @@ def main() -> None:
         )
     if args.chunks and not args.fusion:
         ap.error("--chunks widens the --fusion grid; pass --fusion too")
+    if args.backend and not args.fusion:
+        ap.error("--backend races the --fusion grid; pass --fusion too")
     if args.fusion:
         from repro.offload import tune_schedule
 
@@ -389,8 +401,17 @@ def main() -> None:
             if args.chunks
             else (1,)
         )
+        backend_grid = (
+            tuple(
+                "" if b in ("", "default") else b
+                for b in args.backend.split(",")
+            )
+            if args.backend
+            else ("",)
+        )
         tune_schedule(
             chunks=chunk_grid,
+            backends=backend_grid,
             iters=args.iters,
             time_budget_s=args.budget_s,
             cache=cache,
@@ -422,6 +443,11 @@ def main() -> None:
         )
         if chunked:
             print(f"chunked-streaming winners: {chunked} grid points")
+    if cache.backend_winners:
+        print(
+            f"lowering-backend winners: {len(cache.backend_winners)} "
+            f"grid points"
+        )
     print(f"export {TUNING_TABLE_ENV}={out}  # to use it in later launches")
 
 

@@ -53,6 +53,7 @@ __all__ = [
     "Span",
     "Tracer",
     "TracingBackend",
+    "add_kernel_round_spans",
     "get_tracer",
     "install_tracer",
     "now_us",
@@ -365,6 +366,58 @@ class TracingBackend:
         if self.on_round is not None:
             self.on_round(idx, now_us() - t0)
         return out
+
+
+def add_kernel_round_spans(
+    tracer: "Tracer | NoopTracer",
+    *,
+    phase: str,
+    coll: str,
+    rounds: int,
+    start_us: float,
+    end_us: float,
+) -> Optional[int]:
+    """Record phase + round spans for a *fused-kernel* phase after the fact.
+
+    The pallas backend runs every exchange round of a phase inside one
+    kernel, so there is no host-side per-round boundary to wrap a span
+    around — the only measurable quantity is the whole kernel's wall time.
+    This helper keeps the trace schema uniform anyway: one ``phase``-category
+    span over ``[start_us, end_us]`` plus ``rounds`` contiguous child
+    ``round`` spans splitting the interval evenly, all tagged
+    ``source="pallas"`` and ``attribution="uniform"`` so downstream
+    consumers (the per-round cost table, trace exports) can tell a measured
+    host round from a kernel-amortized estimate. Returns the phase span id
+    (None on the no-op tracer).
+    """
+    if not tracer.enabled:
+        return None
+    n = max(0, int(rounds))
+    phase_id = tracer.add_span(
+        f"plan.phase:{phase}",
+        "phase",
+        start_us,
+        end_us,
+        parent_id=tracer.current_span_id(),
+        coll=coll,
+        rounds=n,
+        source="pallas",
+    )
+    if n:
+        step = (float(end_us) - float(start_us)) / n
+        for i in range(n):
+            tracer.add_span(
+                f"plan.round:{i}",
+                "round",
+                start_us + i * step,
+                start_us + (i + 1) * step,
+                parent_id=phase_id,
+                round=i,
+                phase=phase,
+                source="pallas",
+                attribution="uniform",
+            )
+    return phase_id
 
 
 def _block(tree: Any) -> Any:

@@ -9,10 +9,27 @@ NIC firmware.
   autotune / TuningCache — measured-cost autotuner + persisted tuning table
                            that re-fits the selector's LinkModel and records
                            axis-split winners (tuner, tuning_cache)
-  *_hierarchical_scan    — legacy two-level 2D entry points, now thin
-                           wrappers over the planner (hierarchical)
+  backends               — the lowering-backend registry: sim/spmd/pallas
+                           behind one LoweringBackend contract, plus the
+                           legacy two-level *_hierarchical_scan entry points
+                           (backends)
 """
 
+from repro.offload.backends import (
+    DEFAULT_BACKEND,
+    LoweringBackend,
+    PallasLowering,
+    SimLowering,
+    SpmdLowering,
+    backend_names,
+    default_backend_name,
+    dist_hierarchical_scan,
+    flat_equivalent,
+    get_backend,
+    register_backend,
+    resolve,
+    sim_hierarchical_scan,
+)
 from repro.offload.engine import (
     COLL_KIND,
     CompiledSchedule,
@@ -22,14 +39,10 @@ from repro.offload.engine import (
     wire_op_id,
     wire_op_name,
 )
-from repro.offload.hierarchical import (
-    dist_hierarchical_scan,
-    flat_equivalent,
-    sim_hierarchical_scan,
-)
 from repro.offload.passes import (
     CHUNK_CANDIDATES,
     PASS_NAMES,
+    choose_backend,
     choose_optimization,
     choose_schedule,
     eliminate_dead_phases,
@@ -84,6 +97,7 @@ __all__ = [
     "COLL_KIND",
     "CollectivePlan",
     "CompiledSchedule",
+    "DEFAULT_BACKEND",
     "DEFAULT_CHUNKS",
     "DEFAULT_PAYLOADS",
     "DEFAULT_PS",
@@ -91,10 +105,14 @@ __all__ = [
     "DeviceTiming",
     "EngineTelemetry",
     "FusionMeasurement",
+    "LoweringBackend",
     "Measurement",
     "OffloadEngine",
     "PASS_NAMES",
+    "PallasLowering",
     "PhaseKind",
+    "SimLowering",
+    "SpmdLowering",
     "PlanLayout",
     "PlanPhase",
     "SplitMeasurement",
@@ -102,11 +120,17 @@ __all__ = [
     "TuningCache",
     "amortize_inner",
     "autotune",
+    "backend_names",
     "build_plan",
+    "choose_backend",
     "choose_optimization",
     "choose_schedule",
     "deactivate",
+    "default_backend_name",
     "dist_hierarchical_scan",
+    "get_backend",
+    "register_backend",
+    "resolve",
     "eliminate_dead_phases",
     "flat_equivalent",
     "fuse_scan_total",

@@ -157,6 +157,10 @@ class EngineTelemetry:
     profiler_fallback_reasons: Dict[str, int] = dataclasses.field(
         default_factory=dict
     )
+    backend_fallbacks: int = 0
+    backend_fallback_reasons: Dict[str, int] = dataclasses.field(
+        default_factory=dict
+    )
 
     def record_dispatch(self, coll: str, latency_s: Optional[float]) -> None:
         self.dispatches += 1
@@ -223,6 +227,21 @@ class EngineTelemetry:
             labelnames=("coll", "reason"),
         ).inc(coll=coll, reason=reason)
 
+    def record_backend_fallback(self, coll: str, reason: str) -> None:
+        """A descriptor named a lowering backend whose capability check
+        missed for its plan, and the dispatch fell back to the registry
+        default. Counted once per unique (descriptor, axis-binding)
+        resolution, not per dispatch, mirroring the memoized resolution."""
+        self.backend_fallbacks += 1
+        self.backend_fallback_reasons[reason] = (
+            self.backend_fallback_reasons.get(reason, 0) + 1
+        )
+        obs_metrics.get_registry().counter(
+            "repro_engine_backend_fallbacks_total",
+            "lowering-backend requests that fell back to the default",
+            labelnames=("coll", "reason"),
+        ).inc(coll=coll, reason=reason)
+
     @property
     def hit_rate(self) -> float:
         total = self.hits + self.misses
@@ -260,6 +279,8 @@ class EngineTelemetry:
             "latency_source_by_coll": dict(self.latency_source_by_coll),
             "profiler_fallbacks": self.profiler_fallbacks,
             "profiler_fallback_reasons": dict(self.profiler_fallback_reasons),
+            "backend_fallbacks": self.backend_fallbacks,
+            "backend_fallback_reasons": dict(self.backend_fallback_reasons),
         }
 
 
@@ -297,6 +318,10 @@ class OffloadEngine:
         self._plan_memo: Dict[bytes, Any] = {}
         self._fp_memo: Dict[Tuple[bytes, Any], bytes] = {}
         self._plans: Dict[bytes, Any] = {}
+        # memoized lowering-backend resolution per (requested name, plan,
+        # axis binding): repeat dispatches neither re-run the capability
+        # check nor re-count a fallback in telemetry
+        self._backend_memo: Dict[Tuple[str, Any, Any], Tuple] = {}
         self.telemetry = EngineTelemetry()
 
     # -- descriptor helpers ------------------------------------------------
@@ -368,12 +393,42 @@ class OffloadEngine:
             self._plan_memo[words] = plan
         return plan, words
 
+    def _resolve_backend(
+        self, desc: CollectiveDescriptor, plan, axis_name: AxisSpec
+    ) -> Tuple[str, Tuple]:
+        """Resolve the descriptor's lowering-backend request through the
+        registry for this plan + axis binding; returns ``(name,
+        fingerprint_fields)``. Soft capability misses fall back to the mode
+        default and are counted in telemetry exactly once per unique
+        resolution (the memo doubles as the dedup set)."""
+        names = None
+        if axis_name is not None:
+            names = (
+                (axis_name,)
+                if isinstance(axis_name, str)
+                else tuple(axis_name)
+            )
+        memo_key = (desc.backend, plan, names)
+        cached = self._backend_memo.get(memo_key)
+        if cached is None:
+            from repro.offload import backends
+
+            backend, reason = backends.resolve(desc.backend, plan, names)
+            if reason:
+                self.telemetry.record_backend_fallback(
+                    desc.coll_type.name.lower(), reason
+                )
+            cached = (backend.name, backend.fingerprint())
+            self._backend_memo[memo_key] = cached
+        return cached
+
     def _planned_cache_key(
         self,
         words: bytes,
         plan,
         axis_name: AxisSpec,
         mesh: Any = None,
+        backend_fields: Tuple = (),
     ) -> bytes:
         """Key a planned request on everything its lowering reads — and
         nothing more. In sim mode that is the logical structure alone; in
@@ -393,7 +448,7 @@ class OffloadEngine:
                 names_l = tuple(names[i] for i in plan.order)
             else:  # malformed; let _compile raise with its clear error
                 names_l = names
-        digest = self._fp_memo.get((words, names_l))
+        digest = self._fp_memo.get((words, names_l, backend_fields))
         if digest is None:
             fields = (
                 plan.coll.name,
@@ -415,8 +470,11 @@ class OffloadEngine:
             # pre-chunking digest bit-for-bit (cache-key stability)
             if plan.chunking > 1:
                 fields = fields + (("chunks", int(plan.chunking)),)
+            # ditto the backend: the mode defaults contribute no fields
+            # (fingerprint() is empty), so every pre-registry key survives
+            fields = fields + backend_fields
             digest = hashlib.blake2s(repr(fields).encode("utf-8")).digest()
-            self._fp_memo[(words, names_l)] = digest
+            self._fp_memo[(words, names_l, backend_fields)] = digest
         mode = self._mode_tag(axis_name, mesh)
         return b"plan|" + digest + b"|" + mode.encode("utf-8")
 
@@ -436,6 +494,7 @@ class OffloadEngine:
         split: "str | Sequence[int]" = "auto",
         optimize: "str | bool" = "auto",
         chunks: "str | int" = "auto",
+        backend: str = "auto",
     ) -> CollectiveDescriptor:
         """Build an offload request, resolving ``algorithm="auto"`` through
         the (tuning-table-aware) selector — the host-side half of the paper's
@@ -460,6 +519,13 @@ class OffloadEngine:
         select_chunking` otherwise), an int forces it; the resolved count
         travels as the 17th wire word when > 1 (single-axis requests
         always run unchunked).
+        ``backend`` names the lowering backend for planned requests:
+        ``"auto"`` consults the autotuner's measured backend winner
+        (:func:`~repro.offload.passes.choose_backend`, falling back to the
+        mode default when untuned), an explicit registry name ("pallas")
+        pins it — subject to the soft capability fallback at compile time.
+        Single-axis requests always use the mode default (the descriptor
+        rejects a named backend without a topology).
         """
         if isinstance(coll, str):
             coll = CollType[coll.upper()]
@@ -473,8 +539,14 @@ class OffloadEngine:
         order: "tuple[int, ...]" = ()
         optimized = False
         chunk_count = 1
+        backend_name = "" if backend == "auto" else str(backend)
         if axes is not None and len(axes) > 1:
             from repro.offload import passes
+
+            if backend == "auto":
+                backend_name = passes.choose_backend(
+                    coll, axes, payload_bytes, op
+                )
 
             if optimize == "auto" and chunks == "auto":
                 # one resolution for both schedule halves: the measured
@@ -550,6 +622,7 @@ class OffloadEngine:
             split=order,
             optimized=optimized,
             chunks=chunk_count,
+            backend=backend_name,
         )
 
     # -- dispatch ----------------------------------------------------------
@@ -616,7 +689,10 @@ class OffloadEngine:
             except Exception:
                 self.telemetry.errors += 1
                 raise
-            key = self._planned_cache_key(words, plan, axis_name, mesh)
+            _, bfields = self._resolve_backend(desc, plan, axis_name)
+            key = self._planned_cache_key(
+                words, plan, axis_name, mesh, backend_fields=bfields
+            )
             if traced:
                 key += b"|traced"
             self._plans.setdefault(key, plan)
@@ -725,6 +801,7 @@ class OffloadEngine:
         self._plan_memo.clear()
         self._fp_memo.clear()
         self._plans.clear()
+        self._backend_memo.clear()
         self.telemetry.cache_size = 0
         self.telemetry.cache_clears += 1
 
@@ -763,7 +840,7 @@ class OffloadEngine:
             )
 
         if len(desc.axes) > 1:
-            fn = self._build_planned(
+            fn, bname = self._build_planned(
                 desc, op, axis_name, plan=self._plans.get(key),
                 traced=traced,
             )
@@ -772,6 +849,10 @@ class OffloadEngine:
                 algo = f"opt:{algo}"
             if desc.chunks > 1:
                 algo = f"chunk{desc.chunks}:{algo}"
+            if bname is not None:
+                # only non-default backends tag the schedule, so the algo
+                # strings pre-registry callers assert on are unchanged
+                algo = f"{bname}:{algo}"
             if traced:
                 algo = f"traced:{algo}"
         elif axis_name is not None:
@@ -853,15 +934,18 @@ class OffloadEngine:
             )
         )
 
-    @staticmethod
     def _build_planned(
+        self,
         desc: CollectiveDescriptor,
         op: AssocOp,
         axis_name: AxisSpec,
         plan,
         traced: bool = False,
-    ) -> Callable[[PyTree], PyTree]:
-        """Lower a multi-axis descriptor through the collective planner.
+    ) -> "Tuple[Callable[[PyTree], PyTree], Optional[str]]":
+        """Lower a multi-axis descriptor through the lowering-backend
+        registry; returns ``(fn, backend_tag)`` where the tag is the
+        resolved backend's name for non-defaults and ``None`` when the mode
+        default lowered the plan (the compiled algo string stays as-is).
 
         ``plan`` is the dispatch path's already-built (and, when the
         descriptor is flagged, pass-optimized) plan — ``offload`` stashes
@@ -870,21 +954,32 @@ class OffloadEngine:
         the *eager* span-emitting sim interpreter (never jitted: its whole
         point is measuring per-round host time).
         """
+        from repro.offload import backends
+
         if plan is None:
             raise ValueError(
                 "planned compile without a stashed plan; dispatch through "
                 "offload(), which builds it via _plan_for"
             )
-        if axis_name is None:
-            if traced:
-                return planner.lower_sim(plan, op, traced=True)
-            return jax.jit(planner.lower_sim(plan, op))
-        if isinstance(axis_name, str) or len(axis_name) != len(desc.axes):
+        if axis_name is not None and (
+            isinstance(axis_name, str) or len(axis_name) != len(desc.axes)
+        ):
             raise ValueError(
                 f"planned descriptor spans axes {desc.axes}; pass one mesh "
                 f"axis name per axis (got {axis_name!r})"
             )
-        return planner.lower_spmd(plan, axis_name, op)
+        bname, _ = self._resolve_backend(desc, plan, axis_name)
+        backend = backends.get_backend(bname)
+        tag = (
+            bname
+            if bname != backends.default_backend_name(axis_name)
+            else None
+        )
+        if axis_name is None:
+            fn = backend.lower(plan, op, traced=traced)
+            # the traced interpreters are eager on purpose
+            return (fn if traced else jax.jit(fn)), tag
+        return backend.lower(plan, op, axis_names=tuple(axis_name)), tag
 
     @staticmethod
     def _build_sim(

@@ -470,10 +470,43 @@ def choose_schedule(
     return False, select_chunking(raw, payload_bytes).chunking
 
 
+def choose_backend(
+    coll: "CollType | str",
+    sizes: Sequence[int],
+    payload_bytes: int,
+    op: "AssocOp | str" = "sum",
+) -> str:
+    """Which lowering backend should lower this request? The
+    ``backend="auto"`` resolution ``make_descriptor`` uses.
+
+    Purely measurement-driven: a backend winner recorded by
+    ``tune_schedule`` in the active tuning table
+    (``TuningCache.backend_winner``) rules when one exists for this
+    (coll, sizes) at a nearby payload; untuned requests return the mode
+    default ("", wire backend id 0) — there is no cost model for the fused
+    kernel, so nothing speculative ever changes a descriptor's bytes. A
+    measured winner still goes through the registry's capability check at
+    compile time (soft fallback), so a stale table cannot break dispatch.
+    """
+    if isinstance(coll, str):
+        coll = CollType[coll.upper()]
+    sizes = tuple(int(s) for s in sizes)
+
+    tuning = get_active_tuning()
+    if tuning is not None:
+        winner = getattr(tuning, "backend_winner", lambda *a, **k: None)(
+            coll.name.lower(), sizes, payload_bytes
+        )
+        if winner is not None:
+            return str(winner)
+    return ""
+
+
 __all__ = [
     "CHUNK_CANDIDATES",
     "FUSED_ALGORITHM",
     "PASS_NAMES",
+    "choose_backend",
     "choose_optimization",
     "choose_schedule",
     "eliminate_dead_phases",

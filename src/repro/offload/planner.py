@@ -29,7 +29,11 @@ descriptor CollTypes over 1D, 2D, and 3D (pod-axis) meshes:
   * :func:`lower_sim` / :func:`lower_spmd` — lower one plan through both
     backends: stacked ``(p, ...)`` arrays on one device, or named mesh axes
     inside ``shard_map``. Both interpret the identical phase list, so the
-    sim path is a bit-accurate rehearsal of the SPMD program.
+    sim path is a bit-accurate rehearsal of the SPMD program. These two are
+    the *mode-default* entries of the lowering-backend registry
+    (:mod:`repro.offload.backends`); the engine resolves every planned
+    dispatch through that registry, which also hosts the fused-Pallas-kernel
+    lowering (:mod:`repro.kernels.pallas_collective`).
 
 Plans are wire-representable: ``OffloadEngine.make_descriptor(axes=...)``
 encodes (axes, split) into the descriptor, so multi-axis plans cache-key and

@@ -186,11 +186,14 @@ def time_planned_collective(
     optimized: bool = False,
     chunking: int = 1,
     inner: int = 1,
+    backend: str = "",
 ) -> float:
     """Median wall-clock seconds of one whole planner-lowered collective on
     the sim backend, for a fixed logical axis order (``optimized=True``
     times the pass-pipeline form of the same plan; ``chunking`` > 1 times
-    the chunked-streaming lowering of it).
+    the chunked-streaming lowering of it; ``backend`` names a non-default
+    lowering backend to time — raises when the plan is outside that
+    backend's capabilities, so a sample is never silently the default).
 
     ``inner`` > 1 chains that many schedule runs inside one jitted
     ``fori_loop`` dispatch and divides the wall time by ``inner``, so the
@@ -213,7 +216,12 @@ def time_planned_collective(
         plan = optimize_plan(plan)
     if chunking != 1:
         plan = dataclasses.replace(plan, chunking=int(chunking))
-    run = lower_sim(plan, op)
+    if backend:
+        from repro.offload import backends as registry
+
+        run = registry.get_backend(backend).lower(plan, op)
+    else:
+        run = lower_sim(plan, op)
     inner = max(1, int(inner))
     if coll.lower() == "barrier":
         inner = 1  # the fence takes no payload to thread through iterations
@@ -286,12 +294,30 @@ def tune_splits(
 DEFAULT_CHUNKS: Tuple[int, ...] = (1, 2, 4, 8)
 
 
+def _plan_for_variant(coll, sizes, order, payload, op, optimized, chunking):
+    """The exact plan :func:`time_planned_collective` would time for one
+    schedule-grid variant — used to capability-check non-default backends
+    before spending a sample on them."""
+    import dataclasses
+
+    from repro.offload.passes import optimize_plan
+    from repro.offload.planner import build_plan
+
+    plan = build_plan(coll, sizes, op, payload, order=tuple(order))
+    if optimized:
+        plan = optimize_plan(plan)
+    if chunking != 1:
+        plan = dataclasses.replace(plan, chunking=int(chunking))
+    return plan
+
+
 def tune_schedule(
     *,
     topologies: Sequence[Sequence[int]] = DEFAULT_TOPOLOGIES,
     payloads: Sequence[int] = (1024, 65536),
     colls: Sequence[str] = ("scan", "exscan"),
     chunks: Sequence[int] = DEFAULT_CHUNKS,
+    backends: Sequence[str] = ("", "pallas"),
     op: "AssocOp | str" = "sum",
     iters: int = 3,
     time_budget_s: Optional[float] = None,
@@ -306,14 +332,26 @@ def tune_schedule(
     consults before the plan cost model, so both the fusion decision and
     the chunk count are made per *measured* winner wherever one exists.
 
+    ``backends`` additionally races each variant across lowering backends
+    ("" is the op-per-round default): variants outside a named backend's
+    capabilities are skipped, never timed-as-default, so every recorded row
+    really ran what its ``backend`` column says. The cross-backend
+    reduction (``TuningCache.backend_winner``) feeds ``choose_backend`` /
+    ``make_descriptor(backend="auto")``. Note the stock topology grid is
+    multi-axis, where the fused-kernel backend declines every plan — pass
+    an effectively-single-axis topology (e.g. ``(1, 8)``) to actually race
+    it.
+
     Samples use amortized timing (:func:`amortize_inner`): ``inner``
     schedule runs chained inside one jitted dispatch, so small-payload
     points measure the schedule rather than the dispatch floor."""
     op = get_operator(op)
     cache = cache if cache is not None else TuningCache()
     chunk_grid = tuple(dict.fromkeys(int(c) for c in chunks)) or (1,)
+    backend_grid = tuple(dict.fromkeys(str(b) for b in backends)) or ("",)
     t_start = time.perf_counter()
     skipped = 0
+    unsupported = 0
     for sizes in topologies:
         sizes = tuple(int(s) for s in sizes)
         order = tuple(range(len(sizes)))
@@ -331,23 +369,48 @@ def tune_schedule(
                     continue
                 for optimized in (False, True):
                     for c in chunk_grid:
-                        t = time_planned_collective(
-                            coll, sizes, order, payload, op,
-                            iters=iters, optimized=optimized,
-                            chunking=c, inner=inner,
-                        )
-                        cache.record_schedule(
-                            coll, sizes, optimized, c, payload, t
-                        )
-                        if verbose:
-                            tag = "opt" if optimized else "raw"
-                            print(
-                                f"tune-schedule {coll:9s} {str(sizes):12s} "
-                                f"{tag} C={c} bytes={payload:8d} "
-                                f"{t*1e6:10.1f}us"
+                        for bname in backend_grid:
+                            if bname:
+                                from repro.offload import (
+                                    backends as registry,
+                                )
+
+                                plan = _plan_for_variant(
+                                    coll, sizes, order, payload, op,
+                                    optimized, c,
+                                )
+                                ok, _ = registry.get_backend(
+                                    bname
+                                ).capabilities(plan)
+                                if not ok:
+                                    unsupported += 1
+                                    continue
+                            t = time_planned_collective(
+                                coll, sizes, order, payload, op,
+                                iters=iters, optimized=optimized,
+                                chunking=c, inner=inner, backend=bname,
                             )
+                            cache.record_schedule(
+                                coll, sizes, optimized, c, payload, t,
+                                backend=bname,
+                            )
+                            if verbose:
+                                tag = "opt" if optimized else "raw"
+                                if bname:
+                                    tag = f"{tag}+{bname}"
+                                print(
+                                    f"tune-schedule {coll:9s} "
+                                    f"{str(sizes):12s} "
+                                    f"{tag} C={c} bytes={payload:8d} "
+                                    f"{t*1e6:10.1f}us"
+                                )
     if verbose and skipped:
         print(f"tune-schedule: time budget hit, skipped {skipped} points")
+    if verbose and unsupported:
+        print(
+            f"tune-schedule: {unsupported} variant(s) outside a named "
+            f"backend's capabilities were skipped"
+        )
     _ = cache.schedule_winners
     return cache
 
@@ -364,10 +427,11 @@ def tune_fusion(
     verbose: bool = False,
 ) -> TuningCache:
     """Measure each planned collective with the plan-optimizer passes on
-    and off — :func:`tune_schedule` restricted to the unchunked schedule,
-    kept as the cheap fusion-only entry point."""
+    and off — :func:`tune_schedule` restricted to the unchunked schedule
+    and the default lowering backend, kept as the cheap fusion-only entry
+    point."""
     return tune_schedule(
         topologies=topologies, payloads=payloads, colls=colls,
-        chunks=(1,), op=op, iters=iters, time_budget_s=time_budget_s,
-        cache=cache, verbose=verbose,
+        chunks=(1,), backends=("",), op=op, iters=iters,
+        time_budget_s=time_budget_s, cache=cache, verbose=verbose,
     )

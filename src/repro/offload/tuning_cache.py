@@ -18,6 +18,10 @@ selection"; this module is where that intelligence persists. The autotuner
   * ``fusion_winners`` — the measured fused-vs-unfused decision per
     (coll, mesh shape, payload) — consulted by the plan optimizer's
     ``choose_optimization`` before the plan cost model;
+  * ``backend_winners`` — the measured-fastest *lowering backend* per
+    (coll, mesh shape, payload), from ``tune_schedule`` racing the
+    op-per-round default against the fused Pallas kernel — consulted by
+    ``choose_backend`` (``make_descriptor(backend="auto")``);
 
 and round-trips the whole table through JSON so one tuning run serves every
 subsequent process on the same backend (`REPRO_TUNING_TABLE` env var or an
@@ -118,7 +122,11 @@ class FusionMeasurement:
     that ``choose_schedule``/``choose_optimization`` consult.
 
     ``chunks`` defaults to 1 so tables written before chunked streaming
-    existed load unchanged (same schema version)."""
+    existed load unchanged (same schema version); ``backend`` (the
+    *lowering* backend name — "" for the mode default, "pallas" for the
+    fused-kernel lowering, distinct from the table-level hardware
+    fingerprint) likewise defaults to "" so pre-registry tables load
+    unchanged."""
 
     coll: str
     sizes: Tuple[int, ...]
@@ -126,6 +134,7 @@ class FusionMeasurement:
     payload_bytes: int
     seconds: float
     chunks: int = 1
+    backend: str = ""
 
     def to_json(self) -> dict:
         d = dataclasses.asdict(self)
@@ -141,6 +150,7 @@ class FusionMeasurement:
             payload_bytes=int(d["payload_bytes"]),
             seconds=float(d["seconds"]),
             chunks=int(d.get("chunks", 1)),
+            backend=str(d.get("backend", "")),
         )
 
 
@@ -161,6 +171,9 @@ class TuningCache:
         ] = {}
         self._schedule_winners: Dict[
             Tuple[str, Tuple[int, ...], int], Tuple[bool, int]
+        ] = {}
+        self._backend_winners: Dict[
+            Tuple[str, Tuple[int, ...], int], str
         ] = {}
         self._fitted: Optional[LinkModel] = None
 
@@ -202,6 +215,7 @@ class TuningCache:
         payload_bytes: int,
         seconds: float,
         chunks: int = 1,
+        backend: str = "",
     ) -> None:
         self.fusion_measurements.append(
             FusionMeasurement(
@@ -211,10 +225,12 @@ class TuningCache:
                 int(payload_bytes),
                 float(seconds),
                 int(chunks),
+                str(backend),
             )
         )
         self._fusion_winners = {}  # invalidate
         self._schedule_winners = {}
+        self._backend_winners = {}
 
     def record_schedule(
         self,
@@ -224,11 +240,15 @@ class TuningCache:
         chunks: int,
         payload_bytes: int,
         seconds: float,
+        backend: str = "",
     ) -> None:
         """One (fused?, chunks) schedule variant sample — the generalized
-        form of :meth:`record_fusion` the chunk-aware tuner writes."""
+        form of :meth:`record_fusion` the chunk-aware tuner writes.
+        ``backend`` is the lowering backend the sample ran under ("" for
+        the mode default)."""
         self.record_fusion(
-            coll, sizes, optimized, payload_bytes, seconds, chunks=chunks
+            coll, sizes, optimized, payload_bytes, seconds, chunks=chunks,
+            backend=backend,
         )
 
     # -- merging -----------------------------------------------------------
@@ -270,10 +290,14 @@ class TuningCache:
                 best_split[key] = s
         self.split_measurements = [best_split[k] for k in sorted(best_split)]
         best_fusion: Dict[
-            Tuple[str, Tuple[int, ...], bool, int, int], FusionMeasurement
+            Tuple[str, Tuple[int, ...], bool, int, str, int],
+            FusionMeasurement,
         ] = {}
         for f in (*self.fusion_measurements, *other.fusion_measurements):
-            key = (f.coll, f.sizes, f.optimized, f.chunks, f.payload_bytes)
+            key = (
+                f.coll, f.sizes, f.optimized, f.chunks, f.backend,
+                f.payload_bytes,
+            )
             cur = best_fusion.get(key)
             if cur is None or f.seconds < cur.seconds:
                 best_fusion[key] = f
@@ -284,6 +308,7 @@ class TuningCache:
         self._split_winners = {}
         self._fusion_winners = {}
         self._schedule_winners = {}
+        self._backend_winners = {}
         self._fitted = None
         return self
 
@@ -328,12 +353,18 @@ class TuningCache:
 
         Ties break toward the optimized form (the pass pipeline never adds
         communication rounds), then toward fewer chunks (the simpler
-        schedule; C=1 is the exact legacy lowering)."""
+        schedule; C=1 is the exact legacy lowering). Only default-backend
+        rows compete here: the (optimized, chunks) winner keeps meaning
+        "fastest op-per-round schedule" regardless of what the fused-kernel
+        lowering measured — the backend choice is a separate reduction
+        (:attr:`backend_winners`)."""
         if not self._schedule_winners and self.fusion_measurements:
             best: Dict[
                 Tuple[str, Tuple[int, ...], int], Tuple[float, int, int]
             ] = {}
             for m in self.fusion_measurements:
+                if m.backend:
+                    continue
                 key = (m.coll, m.sizes, m.payload_bytes)
                 cand = (m.seconds, 0 if m.optimized else 1, m.chunks)
                 cur = best.get(key)
@@ -344,6 +375,60 @@ class TuningCache:
                 for k, (_, flag, chunks) in best.items()
             }
         return self._schedule_winners
+
+    @property
+    def backend_winners(
+        self,
+    ) -> Dict[Tuple[str, Tuple[int, ...], int], str]:
+        """(coll, sizes, payload) -> measured-fastest lowering backend.
+
+        All rows compete across backends; ties break toward "" (the mode
+        default — the op-per-round lowering is the reference semantics and
+        needs no capability check). Populated only when at least one
+        non-default row exists for the grid point, so a table tuned before
+        the registry never steers ``backend="auto"``."""
+        if not self._backend_winners and self.fusion_measurements:
+            pts_with_alt = {
+                (m.coll, m.sizes, m.payload_bytes)
+                for m in self.fusion_measurements
+                if m.backend
+            }
+            best: Dict[
+                Tuple[str, Tuple[int, ...], int], Tuple[float, int, str]
+            ] = {}
+            for m in self.fusion_measurements:
+                key = (m.coll, m.sizes, m.payload_bytes)
+                if key not in pts_with_alt:
+                    continue
+                cand = (m.seconds, 1 if m.backend else 0, m.backend)
+                cur = best.get(key)
+                if cur is None or cand < cur:
+                    best[key] = cand
+            self._backend_winners = {
+                k: name for k, (_, _, name) in best.items()
+            }
+        return self._backend_winners
+
+    def backend_winner(
+        self, coll: str, sizes: Sequence[int], payload_bytes: int
+    ) -> Optional[str]:
+        """Measured-fastest lowering backend for this exact mesh shape at
+        the nearest measured payload (log2 distance), or None when no
+        backend race was ever recorded for the shape —
+        ``choose_backend`` then keeps the mode default."""
+        sizes = tuple(int(s) for s in sizes)
+        best: Optional[Tuple[float, str]] = None
+        for (c, gs, gm), name in self.backend_winners.items():
+            if c != coll or gs != sizes:
+                continue
+            dist = abs(
+                math.log2(max(payload_bytes, 1)) - math.log2(max(gm, 1))
+            )
+            if best is None or dist < best[0]:
+                best = (dist, name)
+        if best is None or best[0] > 4 * _MAX_GRID_DISTANCE:
+            return None
+        return best[1]
 
     @property
     def fusion_winners(

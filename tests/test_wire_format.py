@@ -1,6 +1,7 @@
 """Descriptor wire-format compatibility tests: the 10-word legacy layout,
 the 15-word topology layout for every 1-3-axis split, the 16-word
-optimizer-flag layout, and malformed-length rejection. The wire words are
+schedule-flags layout (optimizer bit + lowering-backend id), the 17-word
+chunked layout, and malformed-length rejection. The wire words are
 the service's request format — every broker submission round-trips through
 them — so the layout is a compatibility contract, not an implementation
 detail."""
@@ -16,6 +17,7 @@ from repro.core.packet import (
     _LEGACY_WORDS,
     _OPT_WORDS,
     _TOPO_WORDS,
+    _WIRE_BACKENDS,
     MAX_AXES,
     MsgType,
     WireDType,
@@ -138,6 +140,84 @@ def test_malformed_length_rejected_with_clear_error(length):
     assert str(_LEGACY_WORDS) in msg and str(_TOPO_WORDS) in msg
     assert str(_OPT_WORDS) in msg and str(_CHUNK_WORDS) in msg
     assert f"got {length}" in msg
+
+
+def _planned_desc(**over):
+    fields = dict(
+        comm_size=8, coll_type=CollType.SCAN, algo_type="hillis_steele",
+        count=16, axes=(2, 4), split=(0, 1),
+    )
+    fields.update(over)
+    return CollectiveDescriptor(**fields)
+
+
+@pytest.mark.parametrize(
+    "length", [_LEGACY_WORDS, _TOPO_WORDS, _OPT_WORDS, _CHUNK_WORDS]
+)
+@pytest.mark.parametrize("optimized", [False, True])
+@pytest.mark.parametrize("chunks", [1, 4])
+def test_decode_all_lengths_x_flags_x_chunking(length, optimized, chunks):
+    """Every accepted word count decodes against every optimizer-flag and
+    chunk-count combination of the source descriptor, keeping exactly the
+    fields its layout can carry: 10 words strip the topology (and with it
+    every schedule flag), 15 strip the flags word, 16 strip the chunk
+    count, 17 carry everything."""
+    desc = _planned_desc(optimized=optimized, chunks=chunks)
+    words = desc.encode()
+    assert words.shape == ((_CHUNK_WORDS if chunks > 1 else _OPT_WORDS),)
+    if length > len(words):  # 17-word slice of an unchunked encoding
+        pytest.skip("encoding has no chunk word to slice")
+    back = CollectiveDescriptor.decode(words[:length])
+    if length == _LEGACY_WORDS:
+        assert back.axes == () and back.split == ()
+        assert back.optimized is False and back.chunks == 1
+        assert back.backend == ""
+    else:
+        assert back.axes == desc.axes and back.split == desc.split
+        assert back.optimized is (optimized and length >= _OPT_WORDS)
+        assert back.chunks == (chunks if length == _CHUNK_WORDS else 1)
+    # the shared prefix is what the shorter layouts decoded — re-encoding
+    # the truncated decode reproduces those bytes
+    np.testing.assert_array_equal(back.encode()[:length], words[:length])
+
+
+@pytest.mark.parametrize("backend", sorted(_WIRE_BACKENDS))
+@pytest.mark.parametrize("optimized", [False, True])
+@pytest.mark.parametrize("chunks", [1, 2])
+def test_backend_round_trips_in_flags_word(backend, optimized, chunks):
+    desc = _planned_desc(
+        backend=backend, optimized=optimized, chunks=chunks
+    )
+    words = desc.encode()
+    assert words[_OPT_WORDS - 1] == (
+        int(optimized) | (_WIRE_BACKENDS.index(backend) << 1)
+    )
+    back = CollectiveDescriptor.decode(words)
+    assert back == desc
+    assert back.backend == backend
+    # the default backend changes no bytes vs. the pre-registry encoding
+    if backend == "":
+        np.testing.assert_array_equal(
+            words,
+            _planned_desc(optimized=optimized, chunks=chunks).encode(),
+        )
+
+
+def test_backend_requires_topology():
+    with pytest.raises(ValueError, match="multi-axis"):
+        CollectiveDescriptor(comm_size=8, count=16, backend="pallas")
+
+
+def test_unknown_backend_name_rejected():
+    with pytest.raises(ValueError, match="not wire-encodable"):
+        _planned_desc(backend="netfpga")
+
+
+def test_unknown_backend_wire_id_rejected():
+    words = _planned_desc().encode().copy()
+    words[_OPT_WORDS - 1] = len(_WIRE_BACKENDS) << 1
+    with pytest.raises(ValueError, match="unknown lowering-backend"):
+        CollectiveDescriptor.decode(words)
 
 
 def test_topology_words_internally_consistent_on_decode():
