@@ -18,6 +18,11 @@ then runs this check on the (baseline, fresh) pairs. Three failure modes:
      ``--max-drift`` (default 2.0x) over the baseline. Timing in CI is
      noisy, so the bar is deliberately loose: 2x is a real regression,
      not jitter. Improvements never fail.
+  4. **Observability overhead** — ``BENCH_obs.json`` (``--baseline-obs``
+     / ``--obs``, from ``benchmarks.obs_overhead``) must keep the
+     flight-recorder dispatch overhead — both the measured A/B delta and
+     the derived per-event fraction — at or under ``--max-obs-overhead``
+     (default 2%). "Always-on" telemetry earns that adjective here.
 
 Missing, non-JSON, or truncated reports (a row dropped mid-object, a
 section replaced by the wrong type) fail the gate with a message naming
@@ -259,12 +264,68 @@ def check_service(
         )
 
 
+def check_obs(
+    base: Dict,
+    new: Dict,
+    max_overhead: float,
+    *,
+    base_name: str = "baseline obs",
+    new_name: str = "fresh obs",
+) -> None:
+    """Flight-recorder overhead gate (see ``benchmarks.obs_overhead``).
+
+    Both overhead figures must stay at or under ``max_overhead``: the
+    measured A/B delta (best-of-trials — catches systemic slowdowns) and
+    the derived analytic fraction (per-event cost x event rate — catches
+    a ``record()`` regression regardless of wall-clock noise). A section
+    present in the baseline but gone from the fresh report fails, same
+    as a lost benchmark grid row.
+    """
+    for section in ("dispatch", "record"):
+        if section in base and section not in new:
+            _fail(f"obs report lost its {section!r} section ({new_name})")
+    d = new.get("dispatch")
+    if not isinstance(d, dict):
+        if "dispatch" not in base:
+            _fail(f"obs report {new_name} has no dispatch section")
+        return
+    measured = float(d.get("overhead_frac", 0.0))
+    derived = float(d.get("derived_frac", 0.0))
+    ok = True
+    if measured > max_overhead:
+        ok = False
+        _fail(
+            f"flight-recorder dispatch overhead {measured:.4f} exceeds "
+            f"{max_overhead} (recorder-on vs recorder-off)"
+        )
+    if derived > max_overhead:
+        ok = False
+        _fail(
+            f"flight-recorder derived overhead {derived:.4f} exceeds "
+            f"{max_overhead} (per-event cost x event rate)"
+        )
+    rec = new.get("record") or {}
+    print(
+        f"regression_check,obs,dispatch,"
+        f"overhead_frac,{measured:.4f},derived_frac,{derived:.4f},"
+        f"record_ns,{float(rec.get('per_call_ns', 0.0)):.0f},"
+        f"max,{max_overhead},ok,{int(ok)}"
+    )
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline-fusion", help="committed BENCH_fusion.json")
     ap.add_argument("--fusion", help="freshly written BENCH_fusion.json")
     ap.add_argument("--baseline-service", help="committed BENCH_service.json")
     ap.add_argument("--service", help="freshly written BENCH_service.json")
+    ap.add_argument("--baseline-obs", help="committed BENCH_obs.json")
+    ap.add_argument("--obs", help="freshly written BENCH_obs.json")
+    ap.add_argument(
+        "--max-obs-overhead", type=float, default=0.02,
+        help="fail when flight-recorder overhead exceeds this fraction "
+        "(default 0.02)",
+    )
     ap.add_argument(
         "--max-drift", type=float, default=2.0,
         help="fail when a latency grows past this factor (default 2.0)",
@@ -274,8 +335,12 @@ def main(argv: Optional[List[str]] = None) -> int:
         help="fail when the fresh fusion report lacks a per_round section",
     )
     args = ap.parse_args(argv)
-    if not args.baseline_fusion and not args.baseline_service:
-        ap.error("nothing to check; pass --baseline-fusion/--baseline-service")
+    if not (args.baseline_fusion or args.baseline_service
+            or args.baseline_obs):
+        ap.error(
+            "nothing to check; pass --baseline-fusion/--baseline-service/"
+            "--baseline-obs"
+        )
     if args.baseline_fusion:
         base = _load(args.baseline_fusion)
         new_path = args.fusion or args.baseline_fusion
@@ -294,6 +359,15 @@ def main(argv: Optional[List[str]] = None) -> int:
             check_service(
                 base, new, args.max_drift,
                 base_name=args.baseline_service, new_name=new_path,
+            )
+    if args.baseline_obs:
+        base = _load(args.baseline_obs)
+        new_path = args.obs or args.baseline_obs
+        new = _load(new_path)
+        if base is not None and new is not None:
+            check_obs(
+                base, new, args.max_obs_overhead,
+                base_name=args.baseline_obs, new_name=new_path,
             )
     print(
         f"check_regression_summary,ok,{int(not _FAILED)},"

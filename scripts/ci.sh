@@ -31,12 +31,20 @@
 # The observability check (repro.testing.obs_check) proves the tracing
 # layer: a traced 2x2 dispatch is bitwise-identical to the untraced one
 # and yields >= 1 phase span plus the declared round spans per comm phase,
-# with host+device trace merge and Prometheus rendering. Finally,
+# with host+device trace merge and Prometheus rendering.
+# The health check (repro.testing.health_check) proves the health stack on
+# a 2x2 mesh: a synthetic 10ms delay planted on one link is attributed to
+# exactly that (axis, src, dst) by the per-link straggler detector, a
+# deadline-miss SLO burn-rate alert fires, every probed/driver dispatch
+# stays bitwise-identical to the sim baseline, and the flight-recorder
+# dump is valid JSON. benchmarks.obs_overhead then measures the
+# flight-recorder cost on the smoke dispatch path. Finally,
 # benchmarks.check_regression diffs the freshly-written BENCH artifacts
 # against the committed baselines (snapshotted BEFORE the smoke run
-# overwrites them): lost grid rows, lost bitwise/coalesce proofs, or > 2x
-# latency drift fail CI. Regressions in the offload/planner/service
-# subsystems fail CI even when no unit test covers them yet.
+# overwrites them): lost grid rows, lost bitwise/coalesce proofs, > 2x
+# latency drift, or flight-recorder overhead past 2% fail CI. Regressions
+# in the offload/planner/service subsystems fail CI even when no unit
+# test covers them yet.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -54,6 +62,7 @@ BASE_DIR="$(mktemp -d -t repro_bench_base.XXXXXX)"
 trap 'rm -f "$SMOKE_OUT"; rm -rf "$BASE_DIR"' EXIT
 cp benchmarks/BENCH_fusion.json "$BASE_DIR/BENCH_fusion.json"
 cp benchmarks/BENCH_service.json "$BASE_DIR/BENCH_service.json"
+cp benchmarks/BENCH_obs.json "$BASE_DIR/BENCH_obs.json"
 python -m benchmarks.run --smoke --report-json | tee "$SMOKE_OUT"
 grep -q "^planned_smoke_summary," "$SMOKE_OUT" \
   || { echo "CI FAIL: planned 3D smoke section missing"; exit 1; }
@@ -99,14 +108,30 @@ grep -q "^ALL-OK$" "$OBS_OUT" \
   || { echo "CI FAIL: observability check did not pass"; exit 1; }
 
 echo
+echo "=== health check (link attribution + SLO alerting, 2x2 mesh) ==="
+HLT_OUT="$(mktemp -t repro_health.XXXXXX.log)"
+trap 'rm -f "$SMOKE_OUT" "$SVC_OUT" "$PAL_OUT" "$OBS_OUT" "$HLT_OUT"; rm -rf "$BASE_DIR"' EXIT
+python -m repro.testing.health_check 2 2 | tee "$HLT_OUT"
+grep -q "^health_check_summary,bitwise_equal,1,.*attribution_ok,1,slo_alert,1,dump_valid,1," "$HLT_OUT" \
+  || { echo "CI FAIL: health check lost bitwise equality, link attribution, SLO alerting, or the flight-recorder dump"; exit 1; }
+grep -q "^ALL-OK$" "$HLT_OUT" \
+  || { echo "CI FAIL: health check did not pass"; exit 1; }
+
+echo
+echo "=== flight-recorder overhead benchmark ==="
+python -m benchmarks.obs_overhead
+
+echo
 echo "=== benchmark regression gate (fresh BENCH vs committed baseline) ==="
 REG_OUT="$(mktemp -t repro_reg.XXXXXX.log)"
-trap 'rm -f "$SMOKE_OUT" "$SVC_OUT" "$PAL_OUT" "$OBS_OUT" "$REG_OUT"; rm -rf "$BASE_DIR"' EXIT
+trap 'rm -f "$SMOKE_OUT" "$SVC_OUT" "$PAL_OUT" "$OBS_OUT" "$HLT_OUT" "$REG_OUT"; rm -rf "$BASE_DIR"' EXIT
 python -m benchmarks.check_regression \
   --baseline-fusion "$BASE_DIR/BENCH_fusion.json" \
   --fusion benchmarks/BENCH_fusion.json \
   --baseline-service "$BASE_DIR/BENCH_service.json" \
   --service benchmarks/BENCH_service.json \
+  --baseline-obs "$BASE_DIR/BENCH_obs.json" \
+  --obs benchmarks/BENCH_obs.json \
   --require-per-round | tee "$REG_OUT"
 grep -q "^ALL-OK$" "$REG_OUT" \
   || { echo "CI FAIL: benchmark regression gate did not pass"; exit 1; }

@@ -35,6 +35,12 @@ Every launcher that issues collective descriptors goes through here:
     traced+profiled smoke dispatch and writes the merged host+device
     Perfetto trace — the quickest way to *see* where a round's time goes
     (open the file at https://ui.perfetto.dev).
+  * Operations: ``--dashboard`` runs a smoke dispatch through
+    engine+broker+health monitor and prints the text dashboard
+    (:mod:`repro.obs.dashboard`); ``--serve PORT`` exposes ``/healthz``,
+    ``/metrics``, ``/events`` over HTTP; ``--flight-record OUT.json``
+    dumps the always-on flight recorder (:mod:`repro.obs.events`) at run
+    end and arms the crash/recovery auto-dump.
 """
 
 from __future__ import annotations
@@ -45,6 +51,7 @@ import weakref
 from pathlib import Path
 from typing import List, Optional, Tuple
 
+from repro.obs import events as obs_events
 from repro.offload import (
     TUNING_TABLE_ENV,
     OffloadEngine,
@@ -98,11 +105,15 @@ def _on_remesh(old_axes, new_axes):
     if not alive:
         fault.unregister_remesh_listener(_on_remesh)
         return
+    budget_s = max(b for _, b in alive)
+    obs_events.record(
+        "retune", axes=tuple(int(a) for a in new_axes), budget_s=budget_s
+    )
     cache = autotune(
         ps=_remesh_ps(tuple(new_axes)),
         payloads=(1024, 65536),
         iters=2,
-        time_budget_s=max(b for _, b in alive),
+        time_budget_s=budget_s,
     )
     cache.activate()
 
@@ -317,9 +328,69 @@ def write_traced_smoke_trace(
     return path
 
 
+def run_dashboard_smoke(
+    *, axes: Tuple[int, ...] = (2, 4), payload_floats: int = 256
+) -> None:
+    """Drive a few dispatches through an engine + broker + health monitor
+    and print the text dashboard — the ``--dashboard`` entry point."""
+    import jax.numpy as jnp
+
+    from repro.obs import dashboard as obs_dashboard
+    from repro.obs import health as obs_health
+    from repro.service import DescriptorBroker
+
+    engine = build_offload_engine(retune_on_remesh=False)
+    broker = DescriptorBroker(engine).start()
+    monitor = obs_health.HealthMonitor()
+    p = 1
+    for a in axes:
+        p *= int(a)
+    x = jnp.arange(p * payload_floats, dtype=jnp.float32).reshape(
+        p, payload_floats
+    )
+    try:
+        client = broker.client("dashboard")
+        desc = engine.make_descriptor(
+            "scan", axes=tuple(axes), payload_bytes=payload_floats * 4,
+            op="sum",
+        )
+        for _ in range(4):
+            client.submit(desc, x).result(timeout=60.0)
+    finally:
+        broker.stop()
+    monitor.ingest(service=broker.telemetry, engine=engine.telemetry)
+    monitor.evaluate()
+    print(
+        obs_dashboard.render_dashboard(
+            engine=engine, broker=broker, monitor=monitor
+        )
+    )
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--tune", action="store_true", help="run the autotuner")
+    ap.add_argument(
+        "--dashboard",
+        action="store_true",
+        help="run a smoke dispatch through engine+broker+health monitor "
+        "and print the text dashboard",
+    )
+    ap.add_argument(
+        "--serve",
+        metavar="PORT",
+        type=int,
+        default=None,
+        help="after other actions, serve /healthz, /metrics, /events and "
+        "the dashboard over HTTP on PORT until interrupted",
+    )
+    ap.add_argument(
+        "--flight-record",
+        metavar="OUT.json",
+        default=None,
+        help="dump the flight recorder's event ring to OUT.json when the "
+        "run ends (and automatically on crash/recovery paths)",
+    )
     ap.add_argument(
         "--trace",
         metavar="OUT.json",
@@ -372,13 +443,49 @@ def main() -> None:
         "(keyed by backend fingerprint) so other workers inherit it",
     )
     args = ap.parse_args()
+    if not (
+        args.tune or args.trace or args.dashboard or args.serve is not None
+    ):
+        ap.error(
+            "nothing to do; pass --tune, --trace, --dashboard, or --serve"
+        )
+    if args.chunks and not args.fusion:
+        ap.error("--chunks widens the --fusion grid; pass --fusion too")
+    if args.backend and not args.fusion:
+        ap.error("--backend races the --fusion grid; pass --fusion too")
+    if args.flight_record:
+        # also arms the crash/recovery auto-dump for the rest of the run
+        obs_events.set_auto_dump_path(args.flight_record)
     if args.trace:
         axes = tuple(int(a) for a in args.trace_axes.split(","))
         write_traced_smoke_trace(args.trace, axes=axes)
-        if not args.tune:
-            return
-    if not args.tune:
-        ap.error("nothing to do; pass --tune or --trace")
+    if args.dashboard:
+        run_dashboard_smoke()
+    if args.tune:
+        _run_tune(args)
+    if args.serve is not None:
+        from repro.obs import dashboard as obs_dashboard
+
+        server = obs_dashboard.start_http_server(port=args.serve)
+        print(
+            f"serving /healthz /metrics /events and the dashboard at "
+            f"{server.url} (Ctrl-C to stop)"
+        )
+        try:
+            server.thread.join()
+        except KeyboardInterrupt:
+            server.close()
+    if args.flight_record:
+        snap = obs_events.get_recorder().dump(
+            args.flight_record, reason="run_end"
+        )
+        print(
+            f"flight recorder: {len(snap['events'])} events "
+            f"({snap['recorded']} recorded) -> {args.flight_record}"
+        )
+
+
+def _run_tune(args) -> None:
     cache = autotune(
         iters=args.iters, time_budget_s=args.budget_s, verbose=True
     )
@@ -389,10 +496,6 @@ def main() -> None:
             cache=cache,
             verbose=True,
         )
-    if args.chunks and not args.fusion:
-        ap.error("--chunks widens the --fusion grid; pass --fusion too")
-    if args.backend and not args.fusion:
-        ap.error("--backend races the --fusion grid; pass --fusion too")
     if args.fusion:
         from repro.offload import tune_schedule
 

@@ -12,8 +12,27 @@ Three pieces, one subsystem:
 * :mod:`repro.obs.metrics` — counter/gauge/histogram registry with
   Prometheus text exposition; engine/service telemetry publish here in
   addition to their existing snapshot dicts.
+
+Plus the operational layer on top:
+
+* :mod:`repro.obs.events` — the always-on bounded flight recorder of
+  structured events (dispatch, cache miss, deadline miss, remesh, ...),
+  dumpable to JSON on demand and automatically on crash/recovery.
+* :mod:`repro.obs.health` — declarative SLOs with multi-window
+  burn-rate alerting, and per-link straggler attribution over the
+  round-span tracer's link probes.
+* :mod:`repro.obs.dashboard` — text dashboard + stdlib HTTP endpoint
+  (``/healthz``, ``/metrics``, ``/events``).
 """
 
+from repro.obs.dashboard import render_dashboard, start_http_server
+from repro.obs.events import (
+    FlightRecorder,
+    auto_dump,
+    get_recorder,
+    record,
+    set_recorder,
+)
 from repro.obs.export import (
     chrome_to_spans,
     load_chrome_trace,
@@ -32,6 +51,14 @@ from repro.obs.metrics import (
     round_bucket,
     set_registry,
 )
+from repro.obs.health import (
+    SLO,
+    HealthMonitor,
+    LinkDelayInjector,
+    LinkProbeBackend,
+    LinkStragglerDetector,
+    default_slos,
+)
 # NB: the submodules are the package attributes ``tracing`` / ``metrics`` /
 # ``export``; the tracing() context manager is deliberately NOT re-exported
 # here (it would shadow the submodule) — use ``repro.obs.tracing.tracing``.
@@ -48,25 +75,38 @@ from repro.obs.tracing import (
 
 __all__ = [
     "Counter",
+    "FlightRecorder",
     "Gauge",
+    "HealthMonitor",
     "Histogram",
+    "LinkDelayInjector",
+    "LinkProbeBackend",
+    "LinkStragglerDetector",
     "MetricsRegistry",
     "NoopTracer",
+    "SLO",
     "Span",
     "Tracer",
     "TracingBackend",
+    "auto_dump",
     "chrome_to_spans",
+    "default_slos",
+    "get_recorder",
     "get_registry",
     "get_tracer",
     "install_tracer",
     "load_chrome_trace",
     "merge_device_trace",
     "now_us",
+    "record",
+    "render_dashboard",
     "render_prometheus",
     "reset_registry",
     "round_bucket",
+    "set_recorder",
     "set_registry",
     "set_tracer",
     "spans_to_chrome",
+    "start_http_server",
     "write_trace",
 ]

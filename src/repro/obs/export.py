@@ -170,11 +170,44 @@ def merge_device_trace(
     Returns a new trace dict; inputs are not mutated. Device events keep
     their names, move to ``pid`` :data:`DEVICE_PID`, and gain
     ``args.source = "jax.profiler"``.
+
+    A missing or unparseable device trace **degrades, never raises**: the
+    profiler writing a truncated trace must not take down the tooling that
+    wanted to decorate a perfectly good host trace. The merged result is
+    then the host trace with ``deviceEventsMerged == 0`` and the reason in
+    ``deviceMergeError`` (also recorded as a ``profiler_fallback`` flight
+    event).
     """
+    from repro.obs import events as obs_events
     from repro.offload.profiling import _DEVICE_EVENT_RE
 
+    def degrade(reason: str, kind: str) -> Dict[str, Any]:
+        obs_events.record("profiler_fallback", reason=kind)
+        out = {
+            **host_trace,
+            "traceEvents": [
+                dict(ev) for ev in host_trace.get("traceEvents", [])
+            ],
+        }
+        out["deviceEventsMerged"] = 0
+        out["deviceClockAligned"] = False
+        out["deviceMergeError"] = reason
+        return out
+
     if not isinstance(device_trace, dict):
-        device_trace = load_chrome_trace(device_trace)
+        try:
+            device_trace = load_chrome_trace(device_trace)
+        except (OSError, ValueError) as e:
+            return degrade(
+                f"device trace unreadable: {e}", "merge_unreadable_trace"
+            )
+    if not isinstance(device_trace, dict):
+        # a JSON file that parsed to a list/scalar — same degrade path
+        return degrade(
+            f"device trace malformed: expected an object, got "
+            f"{type(device_trace).__name__}",
+            "merge_malformed_trace",
+        )
 
     host_events = [dict(e) for e in host_trace.get("traceEvents", [])]
     merged = {**host_trace, "traceEvents": host_events}

@@ -13,7 +13,9 @@ explicit parent links covering the full request lifecycle:
           ->  plan.round:<i>             (one per communication round)
 
 Span categories (``cat``): ``service``, ``broker``, ``engine``, ``phase``,
-``round``. Timestamps are ``time.perf_counter()`` microseconds, one
+``round``, and — in link-probe mode (``Tracer(link_probe=True)``, see
+:mod:`repro.obs.health`) — ``link``, one span per (src, dst) message of a
+round. Timestamps are ``time.perf_counter()`` microseconds, one
 monotonic clock for the whole process, so spans from every thread land on
 one timeline; :mod:`repro.obs.export` serializes them to Chrome/Perfetto
 trace JSON and can merge the device-side events a ``jax.profiler`` trace
@@ -155,13 +157,29 @@ class Tracer:
 
     enabled = True
 
-    def __init__(self, *, max_spans: int = 200_000):
+    def __init__(
+        self,
+        *,
+        max_spans: int = 200_000,
+        link_probe: bool = False,
+        link_injector: Optional[Any] = None,
+        link_detector: Optional[Any] = None,
+    ):
         self._lock = threading.Lock()
         self._spans: List[Span] = []
         self._ids = itertools.count(1)
         self._tls = threading.local()
         self.max_spans = int(max_spans)
         self.dropped = 0
+        # Link-probe mode (see repro.obs.health.LinkProbeBackend): when
+        # set, the traced sim interpreter decomposes each round's permute
+        # into per-(src, dst) messages and emits one "link"-category child
+        # span per message — the data source for per-link straggler
+        # attribution. Off by default: probing costs one dispatch per
+        # message instead of one per round.
+        self.link_probe = bool(link_probe)
+        self.link_injector = link_injector
+        self.link_detector = link_detector
 
     # -- recording ---------------------------------------------------------
 

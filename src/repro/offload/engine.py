@@ -75,6 +75,7 @@ from repro.core.reduce_ops import (
 )
 from repro.core.scan_collective import dist_exscan, dist_scan, sim_scan
 from repro.core.selector import select_algorithm
+from repro.obs import events as obs_events
 from repro.obs import metrics as obs_metrics
 from repro.obs import tracing as obs_tracing
 from repro.offload import planner
@@ -226,6 +227,7 @@ class EngineTelemetry:
             "profile_offload runs that fell back to wall-clock timing",
             labelnames=("coll", "reason"),
         ).inc(coll=coll, reason=reason)
+        obs_events.record("profiler_fallback", coll=coll, reason=reason)
 
     def record_backend_fallback(self, coll: str, reason: str) -> None:
         """A descriptor named a lowering backend whose capability check
@@ -241,6 +243,7 @@ class EngineTelemetry:
             "lowering-backend requests that fell back to the default",
             labelnames=("coll", "reason"),
         ).inc(coll=coll, reason=reason)
+        obs_events.record("backend_fallback", coll=coll, reason=reason)
 
     @property
     def hit_rate(self) -> float:
@@ -729,6 +732,7 @@ class OffloadEngine:
             self.telemetry.misses += 1
             self.telemetry.compiles += 1
             self.telemetry.cache_size = len(self._cache)
+            cache_state = "miss"
             if span is not None:
                 span.set(cache="miss")
             obs_metrics.get_registry().counter(
@@ -736,8 +740,12 @@ class OffloadEngine:
                 "compiled-schedule cache lookups",
                 labelnames=("event",),
             ).inc(event="miss")
+            obs_events.record(
+                "cache_miss", coll=sched.coll, scope="schedule"
+            )
         else:
             self.telemetry.hits += 1
+            cache_state = "hit"
             if span is not None:
                 span.set(cache="hit")
             obs_metrics.get_registry().counter(
@@ -762,6 +770,12 @@ class OffloadEngine:
             out = sched.fn(x)
             latency = None  # inside a trace: the profiler owns timing
         self.telemetry.record_dispatch(sched.coll, latency)
+        obs_events.record(
+            "dispatch",
+            coll=sched.coll,
+            cache=cache_state,
+            latency_us=None if latency is None else round(latency * 1e6, 1),
+        )
         return out
 
     def profile_offload(

@@ -975,6 +975,20 @@ def lower_sim(
             p_axis = logical[ph.level]
             backend = alg.SimBackend(p_axis)
             if tracer is not None:
+                if getattr(tracer, "link_probe", False):
+                    # per-link attribution: decompose each round's permute
+                    # into individually-timed (src, dst) messages (exact
+                    # merge — see LinkProbeBackend), child spans of the
+                    # round span TracingBackend opens around the call
+                    from repro.obs import health as obs_health
+
+                    backend = obs_health.LinkProbeBackend(
+                        backend,
+                        tracer,
+                        level=ph.level,
+                        injector=getattr(tracer, "link_injector", None),
+                        detector=getattr(tracer, "link_detector", None),
+                    )
                 backend = obs_tracing.TracingBackend(
                     backend,
                     tracer,

@@ -28,6 +28,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, List, Optional, Tuple
 
+from repro.obs import events as obs_events
+
 RemeshListener = Callable[[Tuple[int, ...], Tuple[int, ...]], None]
 
 _REMESH_LISTENERS: List[RemeshListener] = []
@@ -54,7 +56,16 @@ def notify_remesh(
     old_axes: Tuple[int, ...], new_axes: Tuple[int, ...]
 ) -> None:
     """Fire every registered listener; a failing listener is recorded in
-    ``remesh_listener_errors`` and never interrupts recovery."""
+    ``remesh_listener_errors`` and never interrupts recovery.
+
+    The event lands in the flight recorder, and — since a re-mesh means a
+    recovery is in progress — the recorder auto-dumps its ring to
+    ``$REPRO_FLIGHT_RECORD`` (if set) *before* listeners run, so even a
+    listener wedging the process leaves a post-mortem on disk."""
+    obs_events.record(
+        "remesh", old_axes=tuple(old_axes), new_axes=tuple(new_axes)
+    )
+    obs_events.auto_dump("remesh")
     for fn in list(_REMESH_LISTENERS):
         try:
             fn(old_axes, new_axes)

@@ -177,6 +177,10 @@ class Trainer:
         the engine's cleared cache repopulates from the rebuilt step's own
         descriptors on the next step.
         """
+        from repro.obs import events as obs_events
+
+        obs_events.record("recovery", error=str(err)[:200])
+        obs_events.auto_dump("recovery")
         mesh = self.topo.mesh
         if mesh is None:
             self.remesh_events.append({"err": str(err), "action": "none"})

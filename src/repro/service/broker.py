@@ -60,6 +60,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.packet import CollType, CollectiveDescriptor
+from repro.obs import events as obs_events
 from repro.obs import tracing as obs_tracing
 from repro.offload.engine import AxisSpec, OffloadEngine
 from repro.service.telemetry import ServiceTelemetry
@@ -489,6 +490,7 @@ class DescriptorBroker:
     ) -> None:
         desc = reqs[0].desc
         barrier = desc.coll_type == CollType.BARRIER
+        start_t = time.monotonic()
         tracer = obs_tracing.get_tracer()
         if tracer.enabled:
             # queue_wait runs from each request's enqueue to this dispatch:
@@ -552,6 +554,13 @@ class DescriptorBroker:
             group_cm.__exit__(None, None, None)
         done_t = time.monotonic()
         self.telemetry.record_flush(len(reqs), 1, deadline=deadline)
+        obs_events.record(
+            "flush",
+            coll=desc.coll_type.name.lower(),
+            requests=len(reqs),
+            deadline=deadline,
+            error=err is not None,
+        )
         with self._cond:
             for req in reqs:
                 n = self._inflight.get(req.tenant, 0) - 1
@@ -564,6 +573,19 @@ class DescriptorBroker:
             missed = (
                 req.deadline_at is not None and done_t > req.deadline_at
             )
+            if missed:
+                # the post-hoc diagnosis record: was the miss queue time
+                # (waited too long for a flush) or dispatch time (the
+                # group itself was slow)?
+                obs_events.record(
+                    "deadline_miss",
+                    tenant=req.tenant,
+                    coll=desc.coll_type.name.lower(),
+                    group=len(reqs),
+                    queue_wait_s=round(start_t - req.submit_t, 6),
+                    dispatch_s=round(done_t - start_t, 6),
+                    overrun_s=round(done_t - req.deadline_at, 6),
+                )
             self.telemetry.record_complete(
                 req.tenant,
                 done_t - req.submit_t,

@@ -98,6 +98,18 @@ class LatencyHistogram:
                     return self.max_us
             return self.max_us
 
+    def count_at_or_below(self, threshold_us: float) -> int:
+        """Samples that landed in buckets whose upper edge is within
+        ``threshold_us`` — the "good event" count for a latency SLO.
+        Bucket-resolution: a threshold between edges counts only the
+        buckets entirely under it (conservative; never overcounts)."""
+        with self._lock:
+            n = 0
+            for i, edge in enumerate(LATENCY_BUCKETS_US):
+                if edge <= threshold_us:
+                    n += self.counts[i]
+            return n
+
     def snapshot(self) -> Dict[str, float]:
         return {
             "count": self.count,
@@ -206,6 +218,12 @@ class ServiceTelemetry:
         self._requests_counter().inc(
             tenant=tenant, outcome="error" if error else "completed"
         )
+        if deadline_missed:
+            obs_metrics.get_registry().counter(
+                "repro_service_deadline_misses_total",
+                "requests completing after their deadline, by tenant",
+                labelnames=("tenant",),
+            ).inc(tenant=tenant)
         if not error:
             obs_metrics.get_registry().histogram(
                 "repro_service_request_latency_us",

@@ -1,0 +1,446 @@
+"""Health-stack tests: flight-recorder ring semantics and crash dumps,
+multi-window burn-rate SLO alerting (injected clock), telemetry-snapshot
+ingestion with counter-reset re-basing, per-link straggler attribution
+(peer-relative flagging, report rising edges, span ingestion), the text
+dashboard + HTTP endpoints, broker deadline-miss flight events, the
+bounded step-straggler ring, and the health_check CI module."""
+
+import json
+import threading
+import urllib.request
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.obs import dashboard as obs_dashboard
+from repro.obs import events as obs_events
+from repro.obs import health as obs_health
+from repro.obs import metrics as obs_metrics
+from repro.obs import tracing as obs_tracing
+from repro.offload import OffloadEngine
+from repro.runtime.straggler import StragglerDetector
+from repro.service import DescriptorBroker
+
+AXES = (2, 4)
+P = 8
+N = 16
+
+
+@pytest.fixture(autouse=True)
+def _clean_obs():
+    obs_events.set_recorder(None)
+    obs_events.set_auto_dump_path(None)
+    obs_metrics.reset_registry()
+    obs_tracing.set_tracer(None)
+    yield
+    obs_events.set_recorder(None)
+    obs_events.set_auto_dump_path(None)
+    obs_metrics.reset_registry()
+    obs_tracing.set_tracer(None)
+
+
+def _x(seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(-5, 6, size=(P, N)).astype(np.float32))
+
+
+# ------------------------------------------------------- flight recorder
+
+
+def test_recorder_ring_bounds_and_counts():
+    rec = obs_events.FlightRecorder(capacity=8)
+    for i in range(20):
+        rec.record("dispatch", i=i)
+    assert len(rec) == 8
+    events = rec.events()
+    # ring keeps the newest events, seq keeps counting past eviction
+    assert [e["i"] for e in events] == list(range(12, 20))
+    assert events[-1]["seq"] == 20
+    assert rec.counts() == {"dispatch": 20}
+    snap = rec.snapshot("test")
+    assert snap["recorded"] == 20 and snap["evicted"] == 12
+    assert snap["capacity"] == 8
+
+
+def test_recorder_filter_and_limit():
+    rec = obs_events.FlightRecorder()
+    rec.record("dispatch", coll="SCAN")
+    rec.record("cache_miss", coll="SCAN")
+    rec.record("dispatch", coll="EXSCAN")
+    assert [e["coll"] for e in rec.events(kind="dispatch")] == [
+        "SCAN", "EXSCAN"
+    ]
+    assert [e["kind"] for e in rec.events(limit=1)] == ["dispatch"]
+    rec.clear()
+    assert len(rec) == 0 and rec.counts() == {}
+
+
+def test_recorder_dump_writes_valid_json(tmp_path):
+    rec = obs_events.FlightRecorder()
+    rec.record("remesh", old_axes=(2, 4), new_axes=(2, 2))
+    out = tmp_path / "sub" / "flight.json"  # parent dir must be created
+    rec.dump(out, reason="unit")
+    data = json.loads(out.read_text())
+    assert data["reason"] == "unit"
+    assert data["events"][0]["kind"] == "remesh"
+    # the successful dump itself is recorded
+    assert rec.counts().get("dump") == 1
+
+
+def test_recorder_dump_failure_never_raises(tmp_path):
+    rec = obs_events.FlightRecorder()
+    rec.record("recovery", error="boom")
+    target = tmp_path / "file"
+    target.write_text("")  # a *file* where a directory is needed
+    snap = rec.dump(target / "flight.json", reason="crash")
+    assert snap["events"][0]["kind"] == "recovery"
+    dumps = rec.events(kind="dump")
+    assert dumps and "error" in dumps[0]
+
+
+def test_auto_dump_path_and_trigger(tmp_path):
+    assert obs_events.auto_dump("noop") is None  # unconfigured: no-op
+    target = tmp_path / "auto.json"
+    obs_events.set_auto_dump_path(target)
+    obs_events.record("recovery", error="x")
+    assert obs_events.auto_dump("recovery") == target
+    assert json.loads(target.read_text())["reason"] == "recovery"
+
+
+def test_set_recorder_swaps_global():
+    mine = obs_events.FlightRecorder()
+    prev = obs_events.set_recorder(mine)
+    try:
+        obs_events.record("flush", requests=3)
+        assert mine.counts() == {"flush": 1}
+    finally:
+        obs_events.set_recorder(prev)
+    assert obs_events.get_recorder() is prev
+
+
+# ------------------------------------------------------------------ SLOs
+
+
+def test_slo_validation():
+    with pytest.raises(ValueError):
+        obs_health.SLO("bad", objective=1.0)
+    with pytest.raises(ValueError):
+        obs_health.SLO("bad", fast_window_s=600.0, slow_window_s=60.0)
+    assert obs_health.SLO("ok", objective=0.99).error_budget == pytest.approx(
+        0.01
+    )
+
+
+def _clocked_monitor(slo, **kw):
+    now = {"t": 1000.0}
+    mon = obs_health.HealthMonitor((slo,), clock=lambda: now["t"], **kw)
+    return mon, now
+
+
+def test_burn_rate_alert_needs_both_windows():
+    """Errors only inside the fast window must not alert: the slow window
+    is the page-on-a-single-bad-flush guard."""
+    slo = obs_health.SLO(
+        "deadline_miss", objective=0.99,
+        fast_window_s=10.0, slow_window_s=100.0, min_events=1,
+    )
+    mon, now = _clocked_monitor(slo)
+    # long healthy history, then a recent burst of misses
+    for i in range(90):
+        mon.observe("deadline_miss", key="t0", good=10.0, t=910.0 + i)
+    mon.observe("deadline_miss", key="t0", bad=5.0, t=999.0)
+    # fast window (990-1000): 5 bad / 15 -> burn 33; slow window: 5/905
+    # -> burn 0.55 < 1 -> no alert
+    assert mon.evaluate() == []
+    # keep burning: push the slow window over budget too
+    for i in range(10):
+        mon.observe("deadline_miss", key="t0", bad=10.0, t=999.5)
+    alerts = mon.evaluate()
+    assert [(a.slo, a.key) for a in alerts] == [("deadline_miss", "t0")]
+    assert alerts[0].burn_fast >= 1.0 and alerts[0].burn_slow >= 1.0
+
+
+def test_alert_rising_edge_recorded_once():
+    slo = obs_health.SLO(
+        "deadline_miss", objective=0.9,
+        fast_window_s=10.0, slow_window_s=10.0, min_events=1,
+    )
+    rec = obs_events.FlightRecorder()
+    mon, now = _clocked_monitor(slo, recorder=rec)
+    mon.observe("deadline_miss", key="a", bad=5.0, t=999.0)
+    assert len(mon.evaluate()) == 1
+    assert len(mon.evaluate()) == 1  # still firing...
+    assert rec.counts().get("slo_alert") == 1  # ...recorded once
+    # window expires -> alert clears -> next breach is a new rising edge
+    now["t"] = 2000.0
+    assert mon.evaluate() == []
+    mon.observe("deadline_miss", key="a", bad=5.0, t=1999.0)
+    assert len(mon.evaluate()) == 1
+    assert rec.counts().get("slo_alert") == 2
+
+
+def test_min_events_gates_sparse_series():
+    slo = obs_health.SLO(
+        "deadline_miss", objective=0.99,
+        fast_window_s=10.0, slow_window_s=10.0, min_events=5,
+    )
+    mon, _ = _clocked_monitor(slo)
+    mon.observe("deadline_miss", key="a", bad=1.0, t=999.0)
+    assert mon.evaluate() == []  # 1 event < min_events: no data, no alert
+
+
+def test_observe_unknown_slo_raises():
+    mon, _ = _clocked_monitor(obs_health.SLO("deadline_miss"))
+    with pytest.raises(KeyError):
+        mon.observe("nope", bad=1.0)
+
+
+def test_ingest_diffs_cumulative_engine_snapshots():
+    slo = obs_health.SLO(
+        "cache_hit", objective=0.5,
+        fast_window_s=10.0, slow_window_s=10.0, min_events=1,
+    )
+    mon, now = _clocked_monitor(slo)
+    mon.ingest(engine={"hits": 0, "misses": 2, "dispatches": 2})
+    assert len(mon.evaluate()) == 1  # 0/2 hit rate burns the 50% budget
+    # counters advance: 8 more hits, 0 more misses -> healthy increment
+    now["t"] = 1005.0
+    mon.ingest(engine={"hits": 8, "misses": 2, "dispatches": 10})
+    # fast window now holds 8 good / 2 bad -> error rate 0.2 < 0.5
+    assert mon.evaluate() == []
+    # telemetry reset (counter goes backwards) re-bases instead of
+    # producing a negative increment
+    now["t"] = 1009.0
+    mon.ingest(engine={"hits": 1, "misses": 0, "dispatches": 1})
+    assert mon.evaluate() == []
+
+
+def test_healthz_payload_shape():
+    mon, _ = _clocked_monitor(obs_health.SLO("deadline_miss"))
+    hz = mon.healthz()
+    assert hz["status"] == "ok"
+    assert hz["alerts"] == [] and hz["stragglers"] == []
+    assert "deadline_miss" in hz["slos"]
+
+
+# ------------------------------------------------- link straggler detector
+
+
+def test_link_detector_flags_peer_relative():
+    rec = obs_events.FlightRecorder()
+    det = obs_health.LinkStragglerDetector(
+        min_samples=2, report_after=3, threshold=2.0, recorder=rec
+    )
+    reported = []
+    det.on_report(reported.append)
+    verdict = {}
+    for _ in range(6):
+        det.observe(0, 0, 1, 100.0)
+        det.observe(0, 1, 2, 110.0)
+        verdict = det.observe(0, 2, 0, 900.0)
+    assert verdict["flagged"] and verdict["report"]
+    assert verdict["peer_us"] == pytest.approx(105.0)
+    top = det.straggler()
+    assert (top["axis"], top["src"], top["dst"]) == (0, 2, 0)
+    assert len(det.reports()) == 1
+    # report fired exactly once (rising edge), into callbacks + recorder
+    assert len(reported) == 1
+    assert rec.counts().get("straggler_link") == 1
+    prom = obs_metrics.render_prometheus()
+    assert "repro_link_straggler_reports_total" in prom
+
+
+def test_link_detector_no_flag_without_same_axis_peer():
+    """A lone link (or peers on another axis) has no baseline: never flag."""
+    det = obs_health.LinkStragglerDetector(min_samples=1, report_after=1)
+    for _ in range(5):
+        v = det.observe(0, 0, 1, 5000.0)
+        det.observe(1, 0, 1, 10.0)  # other axis: not a peer
+    assert not v["flagged"] and det.reports() == []
+
+
+def test_link_detector_uniform_slowness_flags_nothing():
+    """A globally slow round moves every link: peer-relative stays quiet."""
+    det = obs_health.LinkStragglerDetector(min_samples=2, report_after=2)
+    for _ in range(6):
+        for (a, s, d) in [(0, 0, 1), (0, 1, 2), (0, 2, 0)]:
+            v = det.observe(a, s, d, 5000.0)
+    assert not v["flagged"] and det.reports() == []
+
+
+def test_link_detector_consecutive_resets_on_recovery():
+    det = obs_health.LinkStragglerDetector(
+        min_samples=1, report_after=3, threshold=2.0, alpha=1.0
+    )
+    for _ in range(3):
+        det.observe(0, 0, 1, 100.0)
+        det.observe(0, 1, 0, 100.0)
+    det.observe(0, 0, 1, 900.0)   # flag 1
+    det.observe(0, 0, 1, 900.0)   # flag 2
+    det.observe(0, 0, 1, 100.0)   # recovered: consecutive resets
+    det.observe(0, 0, 1, 900.0)   # flag 1 again — never hits 3
+    assert det.reports() == []
+
+
+def test_link_detector_observe_spans():
+    det = obs_health.LinkStragglerDetector(min_samples=1, report_after=1)
+    tracer = obs_tracing.Tracer()
+    with tracer.span("plan.round:0", "round"):
+        with tracer.span("plan.link:L0:0->1", "link", axis=0, src=0, dst=1):
+            pass
+    n = det.observe_spans(tracer.spans())
+    assert n == 1  # round span skipped, link span consumed
+    assert det.summary()[0]["samples"] == 1
+
+
+def test_link_injector_table():
+    inj = obs_health.LinkDelayInjector({(1, 0, 1): 0.25})
+    assert inj.delay(1, 0, 1) == 0.25
+    assert inj.delay(0, 0, 1) == 0.0
+    inj.set_delay(0, 1, 0, 0.5)
+    assert inj.delay(0, 1, 0) == 0.5
+
+
+def test_link_probe_dispatch_bitwise_and_spans():
+    """The per-link probe decomposition must be bitwise-invisible and emit
+    link spans parented to round spans."""
+    eng = OffloadEngine()
+    desc = eng.make_descriptor(
+        "scan", axes=AXES, payload_bytes=N * 4, op="sum", optimize=True
+    )
+    x = _x()
+    baseline = np.asarray(eng.offload(desc, x))
+    det = obs_health.LinkStragglerDetector()
+    tracer = obs_tracing.Tracer(link_probe=True, link_detector=det)
+    with obs_tracing.tracing(tracer):
+        probed = np.asarray(eng.offload(desc, x))
+    assert np.array_equal(probed, baseline)
+    spans = tracer.spans()
+    links = [s for s in spans if s.cat == "link"]
+    rounds = {s.span_id for s in spans if s.cat == "round"}
+    assert links and all(s.parent_id in rounds for s in links)
+    assert all(
+        {"axis", "src", "dst", "round"} <= set(s.args) for s in links
+    )
+    assert sum(r["samples"] for r in det.summary()) == len(links)
+
+
+# ------------------------------------------------------------- dashboard
+
+
+def test_render_dashboard_sections():
+    eng = OffloadEngine()
+    desc = eng.make_descriptor(
+        "scan", axes=AXES, payload_bytes=N * 4, op="sum", optimize=True
+    )
+    eng.offload(desc, _x())
+    mon = obs_health.HealthMonitor()
+    text = obs_dashboard.render_dashboard(engine=eng, monitor=mon)
+    assert "engine" in text and "dispatches 1" in text
+    assert "health: OK" in text
+    assert "flight recorder" in text
+    assert "dispatch" in text  # the dispatch event tail line
+
+
+def test_http_endpoints_serve_health_metrics_events():
+    rec = obs_events.get_recorder()
+    rec.record("dispatch", coll="SCAN", cache="hit")
+    mon, _ = _clocked_monitor(
+        obs_health.SLO(
+            "deadline_miss", objective=0.9,
+            fast_window_s=10.0, slow_window_s=10.0,
+        )
+    )
+    obs_metrics.get_registry().counter("repro_probe_total", "probe").inc()
+
+    def get(path):
+        req = urllib.request.Request(url + path)
+        try:
+            with urllib.request.urlopen(req, timeout=10) as r:
+                return r.status, r.read().decode()
+        except urllib.error.HTTPError as e:
+            return e.code, e.read().decode()
+
+    with obs_dashboard.start_http_server(monitor=mon, recorder=rec) as srv:
+        url = srv.url
+        status, body = get("/healthz")
+        assert status == 200 and json.loads(body)["status"] == "ok"
+        status, body = get("/metrics")
+        assert status == 200 and "repro_probe_total" in body
+        status, body = get("/events?kind=dispatch&limit=5")
+        payload = json.loads(body)
+        assert status == 200
+        assert payload["events"][0]["coll"] == "SCAN"
+        status, body = get("/dashboard")
+        assert status == 200 and "flight recorder" in body
+        status, _ = get("/nope")
+        assert status == 404
+        # an SLO breach flips /healthz to 503 for load-balancer probes
+        mon.observe("deadline_miss", key="a", bad=5.0, t=999.0)
+        status, body = get("/healthz")
+        assert status == 503 and json.loads(body)["status"] == "alert"
+
+
+# ----------------------------------------------- broker deadline events
+
+
+def test_broker_deadline_miss_flight_event_and_counter():
+    rec = obs_events.FlightRecorder()
+    prev = obs_events.set_recorder(rec)
+    try:
+        broker = DescriptorBroker(OffloadEngine()).start()
+        try:
+            client = broker.client("slowpoke")
+            desc = broker.make_descriptor(
+                "SCAN", p=P, payload_bytes=N * 4, op="sum"
+            )
+            client.submit(desc, _x(), deadline_s=1e-6).result(timeout=60.0)
+        finally:
+            broker.stop()
+    finally:
+        obs_events.set_recorder(prev)
+    misses = rec.events(kind="deadline_miss")
+    assert len(misses) == 1
+    m = misses[0]
+    assert m["tenant"] == "slowpoke" and m["group"] == 1
+    assert m["queue_wait_s"] >= 0.0 and m["overrun_s"] > 0.0
+    assert rec.counts().get("flush", 0) >= 1
+    prom = obs_metrics.render_prometheus()
+    assert 'repro_service_deadline_misses_total{tenant="slowpoke"} 1' in prom
+
+
+# ------------------------------------------- step straggler ring + events
+
+
+def test_step_straggler_events_bounded_and_recorded():
+    rec = obs_events.FlightRecorder()
+    prev = obs_events.set_recorder(rec)
+    try:
+        det = StragglerDetector(
+            threshold=2.0, evict_after=3, warmup=1, max_events=4
+        )
+        for step in range(5):
+            verdict = det.observe(step, 0.1)
+        assert set(verdict) == {"flagged", "evict", "ewma"}  # contract
+        for step in range(5, 15):
+            verdict = det.observe(step, 10.0)  # every step flags
+        assert verdict["flagged"] and verdict["evict"]
+        assert len(det.events) == 4  # bounded ring, newest kept
+        assert det.events[-1]["step"] == 14
+    finally:
+        obs_events.set_recorder(prev)
+    assert rec.counts().get("straggler_flag", 0) == 10
+    assert rec.counts().get("straggler_evict", 0) == 1  # rising edge only
+
+
+# ------------------------------------------------------------- CI module
+
+
+def test_health_check_module(subprocess_runner):
+    out = subprocess_runner("repro.testing.health_check", "2", "2")
+    assert (
+        "health_check_summary,bitwise_equal,1,straggler_axis,1,"
+        "straggler_src,0,straggler_dst,1,attribution_ok,1,slo_alert,1,"
+        "dump_valid,1" in out
+    )

@@ -1,8 +1,12 @@
 """Observability tests: span-tree invariants from a traced dispatch,
-traced-vs-jitted bitwise identity, Perfetto export round-trip and
-host+device merge alignment, the Prometheus exposition format, profiler
-fallback accounting, latency-histogram edge cases (including a threaded
-stress test), broker request spans, and the obs_check CI module."""
+traced-vs-jitted bitwise identity, Perfetto export round-trip (including
+the empty span list) and host+device merge alignment plus its degrade
+paths (missing/truncated/malformed device traces must record a reason,
+never raise), the Prometheus exposition format and label escaping,
+profiler fallback accounting, latency-histogram edge cases (including a
+threaded stress test), broker request spans, and the obs_check CI
+module. The health stack (flight recorder, SLOs, link attribution) is
+covered by tests/test_health.py."""
 
 import threading
 
@@ -220,6 +224,59 @@ def test_merge_without_common_event_keeps_device_clock():
     assert merged["deviceEventsMerged"] == 1
 
 
+def test_chrome_round_trip_empty_span_list():
+    """Zero spans is a valid trace: metadata only out, zero spans back."""
+    trace = obs_export.spans_to_chrome(())
+    assert all(e["ph"] == "M" for e in trace["traceEvents"])
+    assert obs_export.chrome_to_spans(trace) == []
+
+
+def test_merge_missing_device_trace_degrades(tmp_path):
+    """A nonexistent device-trace path must not raise: the merged result
+    is the host trace with the failure reason recorded, and the degrade
+    lands in the flight recorder as a profiler_fallback event."""
+    from repro.obs import events as obs_events
+
+    rec = obs_events.FlightRecorder()
+    prev = obs_events.set_recorder(rec)
+    try:
+        host = obs_export.spans_to_chrome(())
+        merged = obs_export.merge_device_trace(
+            host, tmp_path / "never_written.json.gz"
+        )
+    finally:
+        obs_events.set_recorder(prev)
+    assert merged["deviceEventsMerged"] == 0
+    assert merged["deviceClockAligned"] is False
+    assert "unreadable" in merged["deviceMergeError"]
+    assert len(host["traceEvents"]) == len(merged["traceEvents"])
+    falls = rec.events(kind="profiler_fallback")
+    assert falls and falls[0]["reason"] == "merge_unreadable_trace"
+
+
+def test_merge_unparseable_device_trace_degrades(tmp_path):
+    """Truncated JSON (the profiler died mid-write) degrades with a
+    recorded reason instead of taking down the host-trace export."""
+    bad = tmp_path / "truncated.json"
+    bad.write_text('{"traceEvents": [{"ph": "X", "name": "XlaModule')
+    host = obs_export.spans_to_chrome(())
+    merged = obs_export.merge_device_trace(host, bad)
+    assert merged["deviceEventsMerged"] == 0
+    assert "unreadable" in merged["deviceMergeError"]
+
+
+def test_merge_non_object_device_trace_degrades(tmp_path):
+    """Valid JSON of the wrong shape (a list) is malformed, not a crash."""
+    bad = tmp_path / "list.json"
+    bad.write_text('[{"ph": "X"}]')
+    merged = obs_export.merge_device_trace(
+        obs_export.spans_to_chrome(()), bad
+    )
+    assert merged["deviceEventsMerged"] == 0
+    assert "malformed" in merged["deviceMergeError"]
+    assert "list" in merged["deviceMergeError"]
+
+
 def test_write_trace_and_load(tmp_path):
     _, _, _, _, spans = _traced_scan_spans()
     out = tmp_path / "trace.json"
@@ -255,6 +312,22 @@ def test_prometheus_exposition_format():
     assert 'repro_test_us_bucket{le="+Inf"} 3' in text
     assert "repro_test_us_sum 105.5" in text
     assert "repro_test_us_count 3" in text
+
+
+def test_prometheus_label_escaping():
+    """Backslash, quote, and newline in a label value must arrive escaped
+    per the exposition format — a tenant named "a\\b" or containing a
+    newline must not corrupt the scrape."""
+    reg = obs_metrics.MetricsRegistry()
+    c = reg.counter("repro_esc_total", "escapes", labelnames=("tenant",))
+    c.inc(tenant='quo"te')
+    c.inc(tenant="back\\slash")
+    c.inc(tenant="new\nline")
+    text = reg.render()
+    assert 'repro_esc_total{tenant="quo\\"te"} 1' in text
+    assert 'repro_esc_total{tenant="back\\\\slash"} 1' in text
+    assert 'repro_esc_total{tenant="new\\nline"} 1' in text
+    assert "\nline" not in text.replace("\\n", "")  # no raw newline leaked
 
 
 def test_registry_get_or_create_conflicts():
