@@ -23,6 +23,14 @@ then runs this check on the (baseline, fresh) pairs. Three failure modes:
      flight-recorder dispatch overhead — both the measured A/B delta and
      the derived per-event fraction — at or under ``--max-obs-overhead``
      (default 2%). "Always-on" telemetry earns that adjective here.
+  5. **Reliability overhead** — ``BENCH_reliability.json``
+     (``--baseline-reliability`` / ``--reliability``, from
+     ``benchmarks.reliability_overhead``) must keep the reliable-dispatch
+     happy path — two payload checksums + retry/breaker bookkeeping —
+     at or under ``--max-reliability-overhead`` (default 2%) of the
+     cached dispatch path, both as the measured A/B delta and as the
+     derived cost fraction. The run must also stay retry-free: a retry
+     during the benchmark means the happy path wasn't the thing measured.
 
 Missing, non-JSON, or truncated reports (a row dropped mid-object, a
 section replaced by the wrong type) fail the gate with a message naming
@@ -313,6 +321,68 @@ def check_obs(
     )
 
 
+def check_reliability(
+    base: Dict,
+    new: Dict,
+    max_overhead: float,
+    *,
+    base_name: str = "baseline reliability",
+    new_name: str = "fresh reliability",
+) -> None:
+    """Reliable-dispatch overhead gate (see
+    ``benchmarks.reliability_overhead``).
+
+    Both overhead figures must stay at or under ``max_overhead``: the
+    measured A/B delta (reliability-on vs reliability-off through the
+    same broker, best-of-trials — catches systemic slowdowns like the
+    buffer-retention cycle this gate was built after) and the derived
+    analytic fraction (2 x cold-cache checksum + dispatcher bookkeeping
+    over the dispatch time — catches a checksum regression regardless of
+    wall-clock noise). A benchmark run that took retries or degrades
+    fails too: it measured the recovery path, not the happy path.
+    """
+    for section in ("dispatch", "checksum", "bookkeeping"):
+        if section in base and section not in new:
+            _fail(
+                f"reliability report lost its {section!r} section "
+                f"({new_name})"
+            )
+    d = new.get("dispatch")
+    if not isinstance(d, dict):
+        if "dispatch" not in base:
+            _fail(f"reliability report {new_name} has no dispatch section")
+        return
+    measured = float(d.get("overhead_frac", 0.0))
+    derived = float(d.get("derived_frac", 0.0))
+    ok = True
+    if measured > max_overhead:
+        ok = False
+        _fail(
+            f"reliable-dispatch overhead {measured:.4f} exceeds "
+            f"{max_overhead} (reliability-on vs reliability-off)"
+        )
+    if derived > max_overhead:
+        ok = False
+        _fail(
+            f"reliable-dispatch derived overhead {derived:.4f} exceeds "
+            f"{max_overhead} (2 x checksum + bookkeeping / dispatch)"
+        )
+    if d.get("retries", 0) or d.get("degrades", 0):
+        ok = False
+        _fail(
+            f"reliability benchmark was not a happy-path run: "
+            f"{d.get('retries', 0)} retries, {d.get('degrades', 0)} "
+            f"degrades during the A/B measurement"
+        )
+    chk = new.get("checksum") or {}
+    print(
+        f"regression_check,reliability,dispatch,"
+        f"overhead_frac,{measured:.4f},derived_frac,{derived:.4f},"
+        f"checksum_us,{float(chk.get('per_call_us', 0.0)):.1f},"
+        f"max,{max_overhead},ok,{int(ok)}"
+    )
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline-fusion", help="committed BENCH_fusion.json")
@@ -327,6 +397,17 @@ def main(argv: Optional[List[str]] = None) -> int:
         "(default 0.02)",
     )
     ap.add_argument(
+        "--baseline-reliability", help="committed BENCH_reliability.json"
+    )
+    ap.add_argument(
+        "--reliability", help="freshly written BENCH_reliability.json"
+    )
+    ap.add_argument(
+        "--max-reliability-overhead", type=float, default=0.02,
+        help="fail when the reliable-dispatch happy path exceeds this "
+        "fraction of the raw dispatch path (default 0.02)",
+    )
+    ap.add_argument(
         "--max-drift", type=float, default=2.0,
         help="fail when a latency grows past this factor (default 2.0)",
     )
@@ -336,10 +417,10 @@ def main(argv: Optional[List[str]] = None) -> int:
     )
     args = ap.parse_args(argv)
     if not (args.baseline_fusion or args.baseline_service
-            or args.baseline_obs):
+            or args.baseline_obs or args.baseline_reliability):
         ap.error(
             "nothing to check; pass --baseline-fusion/--baseline-service/"
-            "--baseline-obs"
+            "--baseline-obs/--baseline-reliability"
         )
     if args.baseline_fusion:
         base = _load(args.baseline_fusion)
@@ -368,6 +449,15 @@ def main(argv: Optional[List[str]] = None) -> int:
             check_obs(
                 base, new, args.max_obs_overhead,
                 base_name=args.baseline_obs, new_name=new_path,
+            )
+    if args.baseline_reliability:
+        base = _load(args.baseline_reliability)
+        new_path = args.reliability or args.baseline_reliability
+        new = _load(new_path)
+        if base is not None and new is not None:
+            check_reliability(
+                base, new, args.max_reliability_overhead,
+                base_name=args.baseline_reliability, new_name=new_path,
             )
     print(
         f"check_regression_summary,ok,{int(not _FAILED)},"

@@ -37,14 +37,24 @@
 # exactly that (axis, src, dst) by the per-link straggler detector, a
 # deadline-miss SLO burn-rate alert fires, every probed/driver dispatch
 # stays bitwise-identical to the sim baseline, and the flight-recorder
-# dump is valid JSON. benchmarks.obs_overhead then measures the
-# flight-recorder cost on the smoke dispatch path. Finally,
-# benchmarks.check_regression diffs the freshly-written BENCH artifacts
-# against the committed baselines (snapshotted BEFORE the smoke run
-# overwrites them): lost grid rows, lost bitwise/coalesce proofs, > 2x
-# latency drift, or flight-recorder overhead past 2% fail CI. Regressions
-# in the offload/planner/service subsystems fail CI even when no unit
-# test covers them yet.
+# dump is valid JSON.
+# The chaos check (repro.testing.chaos_check) proves the reliability
+# stack on a 2x2 mesh: all five CollTypes bitwise-correct through seeded
+# 5% message drop+corrupt chaos purely via retries, a poisoned queued
+# payload quarantined by group bisection while clean neighbors complete,
+# and the circuit breaker tripping into the raw-lax reference under 100%
+# loss then recovering through a half-open probe, with /healthz tracking
+# both transitions. benchmarks.obs_overhead then measures the
+# flight-recorder cost on the smoke dispatch path, and
+# benchmarks.reliability_overhead measures the reliable-dispatch happy
+# path (checksums + retry bookkeeping) against the raw broker path.
+# Finally, benchmarks.check_regression diffs the freshly-written BENCH
+# artifacts against the committed baselines (snapshotted BEFORE the
+# smoke run overwrites them): lost grid rows, lost bitwise/coalesce
+# proofs, > 2x latency drift, flight-recorder overhead past 2%, or
+# reliability overhead past 2% fail CI. Regressions in the
+# offload/planner/service subsystems fail CI even when no unit test
+# covers them yet.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -63,6 +73,7 @@ trap 'rm -f "$SMOKE_OUT"; rm -rf "$BASE_DIR"' EXIT
 cp benchmarks/BENCH_fusion.json "$BASE_DIR/BENCH_fusion.json"
 cp benchmarks/BENCH_service.json "$BASE_DIR/BENCH_service.json"
 cp benchmarks/BENCH_obs.json "$BASE_DIR/BENCH_obs.json"
+cp benchmarks/BENCH_reliability.json "$BASE_DIR/BENCH_reliability.json"
 python -m benchmarks.run --smoke --report-json | tee "$SMOKE_OUT"
 grep -q "^planned_smoke_summary," "$SMOKE_OUT" \
   || { echo "CI FAIL: planned 3D smoke section missing"; exit 1; }
@@ -118,13 +129,27 @@ grep -q "^ALL-OK$" "$HLT_OUT" \
   || { echo "CI FAIL: health check did not pass"; exit 1; }
 
 echo
+echo "=== chaos check (retries, bisection quarantine, breaker, 2x2 mesh) ==="
+CHS_OUT="$(mktemp -t repro_chaos.XXXXXX.log)"
+trap 'rm -f "$SMOKE_OUT" "$SVC_OUT" "$PAL_OUT" "$OBS_OUT" "$HLT_OUT" "$CHS_OUT"; rm -rf "$BASE_DIR"' EXIT
+python -m repro.testing.chaos_check 2 2 | tee "$CHS_OUT"
+grep -Eq "^chaos_check_summary,bitwise_equal,1,faults,[1-9][0-9]*,retries,[1-9][0-9]*,quarantine_ok,1,breaker_ok,1,healthz_ok,1$" "$CHS_OUT" \
+  || { echo "CI FAIL: chaos check lost bitwise recovery, injected no faults, or lost quarantine/breaker/healthz behavior"; exit 1; }
+grep -q "^ALL-OK$" "$CHS_OUT" \
+  || { echo "CI FAIL: chaos check did not pass"; exit 1; }
+
+echo
 echo "=== flight-recorder overhead benchmark ==="
 python -m benchmarks.obs_overhead
 
 echo
+echo "=== reliability overhead benchmark ==="
+python -m benchmarks.reliability_overhead
+
+echo
 echo "=== benchmark regression gate (fresh BENCH vs committed baseline) ==="
 REG_OUT="$(mktemp -t repro_reg.XXXXXX.log)"
-trap 'rm -f "$SMOKE_OUT" "$SVC_OUT" "$PAL_OUT" "$OBS_OUT" "$HLT_OUT" "$REG_OUT"; rm -rf "$BASE_DIR"' EXIT
+trap 'rm -f "$SMOKE_OUT" "$SVC_OUT" "$PAL_OUT" "$OBS_OUT" "$HLT_OUT" "$CHS_OUT" "$REG_OUT"; rm -rf "$BASE_DIR"' EXIT
 python -m benchmarks.check_regression \
   --baseline-fusion "$BASE_DIR/BENCH_fusion.json" \
   --fusion benchmarks/BENCH_fusion.json \
@@ -132,6 +157,8 @@ python -m benchmarks.check_regression \
   --service benchmarks/BENCH_service.json \
   --baseline-obs "$BASE_DIR/BENCH_obs.json" \
   --obs benchmarks/BENCH_obs.json \
+  --baseline-reliability "$BASE_DIR/BENCH_reliability.json" \
+  --reliability benchmarks/BENCH_reliability.json \
   --require-per-round | tee "$REG_OUT"
 grep -q "^ALL-OK$" "$REG_OUT" \
   || { echo "CI FAIL: benchmark regression gate did not pass"; exit 1; }

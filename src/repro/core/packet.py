@@ -36,8 +36,26 @@ import dataclasses
 import enum
 import itertools
 import math
+import zlib
 
 import numpy as np
+
+
+class IntegrityError(RuntimeError):
+    """A checksummed payload or descriptor failed verification.
+
+    Raised by :func:`decode_checked` (descriptor wire words), by the
+    broker's submit-time payload checksum (``repro.offload.reliability.
+    verify_payload``), and by the chaos injector's modeled receiver CRC.
+    ``request`` optionally names the poisoned broker request
+    (``"tenant#seqno"``) when the failure is attributable to one — the
+    broker's bisection path uses it to quarantine without retrying a
+    payload that is corrupt *at rest*.
+    """
+
+    def __init__(self, message: str, *, request: "str | None" = None):
+        super().__init__(message)
+        self.request = request
 
 
 class CollType(enum.IntEnum):
@@ -322,3 +340,50 @@ class CollectiveDescriptor:
             chunks=chunks,
             backend=_WIRE_BACKENDS[backend_id],
         )
+
+
+def wire_checksum(words: np.ndarray) -> int:
+    """CRC32 over a descriptor word vector (the modeled frame FCS).
+
+    The NetFPGA's Ethernet frames carried a hardware FCS; software
+    transports that re-frame the descriptor (files, sockets, logs) lose
+    it, so :func:`encode_checked` re-appends one as a trailing uint32
+    word. Any single-bit flip over the checked words fails verification —
+    which plain ``decode`` cannot promise, since flips in fields like
+    ``comm_id`` or ``count`` decode silently into a different-but-valid
+    descriptor.
+    """
+    w = np.ascontiguousarray(np.asarray(words, dtype=np.uint32))
+    return zlib.crc32(w.tobytes()) & 0xFFFFFFFF
+
+
+def encode_checked(desc: CollectiveDescriptor) -> np.ndarray:
+    """``desc.encode()`` plus a trailing CRC32 word (see
+    :func:`wire_checksum`)."""
+    words = desc.encode()
+    return np.concatenate(
+        [words, np.asarray([wire_checksum(words)], dtype=np.uint32)]
+    )
+
+
+def decode_checked(words: np.ndarray) -> CollectiveDescriptor:
+    """Verify and strip the trailing CRC32 word, then ``decode``.
+
+    Raises :class:`IntegrityError` on checksum mismatch (corruption) and
+    ``ValueError`` on structurally invalid remainders — never returns a
+    descriptor that differs from the one originally encoded.
+    """
+    w = np.asarray(words, dtype=np.uint32)
+    if w.size < _LEGACY_WORDS + 1:
+        raise ValueError(
+            f"checked descriptor needs at least {_LEGACY_WORDS + 1} words "
+            f"(payload + CRC); got {w.size}"
+        )
+    payload, crc = w[:-1], int(w[-1])
+    expect = wire_checksum(payload)
+    if crc != expect:
+        raise IntegrityError(
+            f"descriptor wire checksum mismatch: got {crc:#010x}, "
+            f"expected {expect:#010x} over {payload.size} words"
+        )
+    return CollectiveDescriptor.decode(payload)

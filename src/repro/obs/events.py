@@ -31,6 +31,16 @@ kind                      fields
 ``straggler_link``        axis, src, dst, ewma_us, peer_us, consecutive
 ``slo_alert``             slo, key, burn_fast, burn_slow
 ``dump``                  reason, path
+``chaos_fault``           fault, axis, src, dst, msg, silent
+``integrity_fail``        request, scope ("payload"/"wire")
+``retry``                 backend, coll, attempt, error
+``degrade``               coll, frm, to, error
+``breaker_open``          backend, coll, consecutive
+``breaker_half_open``     backend, coll, consecutive
+``breaker_closed``        backend, coll, consecutive
+``breaker_skip``          backend, coll, stage, of
+``bisect``                coll, requests, error
+``quarantine``            tenant, seqno, coll, error
 ========================  ====================================================
 
 The recorder is process-global (:func:`get_recorder` /

@@ -168,6 +168,7 @@ class HealthMonitor:
         *,
         latency_target_us: float = DEFAULT_LATENCY_TARGET_US,
         link_detector: Optional["LinkStragglerDetector"] = None,
+        breaker: Optional[Any] = None,
         recorder: Optional[obs_events.FlightRecorder] = None,
         clock: Callable[[], float] = time.monotonic,
     ):
@@ -177,6 +178,10 @@ class HealthMonitor:
         }
         self.latency_target_us = float(latency_target_us)
         self.link_detector = link_detector
+        # a reliability CircuitBreaker (anything with .snapshot()); its
+        # per-(backend, coll) state rides /healthz and an open circuit
+        # flips overall status to "alert"
+        self.breaker = breaker
         self._recorder = recorder
         self._clock = clock
         # (slo, key) -> deque[(t, good, bad)]
@@ -384,15 +389,25 @@ class HealthMonitor:
         return alerts
 
     def healthz(self, t: Optional[float] = None) -> Dict[str, Any]:
-        """The ``/healthz`` payload: alert list + named stragglers."""
+        """The ``/healthz`` payload: alerts, stragglers, breaker states.
+
+        Any non-closed circuit breaker (open *or* half-open — a probing
+        backend is not healthy yet) flips the status to "alert"."""
         alerts = self.evaluate(t)
         stragglers = (
             self.link_detector.reports() if self.link_detector else []
         )
+        breakers = self.breaker.snapshot() if self.breaker else {}
+        tripped = [
+            k for k, v in breakers.items() if v.get("state") != "closed"
+        ]
         return {
-            "status": "alert" if (alerts or stragglers) else "ok",
+            "status": (
+                "alert" if (alerts or stragglers or tripped) else "ok"
+            ),
             "alerts": [a.as_dict() for a in alerts],
             "stragglers": stragglers,
+            "breakers": breakers,
             "slos": [s.name for s in self.slos()],
         }
 
@@ -558,6 +573,13 @@ class LinkDelayInjector:
     inside that link's probe span. Sleeping changes *timing only* — the
     permuted values are untouched, which is what lets the health check
     assert bitwise-identical results with the injector active.
+
+    The general fault mechanism is ``repro.runtime.chaos.ChaosInjector``,
+    which implements this exact ``delays``/``set_delay``/``delay``
+    protocol (so it drops into ``Tracer(link_injector=...)`` unchanged)
+    and adds seeded drop/duplicate/reorder/corrupt faults with rate
+    schedules. This class stays as the dependency-free delay-only table
+    (obs must not import the runtime package).
     """
 
     def __init__(self, delays: Optional[Dict[LinkKey, float]] = None):

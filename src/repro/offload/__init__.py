@@ -92,7 +92,33 @@ from repro.offload.tuning_cache import (
     load_default_table,
 )
 
+# keep this import last: reliability pulls repro.runtime (for the chaos
+# error types), whose trainer stack re-enters this package mid-init and
+# needs every name above already bound
+from repro.offload.reliability import (  # noqa: E402
+    CircuitBreaker,
+    CircuitOpenError,
+    IntegrityError,
+    ReliabilityPolicy,
+    ReliableDispatcher,
+    RetryExhaustedError,
+    RetryPolicy,
+    payload_checksum,
+    reference_collective,
+    verify_payload,
+)
+
 __all__ = [
+    "CircuitBreaker",
+    "CircuitOpenError",
+    "IntegrityError",
+    "ReliabilityPolicy",
+    "ReliableDispatcher",
+    "RetryExhaustedError",
+    "RetryPolicy",
+    "payload_checksum",
+    "reference_collective",
+    "verify_payload",
     "CHUNK_CANDIDATES",
     "COLL_KIND",
     "CollectivePlan",

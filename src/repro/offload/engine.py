@@ -113,6 +113,24 @@ _WIRE_DTYPES = {
 _WIRE_DTYPE_IDS = {jnp.dtype(v): k for k, v in _WIRE_DTYPES.items()}
 
 
+_chaos_mod = None
+
+
+def _chaos_active() -> bool:
+    """Whether a chaos-injector scope is installed.
+
+    Lazy import: ``repro.runtime`` must not load at offload import time
+    (its ``__init__`` pulls the trainer stack, which imports this
+    package); after the first call this is a module-attribute read.
+    """
+    global _chaos_mod
+    if _chaos_mod is None:
+        from repro.runtime import chaos
+
+        _chaos_mod = chaos
+    return _chaos_mod.active()
+
+
 def wire_op_name(op: WireOp) -> str:
     return _WIRE_OP_NAMES[WireOp(op)]
 
@@ -696,6 +714,13 @@ class OffloadEngine:
             key = self._planned_cache_key(
                 words, plan, axis_name, mesh, backend_fields=bfields
             )
+            if not traced and axis_name is None and mesh is None \
+                    and _chaos_active():
+                # a chaos scope must see (and be able to fail) individual
+                # messages, which jit would bake into the compiled program:
+                # route the dispatch onto the same eager interpreter — and
+                # the same cache key — the tracer uses
+                traced = True
             if traced:
                 key += b"|traced"
             self._plans.setdefault(key, plan)

@@ -926,10 +926,17 @@ def lower_sim(
         if traced:
             from repro.obs import metrics as obs_metrics
             from repro.obs import tracing as obs_tracing
+            from repro.runtime import chaos as runtime_chaos
 
             tracer = obs_tracing.get_tracer()
+            if not getattr(tracer, "enabled", False):
+                # chaos-only eager runs (no collecting tracer) skip the
+                # span plumbing entirely
+                tracer = None
+            chaos_injector = runtime_chaos.get_injector()
         else:
             tracer = None
+            chaos_injector = None
 
         if plan.coll == CollType.BARRIER:
             set_reg("x", jnp.ones(logical, jnp.float32), None)
@@ -974,6 +981,12 @@ def lower_sim(
                 continue
             p_axis = logical[ph.level]
             backend = alg.SimBackend(p_axis)
+            if chaos_injector is not None:
+                # innermost wrapper: link-probed single-pair permutes and
+                # traced rounds both see per-message chaos decisions
+                backend = runtime_chaos.ChaosBackend(
+                    backend, chaos_injector, level=ph.level
+                )
             if tracer is not None:
                 if getattr(tracer, "link_probe", False):
                     # per-link attribution: decompose each round's permute

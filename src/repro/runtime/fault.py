@@ -28,7 +28,11 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, List, Optional, Tuple
 
+import numpy as np
+
+from repro.core.packet import IntegrityError
 from repro.obs import events as obs_events
+from repro.runtime.chaos import TransportError
 
 RemeshListener = Callable[[Tuple[int, ...], Tuple[int, ...]], None]
 
@@ -124,35 +128,91 @@ _NON_FAILURE_CODES = (
     "OUT_OF_RANGE",
 )
 
+#: reliability-layer faults are *transport/data* problems the dispatch
+#: layer owns (retry, degrade, quarantine) — never host failures. A remesh
+#: would roll back a checkpoint to "fix" a corrupt payload. These are
+#: checked both as types and as message markers (for wrapped runtime
+#: errors that only carry the upstream error's text).
+_NON_RECOVERABLE_TYPES: Tuple[type, ...] = (IntegrityError, TransportError)
+
+_NON_RECOVERABLE_MARKERS = (
+    "IntegrityError",
+    "TransportError",
+    "RetryExhausted",
+    "CircuitOpen",
+    "checksum mismatch",
+)
+
+_REL_ERRORS: Optional[Tuple[type, ...]] = None
+
+
+def _reliability_error_types() -> Tuple[type, ...]:
+    """RetryExhaustedError/CircuitOpenError, imported lazily: fault.py
+    loads at ``repro.runtime`` init, before ``repro.offload`` may exist."""
+    global _REL_ERRORS
+    if _REL_ERRORS is None:
+        try:
+            from repro.offload.reliability import (
+                CircuitOpenError,
+                RetryExhaustedError,
+            )
+
+            _REL_ERRORS = (RetryExhaustedError, CircuitOpenError)
+        except Exception:  # pragma: no cover - partial-import window
+            return ()
+    return _REL_ERRORS
+
 
 def is_recoverable(err: BaseException) -> bool:
     """Whether the recovery loop should treat ``err`` as a host failure.
 
-    SimulatedFailure always is. A jax/XLA runtime error is, *unless* its
-    status code marks a non-transient caller problem (OOM, shape bugs, ...)
-    — shrinking the mesh and rolling back a checkpoint would mask those.
+    SimulatedFailure always is. Reliability-layer faults — IntegrityError,
+    TransportError, retry exhaustion, open circuits — never are: they are
+    per-request dispatch problems with their own handling (retry /
+    degrade / quarantine), and swallowing them as remesh triggers would
+    shrink the mesh over a corrupt payload. A jax/XLA runtime error is
+    recoverable *unless* its status code (or wrapped message) marks a
+    non-transient caller problem (OOM, shape bugs, ...) or a wrapped
+    reliability fault.
     """
     if isinstance(err, SimulatedFailure):
         return True
+    if isinstance(err, _NON_RECOVERABLE_TYPES):
+        return False
+    if isinstance(err, _reliability_error_types()):
+        return False
     if not isinstance(err, RECOVERABLE_ERRORS):
         return False
     msg = str(err)
+    if any(marker in msg for marker in _NON_RECOVERABLE_MARKERS):
+        return False
     return not any(code in msg for code in _NON_FAILURE_CODES)
 
 
 @dataclasses.dataclass
 class FailureInjector:
-    """Raises at configured step numbers (once each).
+    """Raises at configured step numbers (once each) and, optionally,
+    probabilistically per dispatch.
 
     ``lost_hosts`` stamps the raised SimulatedFailure; ``exc_factory``
-    substitutes an arbitrary exception (e.g. a JaxRuntimeError) to exercise
-    the collective-error recovery path.
+    substitutes an arbitrary exception (e.g. a JaxRuntimeError, or a
+    TransportError to exercise the dispatch layer's retry path) to
+    exercise the matching recovery path.
+
+    ``rate``/``seed`` enable the sub-step-granular mode: the reliable
+    dispatcher calls :meth:`check_dispatch` before every dispatch attempt,
+    and each call draws a deterministic seeded verdict keyed by ``(seed,
+    dispatch_index)`` — the same injector config always fails the same
+    dispatches, so chaos runs are reproducible.
     """
 
     fail_at: Tuple[int, ...] = ()
     lost_hosts: int = 1
     exc_factory: Optional[Callable[[int], BaseException]] = None
+    rate: float = 0.0
+    seed: int = 0
     _fired: set = dataclasses.field(default_factory=set)
+    _dispatches: int = 0
 
     def check(self, step: int) -> None:
         if step in self.fail_at and step not in self._fired:
@@ -160,6 +220,25 @@ class FailureInjector:
             if self.exc_factory is not None:
                 raise self.exc_factory(step)
             err = SimulatedFailure(f"injected failure at step {step}")
+            err.lost_hosts = self.lost_hosts
+            raise err
+
+    def check_dispatch(self) -> None:
+        """Probabilistic per-dispatch injection (seeded, deterministic).
+
+        Advances the dispatch counter on every call — retried attempts
+        draw fresh verdicts, exactly like real transient faults.
+        """
+        if self.rate <= 0.0:
+            return
+        n = self._dispatches
+        self._dispatches += 1
+        u = np.random.default_rng((int(self.seed), n)).random()
+        if u < self.rate:
+            obs_events.record("chaos_fault", fault="dispatch", msg=n)
+            if self.exc_factory is not None:
+                raise self.exc_factory(n)
+            err = SimulatedFailure(f"injected dispatch failure (#{n})")
             err.lost_hosts = self.lost_hosts
             raise err
 

@@ -16,6 +16,7 @@ OffloadEngine`:
 """
 
 from repro.service.broker import (
+    DEFAULT_RESULT_TIMEOUT_S,
     AdmissionError,
     BrokerStopped,
     DescriptorBroker,
@@ -39,6 +40,7 @@ from repro.service.telemetry import (
 __all__ = [
     "AdmissionError",
     "BrokerStopped",
+    "DEFAULT_RESULT_TIMEOUT_S",
     "DescriptorBroker",
     "FileTuningRegistry",
     "LATENCY_BUCKETS_US",

@@ -61,11 +61,21 @@ import numpy as np
 
 from repro.core.packet import CollType, CollectiveDescriptor
 from repro.obs import events as obs_events
+from repro.obs import metrics as obs_metrics
 from repro.obs import tracing as obs_tracing
+from repro.offload import reliability as _rel
 from repro.offload.engine import AxisSpec, OffloadEngine
 from repro.service.telemetry import ServiceTelemetry
 
 PyTree = Any
+
+#: default bound on ``ServiceTicket.result()`` — callers that don't pass a
+#: timeout must never block forever on an abandoned request (a crashed
+#: broker, a stopped flush loop); pass ``timeout=None`` explicitly to wait
+#: unboundedly
+DEFAULT_RESULT_TIMEOUT_S = 120.0
+
+_UNSET = object()
 
 
 class QueueFullError(RuntimeError):
@@ -102,7 +112,14 @@ class ServiceTicket:
     def done(self) -> bool:
         return self._event.is_set()
 
-    def result(self, timeout: Optional[float] = None) -> PyTree:
+    def result(self, timeout: Any = _UNSET) -> PyTree:
+        """Wait for the result (or raise the request's failure).
+
+        ``timeout`` defaults to :data:`DEFAULT_RESULT_TIMEOUT_S`; pass
+        ``None`` to wait forever (explicit opt-in only).
+        """
+        if timeout is _UNSET:
+            timeout = DEFAULT_RESULT_TIMEOUT_S
         if not self._event.wait(timeout):
             raise TimeoutError(
                 f"request {self.tenant}#{self.seqno} not completed within "
@@ -117,10 +134,11 @@ class _Request:
     __slots__ = (
         "tenant", "desc", "payload", "ticket", "submit_t", "flush_at",
         "deadline_at", "group_key", "submit_span_id", "submit_us",
+        "checksum",
     )
 
     def __init__(self, tenant, desc, payload, ticket, submit_t, flush_at,
-                 deadline_at):
+                 deadline_at, checksum=None):
         self.tenant = tenant
         self.desc = desc
         self.payload = payload
@@ -128,6 +146,9 @@ class _Request:
         self.submit_t = submit_t
         self.flush_at = flush_at
         self.deadline_at = deadline_at
+        # submit-time payload digest (reliability mode): verified again at
+        # dispatch so at-rest corruption is caught and quarantined
+        self.checksum = checksum
         # trace linkage: the submitting side's span id and enqueue time on
         # the tracer clock, so the dispatch thread can retroactively record
         # this request's broker.queue_wait span with the right parent
@@ -223,10 +244,25 @@ class DescriptorBroker:
         max_tenants: int = 64,
         registry: Any = None,
         coalesce_pad_pow2: bool = True,
+        reliability: "_rel.ReliabilityPolicy | bool | None" = None,
     ):
         if mesh is not None and axis_name is None:
             raise ValueError("driver mode (mesh=...) requires axis_name")
         self.engine = engine if engine is not None else OffloadEngine()
+        # the reliable dispatch path is opt-in: None keeps the historical
+        # fail-the-whole-group-once semantics byte-for-byte
+        if reliability is True:
+            reliability = _rel.ReliabilityPolicy()
+        self.reliability: Optional[_rel.ReliabilityPolicy] = (
+            reliability or None
+        )
+        self._dispatcher: Optional[_rel.ReliableDispatcher] = (
+            None
+            if self.reliability is None
+            else _rel.ReliableDispatcher.from_policy(
+                self.engine, self.reliability
+            )
+        )
         self.axis_name = axis_name
         self.mesh = mesh
         self.flush_interval_s = float(flush_interval_s)
@@ -346,6 +382,13 @@ class DescriptorBroker:
                         raise BrokerStopped("broker is shut down")
             now = time.monotonic()
             ticket = ServiceTicket(tenant, next(client._seq))
+            checksum = None
+            if (
+                self.reliability is not None
+                and self.reliability.checksums
+                and x is not None
+            ):
+                checksum = _rel.payload_checksum(x)
             req = _Request(
                 tenant,
                 desc,
@@ -354,6 +397,7 @@ class DescriptorBroker:
                 now,
                 now + self.flush_interval_s,
                 None if deadline_s is None else now + float(deadline_s),
+                checksum,
             )
             if tracer.enabled:
                 # the span covers admission + any backpressure wait; its id
@@ -523,43 +567,26 @@ class DescriptorBroker:
                     "flags: optimized and unoptimized descriptors compile "
                     "different schedules"
                 )
-            if barrier or len(reqs) == 1:
-                out = self.engine.offload(
-                    desc, reqs[0].payload,
-                    axis_name=self.axis_name, mesh=self.mesh,
-                )
-                results = [out] * len(reqs)
+            if self._dispatcher is None:
+                try:
+                    outcomes = [(reqs, self._run_group(reqs), None)]
+                except Exception as e:  # noqa: BLE001 - via tickets
+                    outcomes = [(reqs, [None] * len(reqs), e)]
             else:
-                payloads = [r.payload for r in reqs]
-                if self.coalesce_pad_pow2:
-                    width = 1 << (len(payloads) - 1).bit_length()
-                    pad = jax.tree.map(jnp.zeros_like, payloads[0])
-                    payloads += [pad] * (width - len(payloads))
-                stacked = jax.tree.map(
-                    lambda *leaves: jnp.stack(leaves, axis=1),
-                    *payloads,
-                )
-                fused = self.engine.offload(
-                    desc, stacked, axis_name=self.axis_name, mesh=self.mesh
-                )
-                results = [
-                    jax.tree.map(lambda l, i=i: l[:, i], fused)
-                    for i in range(len(reqs))
-                ]
-            err: Optional[BaseException] = None
+                outcomes = self._run_group_reliable(reqs)
         except Exception as e:  # noqa: BLE001 - reported through tickets
-            err = e
-            results = [None] * len(reqs)
+            outcomes = [(reqs, [None] * len(reqs), e)]
         finally:
             group_cm.__exit__(None, None, None)
         done_t = time.monotonic()
+        any_err = any(err is not None for _, _, err in outcomes)
         self.telemetry.record_flush(len(reqs), 1, deadline=deadline)
         obs_events.record(
             "flush",
             coll=desc.coll_type.name.lower(),
             requests=len(reqs),
             deadline=deadline,
-            error=err is not None,
+            error=any_err,
         )
         with self._cond:
             for req in reqs:
@@ -569,38 +596,156 @@ class DescriptorBroker:
                 else:
                     self._inflight.pop(req.tenant, None)
             self._cond.notify_all()
-        for req, result in zip(reqs, results):
-            missed = (
-                req.deadline_at is not None and done_t > req.deadline_at
-            )
-            if missed:
-                # the post-hoc diagnosis record: was the miss queue time
-                # (waited too long for a flush) or dispatch time (the
-                # group itself was slow)?
-                obs_events.record(
-                    "deadline_miss",
-                    tenant=req.tenant,
-                    coll=desc.coll_type.name.lower(),
-                    group=len(reqs),
-                    queue_wait_s=round(start_t - req.submit_t, 6),
-                    dispatch_s=round(done_t - start_t, 6),
-                    overrun_s=round(done_t - req.deadline_at, 6),
+        for sub, results, err in outcomes:
+            for req, result in zip(sub, results):
+                missed = (
+                    req.deadline_at is not None and done_t > req.deadline_at
                 )
-            self.telemetry.record_complete(
-                req.tenant,
-                done_t - req.submit_t,
-                error=err is not None,
-                deadline_missed=missed,
+                if missed:
+                    # the post-hoc diagnosis record: was the miss queue
+                    # time (waited too long for a flush) or dispatch time
+                    # (the group itself was slow)?
+                    obs_events.record(
+                        "deadline_miss",
+                        tenant=req.tenant,
+                        coll=desc.coll_type.name.lower(),
+                        group=len(reqs),
+                        queue_wait_s=round(start_t - req.submit_t, 6),
+                        dispatch_s=round(done_t - start_t, 6),
+                        overrun_s=round(done_t - req.deadline_at, 6),
+                    )
+                self.telemetry.record_complete(
+                    req.tenant,
+                    done_t - req.submit_t,
+                    error=err is not None,
+                    deadline_missed=missed,
+                )
+                if err is not None:
+                    req.ticket._fail(err)
+                else:
+                    req.ticket._fulfill(result)
+
+    def _run_group(self, reqs: List[_Request]) -> List[PyTree]:
+        """Dispatch one compatible group (stacked when fusable); returns
+        per-request results. In reliability mode each request's submit-time
+        checksum is re-verified first — a poisoned payload fails the whole
+        attempt with an attributed IntegrityError, which the bisection
+        driver then isolates — and the dispatch runs through the
+        ReliableDispatcher (retries/breaker/degradation) bounded by the
+        group's earliest request deadline."""
+        desc = reqs[0].desc
+        barrier = desc.coll_type == CollType.BARRIER
+        if self._dispatcher is None:
+            dispatch = lambda d, x: self.engine.offload(  # noqa: E731
+                d, x, axis_name=self.axis_name, mesh=self.mesh
             )
-            if err is not None:
-                req.ticket._fail(err)
-            else:
-                req.ticket._fulfill(result)
+        else:
+            for r in reqs:
+                if r.checksum is not None:
+                    _rel.verify_payload(
+                        r.payload, r.checksum,
+                        request=f"{r.tenant}#{r.ticket.seqno}",
+                    )
+            deadlines = [
+                r.deadline_at for r in reqs if r.deadline_at is not None
+            ]
+            deadline_at = min(deadlines) if deadlines else None
+            dispatch = lambda d, x: self._dispatcher.offload(  # noqa: E731
+                d, x, self.axis_name, self.mesh, deadline=deadline_at
+            )
+        if barrier or len(reqs) == 1:
+            out = dispatch(desc, reqs[0].payload)
+            return [out] * len(reqs)
+        payloads = [r.payload for r in reqs]
+        if self.coalesce_pad_pow2:
+            width = 1 << (len(payloads) - 1).bit_length()
+            pad = jax.tree.map(jnp.zeros_like, payloads[0])
+            payloads += [pad] * (width - len(payloads))
+        stacked = jax.tree.map(
+            lambda *leaves: jnp.stack(leaves, axis=1),
+            *payloads,
+        )
+        fused = dispatch(desc, stacked)
+        return [
+            jax.tree.map(lambda l, i=i: l[:, i], fused)
+            for i in range(len(reqs))
+        ]
+
+    def _run_group_reliable(
+        self, reqs: List[_Request]
+    ) -> List[Tuple[List[_Request], List[PyTree], Optional[BaseException]]]:
+        """Dispatch with group bisection: a failed fused dispatch splits in
+        half, so exactly the poisoned request(s) are quarantined — their
+        tickets fail with the *original* error — while clean neighbors
+        retry and complete. Returns ``(sub_requests, results, error)``
+        leaves covering ``reqs``.
+
+        Deliberately an iterative worklist, not a recursive closure: a
+        closure calling itself is a reference cycle (function ↔ cell)
+        that keeps every captured payload/result buffer alive until the
+        *cyclic* gc runs, and stalling multi-MiB device buffers like that
+        defeats the allocator's reuse on the hot path (measured as a
+        payload-scaling dispatch slowdown). Plain refcounting must be
+        able to free each sub-group's buffers the moment its outcome is
+        recorded.
+        """
+        outcomes: List[
+            Tuple[List[_Request], List[PyTree], Optional[BaseException]]
+        ] = []
+        coll = reqs[0].desc.coll_type.name.lower()
+        nreqs = len(reqs)
+        # LIFO worklist, right half pushed first → left-to-right order,
+        # same as the recursion it replaces
+        work: List[List[_Request]] = [list(reqs)]
+        while work:
+            sub = work.pop()
+            try:
+                outcomes.append((sub, self._run_group(sub), None))
+                continue
+            except Exception as e:  # noqa: BLE001 - via tickets
+                if len(sub) > 1 and self.reliability.bisect:
+                    obs_events.record(
+                        "bisect",
+                        coll=coll,
+                        requests=len(sub),
+                        error=type(e).__name__,
+                    )
+                    obs_metrics.get_registry().counter(
+                        "repro_reliability_events_total",
+                        "reliable-dispatch retries/degrades/breaker skips",
+                        labelnames=("kind",),
+                    ).inc(kind="bisect")
+                    mid = (len(sub) + 1) // 2
+                    work.append(sub[mid:])
+                    work.append(sub[:mid])
+                    continue
+                err: BaseException = e
+                if (
+                    isinstance(err, _rel.RetryExhaustedError)
+                    and err.last_error is not None
+                ):
+                    err = err.last_error
+                if nreqs > 1:
+                    obs_events.record(
+                        "quarantine",
+                        tenant=sub[0].tenant,
+                        seqno=sub[0].ticket.seqno,
+                        coll=coll,
+                        error=type(err).__name__,
+                    )
+                    obs_metrics.get_registry().counter(
+                        "repro_reliability_events_total",
+                        "reliable-dispatch retries/degrades/breaker skips",
+                        labelnames=("kind",),
+                    ).inc(kind="quarantine")
+                outcomes.append((sub, [None] * len(sub), err))
+        return outcomes
 
 
 __all__ = [
     "AdmissionError",
     "BrokerStopped",
+    "DEFAULT_RESULT_TIMEOUT_S",
     "DescriptorBroker",
     "QueueFullError",
     "ServiceClient",

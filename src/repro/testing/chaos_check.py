@@ -1,0 +1,244 @@
+"""Reliability-stack validation: chaos, checksums, bisection, breakers.
+
+Run:  python -m repro.testing.chaos_check [pod data]
+
+One seeded run (device count fixed before jax import, hence the
+subprocess pattern) exercises the dispatch reliability contract end to
+end on a pod x data mesh:
+
+  1. **Bitwise recovery under chaos** — with a seeded
+     :class:`~repro.runtime.chaos.ChaosInjector` dropping AND corrupting
+     5% of individual messages, all five CollTypes submitted through a
+     reliability-enabled :class:`~repro.service.DescriptorBroker` must
+     complete **bitwise-equal** to their fault-free dispatches, purely
+     via retries (chaos decisions advance per message, so retried
+     dispatches draw fresh ones). At least one fault must actually have
+     been injected and at least one retry taken — a clean run proves
+     nothing.
+  2. **Quarantine by bisection** — four tenants coalesce into one fused
+     group; one queued payload is corrupted *at rest* (post-submit, so
+     its submit-time checksum is stale). The drain must fail exactly the
+     poisoned ticket with an attributed
+     :class:`~repro.core.packet.IntegrityError` while the three clean
+     neighbors complete bitwise-correct, with ``bisect`` and
+     ``quarantine`` flight events recorded.
+  3. **Breaker trip, degrade, recover** — under 100% drop chaos the
+     engine stage exhausts retries; after ``failure_threshold``
+     consecutive failures the (backend, coll) breaker opens, dispatches
+     degrade to the raw-``lax`` reference (still bitwise-correct for the
+     int32 payload), and ``/healthz`` flips to "alert" naming the open
+     circuit. With chaos lifted and the (injected) clock past the
+     cooldown, a half-open probe must close the breaker and ``/healthz``
+     must return to "ok".
+
+Emits a ``chaos_check_summary`` CSV row and a final ALL-OK; exits
+nonzero on any violation. Used by scripts/ci.sh and
+tests/test_reliability.py. (The companion < 2% overhead gate lives in
+benchmarks/reliability_overhead.py + check_regression --reliability.)
+"""
+
+import os
+import sys
+
+_ARGS = [a for a in sys.argv[1:] if not a.startswith("-")]
+_AXES = (int(_ARGS[0]), int(_ARGS[1])) if len(_ARGS) >= 2 else (2, 2)
+_NDEV = _AXES[0] * _AXES[1]
+os.environ["XLA_FLAGS"] = (
+    f"--xla_force_host_platform_device_count={_NDEV} "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core.packet import (  # noqa: E402
+    CollType,
+    CollectiveDescriptor,
+    IntegrityError,
+    WireDType,
+)
+from repro.obs import events as obs_events  # noqa: E402
+from repro.obs import health as obs_health  # noqa: E402
+from repro.offload import OffloadEngine  # noqa: E402
+from repro.offload.reliability import (  # noqa: E402
+    CircuitBreaker,
+    ReliabilityPolicy,
+    ReliableDispatcher,
+    RetryPolicy,
+)
+from repro.runtime.chaos import ChaosInjector  # noqa: E402
+from repro.service import DescriptorBroker  # noqa: E402
+
+N = 64          # payload columns (int32: exact arithmetic -> bitwise gates)
+SEED = 20140409  # the paper's year+month+day; any seed must work
+CHAOS_RATE = 0.05
+
+FAILURES = 0
+
+
+def check(name: str, ok: bool) -> None:
+    global FAILURES
+    print(f"chaos {name:46s} {'OK' if ok else 'FAIL'}")
+    FAILURES += 0 if ok else 1
+
+
+def make_desc(coll: CollType) -> CollectiveDescriptor:
+    return CollectiveDescriptor(
+        comm_size=_NDEV,
+        axes=_AXES,
+        coll_type=coll,
+        count=N,
+        data_type=WireDType.INT32,
+    )
+
+
+def payload(i: int = 0):
+    return jnp.arange(_NDEV * N, dtype=jnp.int32).reshape(_NDEV, N) + i
+
+
+def main() -> None:
+    # ---- 1. five CollTypes, bitwise through 5% drop+corrupt chaos --------
+    policy = ReliabilityPolicy(
+        retry=RetryPolicy(max_attempts=40, backoff_s=1e-5, max_backoff_s=1e-3)
+    )
+    broker = DescriptorBroker(reliability=policy)
+    eng = broker.engine
+    colls = [
+        CollType.SCAN, CollType.EXSCAN, CollType.REDUCE,
+        CollType.ALLREDUCE, CollType.BARRIER,
+    ]
+    # fault-free references first (the planned jitted path; the eager
+    # chaos-path interpreter is bitwise-gated against it elsewhere)
+    refs = {
+        c: np.asarray(
+            eng.offload(make_desc(c), None if c == CollType.BARRIER
+                        else payload())
+        )
+        for c in colls
+    }
+    injector = ChaosInjector(SEED, drop=CHAOS_RATE, corrupt=CHAOS_RATE)
+    client = broker.client("chaotic")
+    bitwise_ok = True
+    with injector.scope():
+        for c in colls:
+            t = client.submit(
+                make_desc(c),
+                None if c == CollType.BARRIER else payload(),
+            )
+            broker.drain()
+            out = np.asarray(t.result(timeout=120.0))
+            same = np.array_equal(out, refs[c])
+            check(f"{c.name} bitwise under chaos", same)
+            bitwise_ok = bitwise_ok and same
+    faults = injector.faults_injected()
+    retries = broker._dispatcher.counts["retries"]
+    check("chaos actually injected faults", faults > 0)
+    check("recovery actually took retries", retries > 0)
+    bitwise_ok = bitwise_ok and faults > 0 and retries > 0
+
+    # ---- 2. a poisoned request is quarantined by bisection ---------------
+    quarantine_broker = DescriptorBroker(reliability=policy)
+    qeng = quarantine_broker.engine
+    desc = make_desc(CollType.SCAN)
+    clients = [quarantine_broker.client(f"t{i}") for i in range(4)]
+    tickets = [c.submit(desc, payload(i)) for i, c in enumerate(clients)]
+    poisoned = 2
+    bad = np.asarray(quarantine_broker._queue[poisoned].payload).copy()
+    bad[1, 5] ^= 1  # one bit, at rest, after the submit-time checksum
+    quarantine_broker._queue[poisoned].payload = jnp.asarray(bad)
+    quarantine_broker.drain()
+    quarantine_ok = True
+    for i, t in enumerate(tickets):
+        if i == poisoned:
+            try:
+                t.result(timeout=10.0)
+                ok = False
+            except IntegrityError as e:
+                ok = e.request == f"t{poisoned}#0"
+            check("poisoned ticket fails with IntegrityError", ok)
+        else:
+            out = np.asarray(t.result(timeout=10.0))
+            ok = np.array_equal(out, np.asarray(qeng.offload(desc, payload(i))))
+            check(f"clean neighbor t{i} bitwise-correct", ok)
+        quarantine_ok = quarantine_ok and ok
+    counts = obs_events.get_recorder().counts()
+    check("bisect events recorded", counts.get("bisect", 0) >= 1)
+    check("quarantine event recorded", counts.get("quarantine", 0) >= 1)
+    quarantine_ok = quarantine_ok and (
+        counts.get("bisect", 0) >= 1 and counts.get("quarantine", 0) >= 1
+    )
+
+    # ---- 3. breaker trips under sustained loss, degrades, recovers -------
+    clk = {"t": 0.0}
+    breaker = CircuitBreaker(
+        failure_threshold=3, cooldown_s=5.0, clock=lambda: clk["t"]
+    )
+    dispatcher = ReliableDispatcher(
+        OffloadEngine(),
+        retry=RetryPolicy(max_attempts=2, backoff_s=0.0),
+        breaker=breaker,
+        clock=lambda: clk["t"],
+        sleep=lambda s: None,
+    )
+    monitor = obs_health.HealthMonitor(breaker=breaker)
+    key = ("default", "scan")
+    storm = ChaosInjector(SEED + 1, drop=1.0)
+    breaker_ok = True
+    with storm.scope():
+        for _ in range(4):
+            out = np.asarray(dispatcher.offload(desc, payload()))
+            same = np.array_equal(out, refs[CollType.SCAN])
+            breaker_ok = breaker_ok and same
+    check("degraded dispatches stay bitwise-correct", breaker_ok)
+    opened = breaker.state(key) == "open"
+    check("breaker opened after consecutive failures", opened)
+    check("dispatches degraded to reference", (
+        dispatcher.counts["degrades"] >= 3
+        and dispatcher.counts["reference_dispatches"] == 4
+        and dispatcher.counts["breaker_skips"] >= 1
+    ))
+    hz = monitor.healthz()
+    healthz_alert = (
+        hz["status"] == "alert"
+        and hz["breakers"].get("default|scan", {}).get("state") == "open"
+    )
+    check("healthz reflects the open breaker", healthz_alert)
+    breaker_ok = breaker_ok and opened and healthz_alert
+
+    # chaos lifted + cooldown elapsed: half-open probe must close it
+    clk["t"] += 10.0
+    out = np.asarray(dispatcher.offload(desc, payload()))
+    recovered = (
+        np.array_equal(out, refs[CollType.SCAN])
+        and breaker.state(key) == "closed"
+    )
+    check("half-open probe closes the breaker", recovered)
+    hz = monitor.healthz()
+    healthz_ok = (
+        hz["status"] == "ok"
+        and hz["breakers"].get("default|scan", {}).get("state") == "closed"
+    )
+    check("healthz back to ok after recovery", healthz_ok)
+    breaker_ok = breaker_ok and recovered
+    counts = obs_events.get_recorder().counts()
+    check("breaker transitions recorded", (
+        counts.get("breaker_open", 0) >= 1
+        and counts.get("breaker_half_open", 0) >= 1
+        and counts.get("breaker_closed", 0) >= 1
+    ))
+
+    print(
+        f"chaos_check_summary,bitwise_equal,{int(bitwise_ok)},"
+        f"faults,{faults},retries,{retries},"
+        f"quarantine_ok,{int(quarantine_ok)},"
+        f"breaker_ok,{int(breaker_ok)},"
+        f"healthz_ok,{int(healthz_alert and healthz_ok)}"
+    )
+    if FAILURES:
+        print(f"FAILURES: {FAILURES}")
+        sys.exit(1)
+    print("ALL-OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,538 @@
+"""Reliability-stack tests: seeded message-level chaos, payload/wire
+integrity checksums, retry/backoff with deadlines, circuit breaking with
+graceful degradation, broker group-bisection quarantine, and the
+recovery-loop filtering that keeps dispatch faults from triggering a
+remesh. The end-to-end contract (all five CollTypes bitwise through
+chaos on a real mesh) lives in repro.testing.chaos_check, invoked via
+the subprocess runner at the bottom."""
+
+import os
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import CollType
+from repro.core.packet import (
+    CollectiveDescriptor,
+    IntegrityError,
+    WireDType,
+    decode_checked,
+    encode_checked,
+    wire_checksum,
+)
+from repro.offload import OffloadEngine
+from repro.offload.reliability import (
+    DEGRADABLE_ERRORS,
+    CircuitBreaker,
+    CircuitOpenError,
+    ReliabilityPolicy,
+    ReliableDispatcher,
+    RetryExhaustedError,
+    RetryPolicy,
+    _reset_full_coverage,
+    payload_checksum,
+    verify_payload,
+)
+from repro.runtime.chaos import (
+    ChaosInjector,
+    RateSchedule,
+    TransportError,
+    get_injector,
+)
+from repro.runtime.fault import FailureInjector, SimulatedFailure, is_recoverable
+from repro.service import BrokerStopped, DescriptorBroker
+from repro.service.broker import DEFAULT_RESULT_TIMEOUT_S
+
+P = 8
+N = 64
+SEED = 1234
+
+
+def _desc(engine_or_broker, coll="SCAN"):
+    # multi-axis: chaos scopes only intercept the planned (multi-round)
+    # sim path, where individual messages exist to be failed
+    return engine_or_broker.make_descriptor(
+        coll, axes=(2, 4), payload_bytes=N * 4, op="sum"
+    )
+
+
+def _payload(i=0):
+    return jnp.arange(P * N, dtype=jnp.int32).reshape(P, N) + i
+
+
+# ----------------------------------------------------------- chaos injector
+
+
+def test_chaos_decisions_are_deterministic_per_seed():
+    kw = dict(drop=0.3, corrupt=0.3, duplicate=0.2, reorder=0.2, delay=0.1)
+    a, b = ChaosInjector(SEED, **kw), ChaosInjector(SEED, **kw)
+    seq_a = [a.decide(0, s, (s + 1) % P) for s in range(200)]
+    seq_b = [b.decide(0, s, (s + 1) % P) for s in range(200)]
+    assert seq_a == seq_b
+    assert a.faults_injected() == b.faults_injected() > 0
+    c = ChaosInjector(SEED + 1, **kw)
+    seq_c = [c.decide(0, s, (s + 1) % P) for s in range(200)]
+    assert seq_c != seq_a
+
+
+def test_chaos_counter_advance_changes_decisions():
+    """A retried message draws a fresh verdict: decisions key on the
+    global message counter, so identical links eventually diverge."""
+    inj = ChaosInjector(SEED, drop=0.5)
+    decisions = [inj.decide(0, 0, 1).drop for _ in range(64)]
+    assert any(decisions) and not all(decisions)
+
+
+def test_rate_schedules():
+    burst = RateSchedule.burst(1.0, until=10)
+    assert burst(9) == 1.0 and burst(10) == 0.0
+    steps = RateSchedule.steps([(100, 0.2), (200, 0.8)])
+    assert steps(50) == 0.2 and steps(150) == 0.8 and steps(250) == 0.0
+    inj = ChaosInjector(SEED, drop=RateSchedule.burst(1.0, until=5))
+    early = [inj.decide(0, 0, 1).drop for _ in range(5)]
+    late = [inj.decide(0, 0, 1).drop for _ in range(20)]
+    assert all(early) and not any(late)
+
+
+def test_chaos_scope_installs_and_restores():
+    assert get_injector() is None
+    inj = ChaosInjector(SEED, drop=0.1)
+    with inj.scope() as active:
+        assert active is inj and get_injector() is inj
+    assert get_injector() is None
+
+
+def test_link_filter_restricts_faults():
+    inj = ChaosInjector(SEED, drop=1.0, links=[(0, 0, 1)])
+    assert inj.decide(0, 0, 1).drop
+    assert not inj.decide(0, 2, 3).any
+
+
+# ------------------------------------------- chaos + retries, end to end
+
+
+def test_dispatch_bitwise_through_chaos_via_retries():
+    eng = OffloadEngine()
+    desc = _desc(eng)
+    ref = np.asarray(eng.offload(desc, _payload()))
+    dispatcher = ReliableDispatcher(
+        eng,
+        retry=RetryPolicy(max_attempts=40, backoff_s=1e-5, max_backoff_s=1e-4),
+    )
+    inj = ChaosInjector(SEED, drop=0.05, corrupt=0.05)
+    with inj.scope():
+        out = np.asarray(dispatcher.offload(desc, _payload()))
+    assert np.array_equal(out, ref)
+    assert inj.faults_injected() > 0
+    assert dispatcher.counts["retries"] > 0
+
+
+# ------------------------------------------------------------ retry policy
+
+
+def test_retry_backoff_is_exponential_and_capped():
+    rp = RetryPolicy(backoff_s=0.01, multiplier=2.0, max_backoff_s=0.05)
+    assert [rp.backoff(a) for a in range(4)] == [0.01, 0.02, 0.04, 0.05]
+
+
+def test_retry_exhaustion_carries_last_error_and_attempts():
+    rp = RetryPolicy(max_attempts=3, backoff_s=0.0)
+    calls = []
+
+    def fn():
+        calls.append(1)
+        raise TransportError(f"boom {len(calls)}")
+
+    with pytest.raises(RetryExhaustedError) as ei:
+        rp.run(fn, sleep=lambda s: None)
+    assert len(calls) == 3 and ei.value.attempts == 3
+    assert isinstance(ei.value.last_error, TransportError)
+    assert "boom 3" in str(ei.value.last_error)
+
+
+def test_retry_succeeds_midway_and_reports_on_retry():
+    rp = RetryPolicy(max_attempts=5, backoff_s=0.0)
+    seen = []
+    state = {"n": 0}
+
+    def fn():
+        state["n"] += 1
+        if state["n"] < 3:
+            raise TransportError("flaky")
+        return "ok"
+
+    out = rp.run(fn, sleep=lambda s: None,
+                 on_retry=lambda n, e: seen.append(n))
+    assert out == "ok" and seen == [0, 1]
+
+
+def test_retry_never_sleeps_past_deadline():
+    rp = RetryPolicy(max_attempts=10, backoff_s=1.0, max_backoff_s=1.0)
+    clk = {"t": 100.0}
+    slept = []
+
+    def fn():
+        raise TransportError("always")
+
+    with pytest.raises(RetryExhaustedError) as ei:
+        rp.run(
+            fn,
+            deadline=100.5,  # first 1s backoff would cross it
+            clock=lambda: clk["t"],
+            sleep=lambda s: slept.append(s),
+        )
+    assert slept == [] and ei.value.attempts == 1
+    assert "deadline" in str(ei.value)
+
+
+def test_retry_non_retryable_propagates_immediately():
+    rp = RetryPolicy(max_attempts=5, backoff_s=0.0)
+    calls = []
+
+    def fn():
+        calls.append(1)
+        raise ValueError("caller bug")
+
+    with pytest.raises(ValueError):
+        rp.run(fn, sleep=lambda s: None)
+    assert len(calls) == 1
+
+
+# --------------------------------------------------------- circuit breaker
+
+
+def test_breaker_trips_half_opens_and_recovers():
+    clk = {"t": 0.0}
+    br = CircuitBreaker(failure_threshold=3, cooldown_s=5.0,
+                        clock=lambda: clk["t"])
+    key = ("default", "scan")
+    for _ in range(3):
+        assert br.allow(key)
+        br.record_failure(key)
+    assert br.state(key) == "open" and not br.allow(key)
+    clk["t"] = 6.0  # past cooldown: exactly one half-open probe admitted
+    assert br.allow(key)
+    assert br.state(key) == "half_open"
+    br.record_success(key)
+    assert br.state(key) == "closed" and br.allow(key)
+
+
+def test_breaker_reopens_on_failed_probe():
+    clk = {"t": 0.0}
+    br = CircuitBreaker(failure_threshold=2, cooldown_s=1.0,
+                        clock=lambda: clk["t"])
+    key = ("pallas", "scan")
+    br.record_failure(key)
+    br.record_failure(key)
+    clk["t"] = 2.0
+    assert br.allow(key)  # probe
+    br.record_failure(key)
+    assert br.state(key) == "open" and not br.allow(key)
+    assert key in br.open_keys()
+
+
+# ------------------------------------------------------ degradation ladder
+
+
+def test_strategies_ladder_strongest_first():
+    eng = OffloadEngine()
+    desc = eng.make_descriptor(
+        "scan", axes=(2, 4), payload_bytes=N * 4, op="sum", optimize=True
+    )
+    chain = ReliableDispatcher.strategies(desc)
+    labels = [label for label, _ in chain]
+    assert labels[0] != "reference" and labels[-1] == "reference"
+    assert chain[-1][1] is None
+    # the raw rung strips optimization and chunking
+    raw = dict(chain).get("raw")
+    if raw is not None:
+        assert not raw.optimized and raw.chunks == 1
+    assert ReliableDispatcher.strategies(desc, degrade=False) == [
+        (desc.backend or "default", desc)
+    ]
+
+
+def test_dispatcher_degrades_to_reference_under_total_loss():
+    eng = OffloadEngine()
+    desc = _desc(eng)
+    ref = np.asarray(eng.offload(desc, _payload()))
+    clk = {"t": 0.0}
+    br = CircuitBreaker(failure_threshold=3, cooldown_s=5.0,
+                        clock=lambda: clk["t"])
+    dispatcher = ReliableDispatcher(
+        eng,
+        retry=RetryPolicy(max_attempts=2, backoff_s=0.0),
+        breaker=br,
+        clock=lambda: clk["t"],
+        sleep=lambda s: None,
+    )
+    with ChaosInjector(SEED, drop=1.0).scope():
+        for _ in range(4):
+            out = np.asarray(dispatcher.offload(desc, _payload()))
+            assert np.array_equal(out, ref)
+    assert dispatcher.counts["reference_dispatches"] == 4
+    assert dispatcher.counts["degrades"] >= 3
+    assert br.state(("default", "scan")) == "open"
+    # chaos lifted + cooldown elapsed: the half-open probe closes it
+    clk["t"] = 10.0
+    out = np.asarray(dispatcher.offload(desc, _payload()))
+    assert np.array_equal(out, ref)
+    assert br.state(("default", "scan")) == "closed"
+
+
+def test_degradable_errors_do_not_mask_caller_bugs():
+    assert TransportError in DEGRADABLE_ERRORS
+    assert ValueError not in DEGRADABLE_ERRORS
+    assert TypeError not in DEGRADABLE_ERRORS
+
+
+def test_all_stages_open_raises_circuit_open():
+    eng = OffloadEngine()
+    desc = _desc(eng)
+    clk = {"t": 0.0}
+    br = CircuitBreaker(failure_threshold=1, cooldown_s=1e9,
+                        clock=lambda: clk["t"])
+    dispatcher = ReliableDispatcher(
+        eng, retry=RetryPolicy(max_attempts=1, backoff_s=0.0), breaker=br,
+        clock=lambda: clk["t"], sleep=lambda s: None,
+    )
+    for label, _ in ReliableDispatcher.strategies(desc):
+        br.record_failure((label, "scan"))
+    with pytest.raises(CircuitOpenError):
+        dispatcher.offload(desc, _payload())
+
+
+# --------------------------------------------------------- payload checksum
+
+
+def test_payload_checksum_deterministic_and_structure_sensitive():
+    x = _payload()
+    assert payload_checksum(x) == payload_checksum(np.asarray(x).copy())
+    assert payload_checksum(x) != payload_checksum(
+        np.asarray(x).astype(np.int64)
+    )
+    assert payload_checksum(x) != payload_checksum(
+        np.asarray(x).reshape(N, P)
+    )
+    assert payload_checksum({"a": x}) != payload_checksum([x])
+
+
+def test_payload_checksum_detects_any_single_bit_small_leaf():
+    a = np.arange(2048, dtype=np.int32)  # 8 KiB: full coverage
+    base = payload_checksum(a)
+    rng = np.random.default_rng(0)
+    for byte in rng.integers(0, a.nbytes, 32):
+        b = a.copy().view(np.uint8)
+        b[byte] ^= 1 << int(rng.integers(0, 8))
+        assert payload_checksum(b.view(np.int32)) != base
+
+
+def test_payload_checksum_detects_slice_corruption_when_sampled():
+    a = np.random.default_rng(1).integers(
+        0, 1 << 20, size=(8, 131072), dtype=np.int32
+    )  # 4 MiB: sampled coverage
+    base = payload_checksum(a)
+    nbytes = a.nbytes
+    for start in (0, 12345, nbytes // 2, nbytes - nbytes // 32 - 64):
+        # uniform-mask flip: the case a pure-xor fold provably misses
+        b = a.copy().reshape(-1).view(np.uint8)
+        b[start:start + nbytes // 32 + 64] ^= 0xFF
+        assert payload_checksum(b.view(np.int32).reshape(a.shape)) != base
+    # and on the all-zeros worst case for modular sums
+    z = np.zeros_like(a)
+    bz = z.copy().reshape(-1).view(np.uint8)
+    bz[0:nbytes // 32 + 64] ^= 0xFF
+    assert payload_checksum(bz.view(np.int32).reshape(a.shape)) != (
+        payload_checksum(z)
+    )
+
+
+def test_checksum_full_coverage_env_override():
+    a = np.random.default_rng(2).integers(
+        0, 1 << 20, size=(8, 131072), dtype=np.int32
+    )
+    b = a.copy().reshape(-1).view(np.uint8)
+    b[999_999] ^= 1  # an unsampled byte: invisible to the tiered fold
+    b = b.view(np.int32).reshape(a.shape)
+    assert payload_checksum(a) == payload_checksum(b)
+    os.environ["REPRO_CHECKSUM_FULL"] = "1"
+    _reset_full_coverage()
+    try:
+        assert payload_checksum(a) != payload_checksum(b)
+        assert payload_checksum(a) == payload_checksum(a.copy())
+    finally:
+        del os.environ["REPRO_CHECKSUM_FULL"]
+        _reset_full_coverage()
+
+
+def test_verify_payload_raises_attributed_integrity_error():
+    x = _payload()
+    chk = payload_checksum(x)
+    verify_payload(x, chk, request="t0#0")  # clean: no raise
+    bad = np.asarray(x).copy()
+    bad[3, 7] ^= 1
+    with pytest.raises(IntegrityError) as ei:
+        verify_payload(jnp.asarray(bad), chk, request="t0#0")
+    assert ei.value.request == "t0#0"
+
+
+# ------------------------------------------------- broker: bisection et al.
+
+
+def test_broker_quarantines_poisoned_request_by_bisection():
+    broker = DescriptorBroker(
+        reliability=ReliabilityPolicy(
+            retry=RetryPolicy(max_attempts=2, backoff_s=0.0)
+        )
+    )
+    desc = _desc(broker)
+    clients = [broker.client(f"t{i}") for i in range(4)]
+    tickets = [c.submit(desc, _payload(i)) for i, c in enumerate(clients)]
+    poisoned = 2
+    bad = np.asarray(broker._queue[poisoned].payload).copy()
+    bad[1, 5] ^= 1  # at rest, after the submit-time checksum
+    broker._queue[poisoned].payload = jnp.asarray(bad)
+    broker.drain()
+    for i, t in enumerate(tickets):
+        if i == poisoned:
+            with pytest.raises(IntegrityError) as ei:
+                t.result(timeout=10.0)
+            assert ei.value.request == f"t{poisoned}#0"
+        else:
+            out = np.asarray(t.result(timeout=10.0))
+            ref = np.asarray(broker.engine.offload(desc, _payload(i)))
+            assert np.array_equal(out, ref)
+
+
+def test_broker_reliability_off_has_no_dispatcher():
+    broker = DescriptorBroker()
+    assert broker.reliability is None and broker._dispatcher is None
+    broker_on = DescriptorBroker(reliability=True)
+    assert broker_on.reliability is not None
+    assert isinstance(broker_on._dispatcher, ReliableDispatcher)
+
+
+def test_ticket_result_default_timeout_is_finite():
+    assert np.isfinite(DEFAULT_RESULT_TIMEOUT_S)
+    broker = DescriptorBroker()
+    t = broker.client("t0").submit(_desc(broker), _payload())
+    # never drained: a finite wait must raise, not hang forever
+    with pytest.raises(TimeoutError):
+        t.result(timeout=0.05)
+    broker.stop(drain=False)
+    with pytest.raises(BrokerStopped):
+        t.result(timeout=1.0)
+
+
+# ------------------------------------------------- recovery-loop filtering
+
+
+def test_failure_injector_dispatch_mode_is_deterministic():
+    a = FailureInjector(rate=0.3, seed=5)
+    b = FailureInjector(rate=0.3, seed=5)
+
+    def verdicts(inj, n=50):
+        out = []
+        for _ in range(n):
+            try:
+                inj.check_dispatch()
+                out.append(False)
+            except SimulatedFailure:
+                out.append(True)
+        return out
+
+    va, vb = verdicts(a), verdicts(b)
+    assert va == vb and any(va) and not all(va)
+    assert verdicts(FailureInjector(rate=0.3, seed=6)) != va
+    assert not any(verdicts(FailureInjector(rate=0.0, seed=5)))
+
+
+def test_failure_injector_exc_factory_substitutes():
+    inj = FailureInjector(rate=1.0, seed=0,
+                          exc_factory=lambda n: TransportError(f"msg {n}"))
+    with pytest.raises(TransportError):
+        inj.check_dispatch()
+
+
+def test_is_recoverable_filters_reliability_faults():
+    assert is_recoverable(SimulatedFailure("host died"))
+    assert not is_recoverable(IntegrityError("checksum mismatch"))
+    assert not is_recoverable(TransportError("chaos drop"))
+    assert not is_recoverable(
+        RetryExhaustedError("gone", last_error=TransportError("x"),
+                            attempts=3)
+    )
+    assert not is_recoverable(CircuitOpenError("open"))
+    assert not is_recoverable(ValueError("caller bug"))
+
+
+# ----------------------------------------------------- wire-format fuzzing
+
+
+def _checked_variants():
+    base = dict(comm_size=8, coll_type=CollType.SCAN, count=N,
+                data_type=WireDType.INT32)
+    legacy = np.asarray(
+        [7, 8, int(CollType.EXSCAN), 4, 3, 5, 2, int(WireDType.INT32),
+         33, 0], dtype=np.uint32,
+    )
+    legacy_checked = np.concatenate(
+        [legacy, np.asarray([wire_checksum(legacy)], dtype=np.uint32)]
+    )
+    return {
+        11: legacy_checked,  # 10-word legacy + crc
+        16: encode_checked(CollectiveDescriptor(**base, axes=(8,))),
+        17: encode_checked(
+            CollectiveDescriptor(**base, axes=(2, 4), optimized=True)
+        ),
+        18: encode_checked(
+            CollectiveDescriptor(**base, axes=(2, 4), chunks=4)
+        ),
+    }
+
+
+def test_checked_descriptor_lengths_cover_every_wire_layout():
+    variants = _checked_variants()
+    assert sorted(variants) == [11, 16, 17, 18]  # payload 10/15/16/17 + crc
+    for words in variants.values():
+        decode_checked(words)  # clean words decode
+
+
+@pytest.mark.parametrize("nwords", sorted(_checked_variants()))
+def test_wire_fuzz_bit_flips_never_decode_silently_different(nwords):
+    """Flip every bit of every checked layout: decode_checked must either
+    raise cleanly (IntegrityError for corruption, ValueError for a
+    malformed field) or return a descriptor equal to the original —
+    never silently decode to a different-but-valid one."""
+    words = _checked_variants()[nwords]
+    original = decode_checked(words)
+    for w in range(nwords):
+        for bit in range(32):
+            fuzzed = words.copy()
+            fuzzed[w] ^= np.uint32(1 << bit)
+            try:
+                got = decode_checked(fuzzed)
+            except (IntegrityError, ValueError):
+                continue
+            assert got == original, (
+                f"word {w} bit {bit}: silent decode to a different "
+                f"descriptor"
+            )
+
+
+def test_truncated_checked_descriptor_rejected():
+    words = _checked_variants()[16]
+    with pytest.raises((IntegrityError, ValueError)):
+        decode_checked(words[:-1])
+    with pytest.raises((IntegrityError, ValueError)):
+        decode_checked(words[:5])
+
+
+# ------------------------------------------------------------- end to end
+
+
+def test_chaos_check_end_to_end(subprocess_runner):
+    out = subprocess_runner("repro.testing.chaos_check", "2", "2")
+    assert "chaos_check_summary,bitwise_equal,1," in out
+    assert "quarantine_ok,1,breaker_ok,1,healthz_ok,1" in out
